@@ -1,0 +1,39 @@
+"""Paper Fig. 13: parallel saturation — ns/RMQ as the batch size grows.
+
+Reproduced claim: the blocked engine keeps gaining throughput with batch
+size (it is parallelism-limited, not structure-limited), while O(1)-query
+structures saturate early.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_rmq, sparse_table
+
+from .common import emit, make_queries, time_fn
+
+N = 1 << 20
+BATCHES = [1 << k for k in range(6, 17, 2)]
+
+
+def run():
+    rng = np.random.default_rng(1)
+    x = rng.random(N, dtype=np.float32)
+    xj = jnp.asarray(x)
+    blk = block_rmq.build(xj, 1024)
+    st = sparse_table.build(xj)
+    q_blk = jax.jit(lambda l, r: block_rmq.query(blk, l, r)[0])
+    q_st = jax.jit(lambda l, r: sparse_table.query(st, l, r))
+    for b in BATCHES:
+        l, r = make_queries(rng, N, b, "small")
+        lj, rj = jnp.asarray(l), jnp.asarray(r)
+        for name, fn in [("RTXRMQ", q_blk), ("HRMQ-proxy", q_st)]:
+            t = time_fn(fn, lj, rj)
+            emit(f"fig13/{name}/batch={b}", t / b, f"{t/b*1e9:.1f}ns_per_rmq")
+
+
+if __name__ == "__main__":
+    run()

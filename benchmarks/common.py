@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: the paper's query-range distributions (§6.4)
+and timing helpers. CSV convention: ``name,us_per_call,derived``."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["make_queries", "time_fn", "emit"]
+
+
+def make_queries(rng, n: int, batch: int, dist: str):
+    """Large: uniform range len in [1, n]; Medium: LogNormal(log n^0.6, .3);
+    Small: LogNormal(log n^0.3, .3) — exactly the paper's three regimes."""
+    if dist == "large":
+        length = rng.integers(1, n + 1, batch)
+    else:
+        exp = 0.6 if dist == "medium" else 0.3
+        length = np.exp(rng.normal(np.log(n**exp), 0.3, batch))
+        length = np.clip(length, 1, n).astype(np.int64)
+    l = rng.integers(0, np.maximum(n - length + 1, 1), batch)
+    r = np.minimum(l + length - 1, n - 1)
+    return l.astype(np.int64), r.astype(np.int64)
+
+
+def time_fn(fn, *args, repeats: int = 5, warmup: int = 2):
+    """Median wall time of fn(*args) with block_until_ready, in seconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds*1e6:.2f},{derived}")

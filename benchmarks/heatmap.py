@@ -1,0 +1,48 @@
+"""Paper Fig. 10/11: performance heat map over (n, |l,r| range, block config).
+
+The 3-D sweep (n x range-fraction x block size) reproduces the paper's
+observation that the optimal block configuration moves with (n, range):
+small ranges favor many small blocks (partial scans dominate), large ranges
+favor fewer blocks (the O(1) interior path dominates).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import block_rmq
+
+from .common import emit, time_fn
+
+SIZES = [1 << 14, 1 << 17, 1 << 20]
+RANGE_EXP = [-12, -8, -4, -1]  # |l,r| = n * 2^y
+BLOCKS = [128, 512, 2048]
+BATCH = 1 << 13
+
+
+def run():
+    rng = np.random.default_rng(3)
+    for n in SIZES:
+        x = rng.random(n, dtype=np.float32)
+        xj = jnp.asarray(x)
+        for bs in BLOCKS:
+            if bs * 2 > n:
+                continue
+            s = block_rmq.build(xj, bs)
+            qfn = jax.jit(lambda l, r, s=s: block_rmq.query(s, l, r)[0])
+            for y in RANGE_EXP:
+                length = max(1, int(n * (2.0**y)))
+                l = rng.integers(0, n - length + 1, BATCH)
+                r = l + length - 1
+                t = time_fn(qfn, jnp.asarray(l), jnp.asarray(r))
+                emit(
+                    f"fig10/RTXRMQ/n={n}/len=n*2^{y}/bs={bs}",
+                    t / BATCH,
+                    f"{t/BATCH*1e9:.1f}ns_per_rmq",
+                )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Replaces paper Fig. 14/15 (GPU-generation / SM scaling, not measurable in
+this container): scaling of the DISTRIBUTED RMQ engine with shard count,
+measured on fake CPU devices via a subprocess sweep.
+
+Reproduced claim analogue: the blocked engine's throughput scales with
+parallel resources (paper: RT cores/SMs; here: mesh shards), because the
+query batch is embarrassingly parallel up to the two min all-reduces.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import emit
+
+_CHILD = r"""
+import time, numpy as np, jax, jax.numpy as jnp
+from repro.core import distributed
+from benchmarks.common import make_queries
+n_dev = len(jax.devices())
+mesh = jax.make_mesh((n_dev,), ("shard",), axis_types=(jax.sharding.AxisType.Auto,))
+rng = np.random.default_rng(0)
+n = 1 << 20
+x = rng.random(n, dtype=np.float32)
+with jax.set_mesh(mesh):
+    s = distributed.build_sharded(jnp.asarray(x), mesh, ("shard",), 1024)
+    qfn = distributed.make_query_fn(mesh, ("shard",))
+    l, r = make_queries(rng, n, 8192, "small")
+    lj, rj = jnp.asarray(l), jnp.asarray(r)
+    out = qfn(s, lj, rj); jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = qfn(s, lj, rj)
+    jax.block_until_ready(out)
+    print((time.perf_counter() - t0) / 5)
+"""
+
+
+def run():
+    for n_dev in [1, 2, 4, 8]:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+        env["PYTHONPATH"] = "src:."
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD], env=env, capture_output=True, text=True
+        )
+        if out.returncode != 0:
+            emit(f"fig14/shards={n_dev}", 0.0, "FAILED")
+            continue
+        t = float(out.stdout.strip().splitlines()[-1])
+        emit(f"fig14/distributed-rmq/shards={n_dev}", t / 8192, f"{t/8192*1e9:.1f}ns_per_rmq")
+
+
+if __name__ == "__main__":
+    run()

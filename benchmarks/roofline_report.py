@@ -1,0 +1,38 @@
+"""Summarize the dry-run roofline JSONs into the EXPERIMENTS.md table rows.
+
+Reads experiments/dryrun/*__full.json (written by repro.launch.dryrun) and
+prints one CSV row per (arch x shape x mesh) cell.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def run(dirname: str = "experiments/dryrun"):
+    files = sorted(
+        glob.glob(os.path.join(dirname, "*__full.json"))
+        + glob.glob(os.path.join(dirname, "*__optimized.json"))
+    )
+    if not files:
+        emit("roofline/none", 0.0, "no dryrun artifacts; run repro.launch.dryrun --all")
+        return
+    for fn in files:
+        with open(fn) as f:
+            d = json.load(f)
+        dom = d["bottleneck"]
+        t_dom = d[f"t_{dom}" if dom != "collective" else "t_collective"]
+        emit(
+            f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}",
+            float(t_dom),
+            f"bottleneck={dom};useful={d['useful_ratio']:.2f};"
+            f"temp={d.get('temp_bytes_per_dev', 0) and d['temp_bytes_per_dev']/2**30:.1f}GiB",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig12,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list: fig12,fig13,fig10,fig14,table2,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import batch_scaling, heatmap, memory_usage, mesh_scaling, roofline_report, time_per_rmq
+
+    suites = {
+        "fig12": time_per_rmq.run,
+        "fig13": batch_scaling.run,
+        "fig10": heatmap.run,
+        "table2": memory_usage.run,
+        "fig14": mesh_scaling.run,
+        "roofline": roofline_report.run,
+    }
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---")
+        fn()
+
+
+if __name__ == "__main__":
+    main()

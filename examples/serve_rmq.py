@@ -1,0 +1,25 @@
+"""End-to-end serving driver: distributed RMQ engine over a device mesh,
+serving batched queries under the paper's three range distributions.
+
+Run with multiple fake devices to exercise the collective merge:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_rmq.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    sys.argv = [sys.argv[0], "--n", str(1 << 20), "--batch", "8192",
+                "--batches", "8", "--dist", "small"]
+    serve.main()
+    sys.argv = [sys.argv[0], "--n", str(1 << 20), "--batch", "8192",
+                "--batches", "8", "--dist", "large"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: a ~100M-param qwen2-family model trained for a
+few hundred steps on the synthetic pipeline with checkpoint/restart enabled.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+(Defaults are sized for the CPU container; on a TPU pod pass
+--production-mesh via repro.launch.train instead.)
+"""
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models import model
+from repro.optim import adamw
+from repro.train import runner as runner_lib
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO)
+
+    # ~100M params: qwen2 family, 10 layers, d_model 640, vocab 50k
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b"),
+        num_layers=10, d_model=640, num_heads=10, num_kv_heads=2, head_dim=64,
+        d_ff=2560, vocab_size=50_000, remat=False, attn_kv_chunk=128,
+        dtype=jax.numpy.float32, param_dtype=jax.numpy.float32,
+        attn_shard="heads",
+    )
+    n = cfg.param_count()
+    print(f"model: {n/1e6:.1f}M params")
+
+    mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+    with jax.set_mesh(mesh):
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        step_fn, _ = make_train_step(
+            cfg, mesh, lr_fn=adamw.cosine_schedule(3e-4, 20, args.steps),
+            batch=args.batch, seq_len=args.seq_len,
+        )
+        rcfg = runner_lib.RunnerConfig(
+            total_steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=100, seed=0,
+            data_period=8,  # cycle 8 synthetic batches so the loss is learnable
+        )
+        report = runner_lib.run_training(
+            step_fn, params, opt, cfg, args.batch, args.seq_len, rcfg
+        )
+    print(
+        f"trained {report.steps_done} steps: loss {report.losses[0]:.3f} -> "
+        f"{report.losses[-1]:.3f} (restarts={report.restarts})"
+    )
+    assert report.losses[-1] < report.losses[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — RTXRMQ-TPU: batched Range Minimum Queries as a distributed JAX
+service, plus the multi-pod LM substrate it is embedded in (see README.md).
+
+Reproduction of Meneses, Navarro, Ferrada, Quezada — "Accelerating Range
+Minimum Queries with Ray Tracing Cores" (2023), adapted to TPU (DESIGN.md).
+"""
+
+__version__ = "1.0.0"

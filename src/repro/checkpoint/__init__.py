@@ -1,0 +1,5 @@
+"""repro.checkpoint — atomic/async sharded checkpoints, elastic restore."""
+
+from .store import latest_step, restore, save, wait_pending
+
+__all__ = ["latest_step", "restore", "save", "wait_pending"]

@@ -1,0 +1,23 @@
+"""repro.core — batched RMQ engines (the paper's contribution, TPU-adapted).
+
+Engines:
+  * ``block_rmq``  — RTXRMQ-TPU, paper-faithful blocked structure (pure jnp).
+  * ``repro.kernels.ops`` — the same algorithm with fused Pallas kernels.
+  * ``lane_rmq``   — beyond-paper O(1)-gather variant.
+  * ``sparse_table`` — classic doubling table (level-2 building block).
+  * ``lca``        — Cartesian-tree/Euler-tour baseline (paper's LCA).
+  * ``exhaustive`` — brute-force baseline (paper's EXHAUSTIVE).
+  * ``distributed``— mesh-sharded engine (level-3, multi-pod).
+"""
+
+from . import block_rmq, distributed, exhaustive, lane_rmq, lca, ref, sparse_table
+
+__all__ = [
+    "block_rmq",
+    "distributed",
+    "exhaustive",
+    "lane_rmq",
+    "lca",
+    "ref",
+    "sparse_table",
+]

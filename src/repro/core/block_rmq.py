@@ -1,0 +1,129 @@
+"""RTXRMQ-TPU: the paper's block-matrix RMQ, adapted to the TPU hierarchy.
+
+Paper mapping (DESIGN.md §2):
+  * Algorithm 5 (block-matrix triangle generation)  -> ``build``: the array is
+    padded and reshaped into (num_blocks, block_size); per-block leftmost
+    minima replace the per-block geometry; a sparse table over block minima
+    replaces the second-level acceleration structure.
+  * Algorithm 6 (block-matrix ray generation)       -> ``query``: each query
+    decomposes into left-partial + fully-covered-blocks + right-partial,
+    exactly the paper's Case #1 / Case #2 branching — here branch-free via
+    masking so a whole batch runs data-parallel (one lane per ray).
+  * Algorithm 3 (closest-hit payload)               -> the masked min+argmin
+    within a block: the VPU's vector min is the TPU's "intersection test".
+
+This module is the pure-jnp implementation (also the oracle for the Pallas
+kernels in ``repro.kernels``). ``repro.kernels.ops`` provides the fused
+kernel path; ``repro.core.lane_rmq`` is the beyond-paper O(1) gather variant.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sparse_table
+
+__all__ = ["BlockRMQ", "build", "query", "maxval"]
+
+
+def maxval(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+class BlockRMQ(NamedTuple):
+    """Static blocked RMQ structure (arrays only — shape carries bs/nb)."""
+
+    x_blocks: jax.Array  # (nb, bs), padded with +inf / int-max
+    bmin_val: jax.Array  # (nb,) per-block minimum value
+    bmin_gidx: jax.Array  # (nb,) int32 global index of per-block leftmost min
+    st: sparse_table.SparseTable  # doubling table over bmin_val
+
+
+def build(x: jax.Array, block_size: int) -> BlockRMQ:
+    """Preprocess ``x`` into the blocked structure (paper's preprocessing stage).
+
+    ``block_size`` plays the paper's BS role; the Eq. 2 float-precision
+    constraint becomes the VMEM/lane constraint: block_size must be a multiple
+    of 128 (TPU lane width) — enforced here.
+    """
+    if block_size % 128 != 0:
+        raise ValueError(f"block_size must be a multiple of 128, got {block_size}")
+    n = x.shape[0]
+    nb = -(-n // block_size)
+    big = maxval(x.dtype)
+    xp = jnp.pad(x, (0, nb * block_size - n), constant_values=big)
+    xb = xp.reshape(nb, block_size)
+    lidx = jnp.argmin(xb, axis=1).astype(jnp.int32)  # leftmost per block
+    bmin_val = jnp.take_along_axis(xb, lidx[:, None], axis=1)[:, 0]
+    bmin_gidx = jnp.arange(nb, dtype=jnp.int32) * block_size + lidx
+    st = sparse_table.build(bmin_val)
+    return BlockRMQ(x_blocks=xb, bmin_val=bmin_val, bmin_gidx=bmin_gidx, st=st)
+
+
+def _block_scan(xb: jax.Array, blk: jax.Array, lo: jax.Array, hi: jax.Array):
+    """Masked min+argmin of xb[blk, lo:hi+1] per query (the 'ray' primitive).
+
+    Returns (value, global_index); value == +inf when lo > hi (empty range).
+    """
+    bs = xb.shape[1]
+    big = maxval(xb.dtype)
+    rows = jnp.take(xb, blk, axis=0)  # (B, bs) gather of the candidate block
+    lanes = jnp.arange(bs, dtype=jnp.int32)[None, :]
+    inside = (lanes >= lo[:, None]) & (lanes <= hi[:, None])
+    masked = jnp.where(inside, rows, big)
+    lidx = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    val = jnp.take_along_axis(masked, lidx[:, None], axis=1)[:, 0]
+    gidx = blk * bs + lidx
+    return val, gidx
+
+
+def _pick(v1, i1, v2, i2):
+    """Merge candidates; on ties prefer candidate 1 (index-ordered => leftmost)."""
+    take1 = v1 <= v2
+    return jnp.where(take1, v1, v2), jnp.where(take1, i1, i2)
+
+
+def query(s: BlockRMQ, l: jax.Array, r: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Batched RMQ. Returns (leftmost argmin index int32, min value).
+
+    Branch-free realization of the paper's Algorithm 6: Case #1 (single
+    block) falls out of masking the right partial and the interior away.
+    """
+    bs = s.x_blocks.shape[1]
+    nb = s.x_blocks.shape[0]
+    big = maxval(s.x_blocks.dtype)
+    l = l.astype(jnp.int32)
+    r = r.astype(jnp.int32)
+
+    bl = l // bs
+    br = r // bs
+    ll = l - bl * bs
+    rl = r - br * bs
+
+    # Left partial block (covers the whole query when bl == br).
+    lend = jnp.where(bl == br, rl, bs - 1)
+    lv, li = _block_scan(s.x_blocks, bl, ll, lend)
+
+    # Right partial block, only when the query straddles blocks.
+    rv, ri = _block_scan(s.x_blocks, br, jnp.zeros_like(rl), rl)
+    rv = jnp.where(br > bl, rv, big)
+
+    # Fully covered interior blocks via the level-2 sparse table.
+    has_interior = (br - bl) >= 2
+    ilo = jnp.clip(bl + 1, 0, nb - 1)
+    ihi = jnp.clip(br - 1, 0, nb - 1)
+    ihi = jnp.maximum(ihi, ilo)  # keep the ST query well-formed when masked off
+    bi = sparse_table.query(s.st, ilo, ihi)
+    iv = jnp.where(has_interior, s.bmin_val[bi], big)
+    ii = s.bmin_gidx[bi]
+
+    # Index ranges are ordered left < interior < right, so tie-prefer in order.
+    v, i = _pick(lv, li, iv, ii)
+    v, i = _pick(v, i, rv, ri)
+    return i, v

@@ -1,0 +1,117 @@
+"""Level-3 of the hierarchy: RMQ sharded across the device mesh.
+
+The paper leaves multi-BVH distribution as future work (§7.i): "one BVH per
+cluster of blocks". On a TPU pod that is exactly block-range ownership per
+device: each device holds a contiguous chunk of the array with its own local
+blocked structure, answers the query restricted to its chunk, and the shards
+merge with two all-reduce-mins over ICI (value min, then leftmost index among
+value-matching shards — exact leftmost semantics with only min collectives).
+
+Works on any mesh: the array is sharded over *all* given axes flattened, so
+the same code runs a 16x16 pod and a (pod=2, 16, 16) multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from . import block_rmq
+from .block_rmq import BlockRMQ, maxval
+from .sparse_table import SparseTable
+
+__all__ = ["build_sharded", "make_query_fn", "pad_to_shards"]
+
+_INT_BIG = jnp.int32(2**31 - 1)
+
+
+def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
+    """Flattened linear device index across the given mesh axes."""
+    idx = jnp.int32(0)
+    for name in axis_names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def pad_to_shards(x: jax.Array, num_shards: int, block_size: int) -> jax.Array:
+    """Pad so every shard owns the same whole number of blocks."""
+    chunk = num_shards * block_size
+    n_pad = -(-x.shape[0] // chunk) * chunk
+    return jnp.pad(x, (0, n_pad - x.shape[0]), constant_values=maxval(x.dtype))
+
+
+def build_sharded(x: jax.Array, mesh: Mesh, axis_names: Sequence[str], block_size: int) -> BlockRMQ:
+    """Build per-shard blocked structures; leaves are sharded on the block dim."""
+    axis_names = tuple(axis_names)
+    num = 1
+    for a in axis_names:
+        num *= mesh.shape[a]
+    x = pad_to_shards(x, num, block_size)
+
+    def local_build(x_local):
+        return block_rmq.build(x_local[0], block_size)
+
+    out_specs = BlockRMQ(
+        x_blocks=P(axis_names),
+        bmin_val=P(axis_names),
+        bmin_gidx=P(axis_names),
+        st=SparseTable(idx=P(None, axis_names), x=P(axis_names)),
+    )
+    fn = shard_map(
+        local_build,
+        mesh=mesh,
+        in_specs=P(axis_names),
+        out_specs=out_specs,
+        check_vma=False,
+    )
+    # shard_map gives each shard x of shape (n/num,); wrap in a leading dim so
+    # the local function sees a rank-1 chunk regardless of axis grouping.
+    return fn(x.reshape(num, -1))
+
+
+def make_query_fn(mesh: Mesh, axis_names: Sequence[str]):
+    """Jitted batched distributed query: (sharded BlockRMQ, l, r) -> (idx, val)."""
+    axis_names = tuple(axis_names)
+
+    def local_query(s: BlockRMQ, l, r):
+        bs = s.x_blocks.shape[1]
+        local_n = s.x_blocks.shape[0] * bs
+        big = maxval(s.x_blocks.dtype)
+        off = _flat_axis_index(axis_names) * local_n
+
+        has = (r >= off) & (l <= off + local_n - 1)
+        ql = jnp.clip(l - off, 0, local_n - 1)
+        qr = jnp.clip(r - off, 0, local_n - 1)
+        idx, val = block_rmq.query(s, ql, qr)
+        val = jnp.where(has, val, big)
+        gidx = jnp.where(has, idx + off, _INT_BIG)
+
+        # Exact leftmost merge with two min all-reduces over ICI.
+        vmin = jax.lax.pmin(val, axis_names)
+        cand = jnp.where(val == vmin, gidx, _INT_BIG)
+        imin = jax.lax.pmin(cand, axis_names)
+        return imin, vmin
+
+    in_specs = (
+        BlockRMQ(
+            x_blocks=P(axis_names),
+            bmin_val=P(axis_names),
+            bmin_gidx=P(axis_names),
+            st=SparseTable(idx=P(None, axis_names), x=P(axis_names)),
+        ),
+        P(),  # queries replicated
+        P(),
+    )
+    fn = shard_map(
+        local_query,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)

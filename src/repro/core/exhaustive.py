@@ -1,0 +1,47 @@
+"""EXHAUSTIVE baseline (paper §6.1): one lane per query, masked scan of X.
+
+The paper's EXHAUSTIVE is one CUDA thread scanning [l, r]; the TPU-idiomatic
+equivalent is a batched masked argmin over the full array — O(n) per query but
+at full VPU throughput, used as the brute-force reference in benchmarks and as
+a second oracle in tests (it is pure jnp and jit-able, unlike ref.rmq_ref).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmq_exhaustive"]
+
+
+def _maxval(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def rmq_exhaustive(x: jax.Array, l: jax.Array, r: jax.Array, *, query_chunk: int = 256) -> jax.Array:
+    """Batched brute-force RMQ. Returns leftmost argmin indices (int32).
+
+    Chunked over queries to bound the (chunk, n) mask materialization.
+    """
+    n = x.shape[0]
+    big = _maxval(x.dtype)
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def one_chunk(lc, rc):
+        inside = (idx[None, :] >= lc[:, None]) & (idx[None, :] <= rc[:, None])
+        masked = jnp.where(inside, x[None, :], big)
+        return jnp.argmin(masked, axis=1).astype(jnp.int32)  # argmin = leftmost
+
+    b = l.shape[0]
+    if b <= query_chunk:
+        return one_chunk(l.astype(jnp.int32), r.astype(jnp.int32))
+    pad = (-b) % query_chunk
+    lp = jnp.pad(l.astype(jnp.int32), (0, pad))
+    rp = jnp.pad(r.astype(jnp.int32), (0, pad))
+    lc = lp.reshape(-1, query_chunk)
+    rc = rp.reshape(-1, query_chunk)
+    out = jax.lax.map(lambda args: one_chunk(*args), (lc, rc))
+    return out.reshape(-1)[:b]

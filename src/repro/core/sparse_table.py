@@ -1,0 +1,77 @@
+"""Sparse-table (doubling) RMQ: O(n log n) build, O(1) batched query.
+
+This is the level-2 structure of the blocked RMQ (DESIGN.md §2, Insight B):
+RTXRMQ answers the fully-covered-blocks sub-query with a second RT geometry
+over block minima; on TPU the natural O(1) analogue is the classic doubling
+table — two gathers and a select per query, fully vectorized over the batch.
+
+The table stores *indices* (int32), so queries answer argmin directly and the
+leftmost-tie convention is preserved exactly (see ``_pick_left``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SparseTable", "build", "query"]
+
+
+class SparseTable(NamedTuple):
+    """Doubling table over ``x``. ``idx[k, i]`` = leftmost argmin of x[i : i+2^k]."""
+
+    idx: jax.Array  # (K, n) int32
+    x: jax.Array  # (n,) values the table indexes into
+
+
+def _pick_left(x, a, b):
+    """Leftmost-tie argmin merge: prefer ``a`` when values tie.
+
+    Correct whenever, on ties, position ``a`` is guaranteed to be <= the
+    leftmost min (holds for both the build windows and the query overlap —
+    see the window-containment argument in DESIGN.md §2 note 4).
+    """
+    return jnp.where(x[a] <= x[b], a, b)
+
+
+def build(x: jax.Array) -> SparseTable:
+    """Build the doubling table. Python loop over K<=32 levels (n is static)."""
+    n = x.shape[0]
+    k_levels = max(1, (n - 1).bit_length() + 1) if n > 1 else 1
+    cur = jnp.arange(n, dtype=jnp.int32)
+    rows = [cur]
+    for k in range(1, k_levels):
+        h = 1 << (k - 1)
+        if h >= n:
+            rows.append(cur)
+            continue
+        shifted = jnp.concatenate([cur[h:], jnp.broadcast_to(cur[-1], (h,))])
+        cur = _pick_left(x, cur, shifted)
+        rows.append(cur)
+    return SparseTable(idx=jnp.stack(rows), x=x)
+
+
+def exact_log2(length: jax.Array) -> jax.Array:
+    """floor(log2(length)) computed exactly for int32 length >= 1.
+
+    float log2 alone can be off-by-one at powers of two; correct it with
+    integer shifts so 2^k <= length < 2^(k+1) always holds.
+    """
+    k = jnp.floor(jnp.log2(length.astype(jnp.float32))).astype(jnp.int32)
+    k = jnp.maximum(k, 0)
+    k = jnp.where(jnp.left_shift(jnp.int32(1), k) > length, k - 1, k)
+    k = jnp.where(jnp.left_shift(jnp.int32(1), k + 1) <= length, k + 1, k)
+    return k
+
+
+def query(table: SparseTable, l: jax.Array, r: jax.Array) -> jax.Array:
+    """Batched O(1) query. Returns leftmost argmin indices (int32)."""
+    l = l.astype(jnp.int32)
+    r = r.astype(jnp.int32)
+    length = r - l + 1
+    k = exact_log2(length)
+    a = table.idx[k, l]
+    b = table.idx[k, r - jnp.left_shift(jnp.int32(1), k) + 1]
+    return _pick_left(table.x, a, b)

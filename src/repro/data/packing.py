@@ -1,0 +1,70 @@
+"""RMQ-powered sequence packing — the paper's technique used *inside* the
+training framework (DESIGN.md §3).
+
+Greedy worst-fit packing of documents into fixed-length training sequences:
+for each document, find the open bin with the **most remaining space** — a
+range-MAX query, i.e. RMQ over negated free-space. Batched lookups run on
+the blocked RMQ engine; the free-space array updates in place and the
+structure is rebuilt every ``rebuild_every`` placements (the static-RMQ
+amortization the paper's §7.iii "dynamic RMQ" future work would remove).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import block_rmq
+
+__all__ = ["pack_documents"]
+
+
+def pack_documents(
+    lengths: np.ndarray,
+    seq_len: int,
+    *,
+    num_bins: int | None = None,
+    block_size: int = 128,
+    rebuild_every: int = 128,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pack documents (lengths) into bins of capacity seq_len.
+
+    Returns (bin_assignment per doc, free space per bin). Documents longer
+    than seq_len are truncated to seq_len (standard LM packing behavior).
+    """
+    lengths = np.minimum(np.asarray(lengths, np.int64), seq_len)
+    order = np.argsort(-lengths)  # first-fit-decreasing order
+    n = len(lengths)
+    if num_bins is None:
+        num_bins = max(1, int(np.ceil(lengths.sum() / seq_len * 1.3)))
+    free = np.full(num_bins, seq_len, np.int64)
+    assign = np.full(n, -1, np.int64)
+
+    # RMQ over negated free space: argmin(-free) == argmax(free).
+    structure = block_rmq.build(jnp.asarray(-free, jnp.int32), block_size)
+    dirty = 0
+
+    for d in order:
+        need = lengths[d]
+        idx, negv = block_rmq.query(
+            structure, jnp.asarray([0]), jnp.asarray([num_bins - 1])
+        )
+        b = int(idx[0])
+        # The structure may be stale (amortized rebuild); verify on the live
+        # array and fall back to an exact scan when the hint no longer fits.
+        if free[b] < need:
+            b = int(np.argmax(free))
+        if free[b] < need:  # all bins full: open fresh bins
+            free = np.concatenate([free, np.full(num_bins, seq_len, np.int64)])
+            num_bins *= 2
+            b = int(np.argmax(free))
+            structure = block_rmq.build(jnp.asarray(-free, jnp.int32), block_size)
+            dirty = 0
+        assign[d] = b
+        free[b] -= need
+        dirty += 1
+        if dirty >= rebuild_every:
+            structure = block_rmq.build(jnp.asarray(-free, jnp.int32), block_size)
+            dirty = 0
+
+    return assign, free

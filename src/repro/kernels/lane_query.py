@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused lane-RMQ query (beyond-paper O(1) engine).
+
+Fuses the per-query work of ``repro.core.lane_rmq.query`` minus the O(1)
+sparse-table interior (which stays in XLA): one grid step per query loads
+three 128-lane rows — the suffix-min row of l's lane-block, the prefix-min
+row of r's lane-block, and the raw row for the same-block case — and emits
+the merged (value, global index) candidate. On TPU each row is exactly one
+VREG, so the whole query is a handful of vector ops; scalar prefetch drives
+the data-dependent row selection (same pattern as rmq_query.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.block_rmq import maxval
+from repro.core.lane_rmq import LANE
+
+__all__ = ["lane_partials"]
+
+
+def _kernel(sl_ref, sr_ref, llo_ref, rlo_ref,
+            sv_ref, si_ref, pv_ref, pi_ref, xs_ref,
+            val_ref, idx_ref):
+    i = pl.program_id(0)
+    big = maxval(xs_ref.dtype)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, LANE), 1)
+    llo = llo_ref[i]
+    rlo = rlo_ref[i]
+    same = sl_ref[i] == sr_ref[i]
+
+    # straddling candidates: one dynamic lane pick from each min row
+    lv = sv_ref[0, llo]
+    li = si_ref[0, llo]
+    rv = pv_ref[0, rlo]
+    ri = pi_ref[0, rlo]
+    take_l = lv <= rv  # suffix candidate has smaller indices on ties
+    str_v = jnp.where(take_l, lv, rv)
+    str_i = jnp.where(take_l, li, ri)
+
+    # same-block: masked vector min over the raw row (one VREG op)
+    row = xs_ref[...]
+    masked = jnp.where((lanes >= llo) & (lanes <= rlo), row, big)
+    mv = jnp.min(masked)
+    mi = jnp.min(jnp.where(masked == mv, lanes, jnp.int32(LANE)))
+    mi = sl_ref[i] * LANE + mi
+
+    val_ref[0, 0] = jnp.where(same, mv, str_v)
+    idx_ref[0, 0] = jnp.where(same, mi, str_i)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lane_partials(
+    xs: jax.Array,  # (nsub, LANE)
+    suff_val: jax.Array, suff_idx: jax.Array,  # (nsub, LANE)
+    pref_val: jax.Array, pref_idx: jax.Array,
+    sl: jax.Array, sr: jax.Array, llo: jax.Array, rlo: jax.Array,  # (B,)
+    *,
+    interpret: bool | None = None,
+):
+    """Fused non-interior candidates. Returns (value (B,), global idx (B,))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = sl.shape[0]
+    args = [a.astype(jnp.int32) for a in (sl, sr, llo, rlo)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sl[i], 0)),  # suff_val
+            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sl[i], 0)),  # suff_idx
+            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sr[i], 0)),  # pref_val
+            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sr[i], 0)),  # pref_idx
+            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sl[i], 0)),  # xs
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
+        ],
+    )
+    val, idx = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), xs.dtype),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*args, suff_val, suff_idx, pref_val, pref_idx, xs)
+    return val[:, 0], idx[:, 0]

@@ -1,0 +1,111 @@
+"""Jit'd public wrappers: the kernelized RTXRMQ-TPU engine.
+
+``build`` / ``query`` mirror ``repro.core.block_rmq`` but route the two
+compute hot spots through the Pallas kernels (validated in interpret mode on
+CPU, compiled for TPU on real hardware). The O(1) interior sparse-table path
+stays in XLA — it is gather-bound, not compute-bound, and XLA already emits
+optimal dynamic-gathers for it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import block_rmq, sparse_table
+from repro.core.block_rmq import BlockRMQ, maxval, _pick
+
+from .block_min import block_min
+from .lane_query import lane_partials
+from .rmq_query import rmq_partials
+
+__all__ = ["build", "query", "block_min", "rmq_partials", "lane_query", "lane_partials"]
+
+
+def build(x: jax.Array, block_size: int, *, interpret: bool | None = None) -> BlockRMQ:
+    """Kernelized build: Pallas per-block minima + doubling table."""
+    if block_size % 128 != 0:
+        raise ValueError(f"block_size must be a multiple of 128, got {block_size}")
+    n = x.shape[0]
+    nb = -(-n // block_size)
+    big = maxval(x.dtype)
+    xp = jnp.pad(x, (0, nb * block_size - n), constant_values=big)
+    xb = xp.reshape(nb, block_size)
+    bmin_val, lidx = block_min(xb, interpret=interpret)
+    bmin_gidx = jnp.arange(nb, dtype=jnp.int32) * block_size + lidx
+    st = sparse_table.build(bmin_val)
+    return BlockRMQ(x_blocks=xb, bmin_val=bmin_val, bmin_gidx=bmin_gidx, st=st)
+
+
+def query(s: BlockRMQ, l: jax.Array, r: jax.Array, *, interpret: bool | None = None):
+    """Kernelized batched query. Returns (leftmost argmin idx int32, value)."""
+    bs = s.x_blocks.shape[1]
+    nb = s.x_blocks.shape[0]
+    big = maxval(s.x_blocks.dtype)
+    l = l.astype(jnp.int32)
+    r = r.astype(jnp.int32)
+
+    bl = l // bs
+    br = r // bs
+    ll = l - bl * bs
+    rl = r - br * bs
+    lend = jnp.where(bl == br, rl, bs - 1)
+
+    pv, pi = rmq_partials(s.x_blocks, bl, br, ll, lend, rl, interpret=interpret)
+
+    has_interior = (br - bl) >= 2
+    ilo = jnp.clip(bl + 1, 0, nb - 1)
+    ihi = jnp.maximum(jnp.clip(br - 1, 0, nb - 1), ilo)
+    bi = sparse_table.query(s.st, ilo, ihi)
+    iv = jnp.where(has_interior, s.bmin_val[bi], big)
+    ii = s.bmin_gidx[bi]
+
+    # Partial candidates straddle the interior in index order; exactness of
+    # the leftmost tie still holds: if the interior ties with the left
+    # partial, the left partial's indices are smaller; if it ties with the
+    # right partial, the interior's indices are smaller — and the fused
+    # kernel already resolved left-vs-right. Prefer (left|right) only when
+    # strictly smaller OR when it is the left partial (pi < interior block
+    # range start).
+    int_start = (bl + 1) * bs
+    prefer_partial = (pv < iv) | ((pv == iv) & (pi < int_start))
+    v = jnp.where(prefer_partial, pv, iv)
+    i = jnp.where(prefer_partial, pi, ii)
+    return i, v
+
+
+def lane_query(s, l: jax.Array, r: jax.Array, *, interpret: bool | None = None):
+    """Kernelized beyond-paper lane-RMQ query (mirrors core.lane_rmq.query).
+
+    The fused Pallas kernel answers the same-block case and the straddle
+    prefix/suffix candidates; the O(1) sparse-table interior stays in XLA.
+    """
+    from repro.core import lane_rmq, sparse_table
+    from repro.core.block_rmq import _pick
+
+    nsub = s.xs.shape[0]
+    big = maxval(s.xs.dtype)
+    l = l.astype(jnp.int32)
+    r = r.astype(jnp.int32)
+    sl = l // lane_rmq.LANE
+    sr = r // lane_rmq.LANE
+    llo = l - sl * lane_rmq.LANE
+    rlo = r - sr * lane_rmq.LANE
+
+    pv, pi = lane_partials(
+        s.xs, s.suff_val, s.suff_idx, s.pref_val, s.pref_idx,
+        sl, sr, llo, rlo, interpret=interpret,
+    )
+
+    has_interior = (sr - sl) >= 2
+    ilo = jnp.clip(sl + 1, 0, nsub - 1)
+    ihi = jnp.maximum(jnp.clip(sr - 1, 0, nsub - 1), ilo)
+    bi = sparse_table.query(s.st, ilo, ihi)
+    iv = jnp.where(has_interior, s.st.x[bi], big)
+    ii = s.sub_gidx[bi]
+    # same tie logic as kernels.ops.query: the interior's indices sit between
+    # the suffix and prefix candidates, so prefer the partial only when it is
+    # strictly smaller or it comes from the left (suffix) side.
+    int_start = (sl + 1) * lane_rmq.LANE
+    prefer_partial = (pv < iv) | ((pv == iv) & (pi < int_start))
+    return jnp.where(prefer_partial, pi, ii), jnp.where(prefer_partial, pv, iv)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (kernel sweeps assert against these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.block_rmq import maxval
+
+__all__ = ["block_min_ref", "rmq_partials_ref"]
+
+
+def block_min_ref(x_blocks: jax.Array):
+    """Per-block (min value, leftmost local argmin int32)."""
+    lidx = jnp.argmin(x_blocks, axis=1).astype(jnp.int32)
+    val = jnp.take_along_axis(x_blocks, lidx[:, None], axis=1)[:, 0]
+    return val, lidx
+
+
+def rmq_partials_ref(x_blocks, bl, br, lstart, lend, rend):
+    """Combined partial-block candidate per query.
+
+    Left partial  = min of x_blocks[bl, lstart:lend+1]   (always non-empty)
+    Right partial = min of x_blocks[br, 0:rend+1]        (masked off when bl==br)
+    Returns the leftmost-tie merge of both as (value, global index int32).
+    """
+    bs = x_blocks.shape[1]
+    big = maxval(x_blocks.dtype)
+    lanes = jnp.arange(bs, dtype=jnp.int32)[None, :]
+
+    rows_l = jnp.take(x_blocks, bl, axis=0)
+    ml = jnp.where((lanes >= lstart[:, None]) & (lanes <= lend[:, None]), rows_l, big)
+    li = jnp.argmin(ml, axis=1).astype(jnp.int32)
+    lv = jnp.take_along_axis(ml, li[:, None], axis=1)[:, 0]
+    lg = bl * bs + li
+
+    rows_r = jnp.take(x_blocks, br, axis=0)
+    mr = jnp.where(lanes <= rend[:, None], rows_r, big)
+    ri = jnp.argmin(mr, axis=1).astype(jnp.int32)
+    rv = jnp.take_along_axis(mr, ri[:, None], axis=1)[:, 0]
+    rv = jnp.where(br > bl, rv, big)
+    rg = br * bs + ri
+
+    take_l = lv <= rv
+    return jnp.where(take_l, lv, rv), jnp.where(take_l, lg, rg)

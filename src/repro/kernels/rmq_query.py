@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused partial-block RMQ scans (query phase, level 1).
+
+The RT-core analogue: one grid step per query ("one ray per query"), with the
+query's two candidate blocks streamed HBM->VMEM by the pipeline. Scalar
+prefetch (SMEM) carries per-query block ids so the BlockSpec index_map can
+select *data-dependent* blocks — the TPU-idiomatic replacement for the BVH
+descent picking which leaf a ray visits: instead of a pointer walk, the DMA
+engine is programmed with the block id while the previous query computes.
+
+Both partial scans (left tail, right head) are fused into one kernel so each
+query costs exactly two VMEM block loads and two masked vector mins.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.block_rmq import maxval
+
+__all__ = ["rmq_partials"]
+
+
+def _kernel(bl_ref, br_ref, ls_ref, le_ref, re_ref, xl_ref, xr_ref, val_ref, idx_ref):
+    i = pl.program_id(0)
+    bs = xl_ref.shape[1]
+    big = maxval(xl_ref.dtype)
+    big_i = jnp.int32(bs)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+
+    bl = bl_ref[i]
+    br = br_ref[i]
+
+    # Left partial: x[bl, ls:le+1] (non-empty by construction).
+    xl = xl_ref[...]
+    ml = jnp.where((lanes >= ls_ref[i]) & (lanes <= le_ref[i]), xl, big)
+    lv = jnp.min(ml)
+    li = jnp.min(jnp.where(ml == lv, lanes, big_i))
+    lg = bl * bs + li
+
+    # Right partial: x[br, 0:re+1], masked off for single-block queries.
+    xr = xr_ref[...]
+    mr = jnp.where(lanes <= re_ref[i], xr, big)
+    rv = jnp.min(mr)
+    rv = jnp.where(br > bl, rv, big)
+    ri = jnp.min(jnp.where(mr == rv, lanes, big_i))
+    rg = br * bs + ri
+
+    take_l = lv <= rv  # left candidate has smaller indices: leftmost ties
+    val_ref[0, 0] = jnp.where(take_l, lv, rv)
+    idx_ref[0, 0] = jnp.where(take_l, lg, rg)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rmq_partials(
+    x_blocks: jax.Array,
+    bl: jax.Array,
+    br: jax.Array,
+    lstart: jax.Array,
+    lend: jax.Array,
+    rend: jax.Array,
+    *,
+    interpret: bool | None = None,
+):
+    """Fused partial-block candidates. Returns (value (B,), global idx (B,))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = bl.shape[0]
+    _, bs = x_blocks.shape
+    args = [a.astype(jnp.int32) for a in (bl, br, lstart, lend, rend)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda i, bl, br, ls, le, re: (bl[i], 0)),
+            pl.BlockSpec((1, bs), lambda i, bl, br, ls, le, re: (br[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
+        ],
+    )
+    val, idx = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), x_blocks.dtype),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*args, x_blocks, x_blocks)
+    return val[:, 0], idx[:, 0]

@@ -1,0 +1,10 @@
+"""repro.launch — mesh, sharding rules, specs, dry-run, train/serve CLIs.
+
+NOTE: ``repro.launch.dryrun`` must be executed as ``python -m
+repro.launch.dryrun`` (it sets XLA_FLAGS before importing jax); it is
+deliberately NOT imported here.
+"""
+
+from . import mesh, roofline, sharding, specs
+
+__all__ = ["mesh", "roofline", "sharding", "specs"]

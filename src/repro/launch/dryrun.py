@@ -1,0 +1,267 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes and extract roofline terms. MUST be run as a module entry point
+(`python -m repro.launch.dryrun`) so the XLA_FLAGS above land before any jax
+import — do not import this module from code that already initialized jax.
+
+Roofline methodology (loop-corrected): XLA's cost_analysis counts a while
+loop's body ONCE, so a scan-over-64-layers program under-reports flops ~64x.
+We therefore compile each cell twice:
+
+  1. the PRODUCTION artifact (scan-over-layers, flash-attention scan) — this
+     is the lowering/memory/collective-schedule proof: memory_analysis() must
+     fit, and its HLO is the collective schedule we report;
+  2. COST variants with every scan unrolled, at 1 and 2 layers per layer
+     *type* (dense archs: one type; gemma3: local + global; zamba2: mamba +
+     shared-attn). Per-type cost = c(2) - c(1); the embed/head/optimizer base
+     = c(1) - delta. Totals extrapolate exactly because layers of a type are
+     homogeneous. flops/bytes/collective-bytes all extrapolate this way.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh multi --compile-only   # lowering proof
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cells, get_config
+from repro.launch import roofline as roofline_lib
+from repro.launch import sharding as shard_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs_for, model_flops
+from repro.optim.adamw import AdamWState
+
+
+def lower_step(cfg, shape_name: str, mesh, *, lr: float = 1e-4):
+    """Lower the cell's step function against ShapeDtypeStructs."""
+    shape = SHAPES[shape_name]
+    specs = input_specs_for(cfg, shape_name)
+
+    if shape.kind == "train":
+        from repro.optim import adamw
+        from repro.train.steps import make_train_step
+
+        f32 = lambda tree: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), tree
+        )
+        opt_abstract = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            master=f32(specs["params"]),
+            mu=f32(specs["params"]),
+            nu=f32(specs["params"]),
+        )
+        step, _ = make_train_step(
+            cfg, mesh,
+            lr_fn=adamw.cosine_schedule(lr, 100, 10_000),
+            batch=shape.global_batch, seq_len=shape.seq_len,
+        )
+        return step.lower(specs["params"], opt_abstract, specs["batch"])
+
+    if shape.kind == "prefill":
+        from repro.train.steps import make_prefill_step
+
+        step, _ = make_prefill_step(
+            cfg, mesh, batch=shape.global_batch, seq_len=shape.seq_len
+        )
+        return step.lower(specs["params"], specs["inputs"])
+
+    from repro.train.steps import make_serve_step
+
+    step, _ = make_serve_step(
+        cfg, mesh, batch=shape.global_batch, capacity=shape.seq_len
+    )
+    return step.lower(specs["params"], specs["token"], specs["cache"])
+
+
+# --------------------------------------------------------------------------
+# layer-type decomposition for cost extrapolation
+# --------------------------------------------------------------------------
+
+
+def _unrolled(cfg, n):
+    return dataclasses.replace(
+        cfg, num_layers=n, unroll_layers=True, attn_unroll=True, ssm_unroll=True
+    )
+
+
+def layer_types(arch: str):
+    """[(name, build_cfg(k_layers), count)] per arch (see module docstring)."""
+    cfg = get_config(arch)
+    if cfg.family == "hybrid":
+        ssm_like = dataclasses.replace(cfg, family="ssm", attn_every=0)
+        attn_like = dataclasses.replace(
+            cfg, family="dense", attn_every=0, ssm_state=0
+        )
+        n_seg = cfg.num_layers // cfg.attn_every
+        return [
+            ("mamba", lambda k: _unrolled(ssm_like, k), cfg.num_layers),
+            ("shared_attn", lambda k: _unrolled(attn_like, k), n_seg),
+        ]
+    if cfg.global_every:
+        local = dataclasses.replace(cfg, global_every=0)
+        glob = dataclasses.replace(cfg, global_every=0, sliding_window=0)
+        n_glob = cfg.num_layers // cfg.global_every
+        return [
+            ("local", lambda k: _unrolled(local, k), cfg.num_layers - n_glob),
+            ("global", lambda k: _unrolled(glob, k), n_glob),
+        ]
+    return [("layer", lambda k: _unrolled(cfg, k), cfg.num_layers)]
+
+
+def _measure(cfg, shape_name, mesh):
+    lowered = lower_step(cfg, shape_name, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = roofline_lib.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(sum(coll.values())),
+    }
+
+
+def cost_extrapolate(arch: str, shape_name: str, mesh) -> dict:
+    total = {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
+    base = None
+    detail = {}
+    for i, (name, mk, count) in enumerate(layer_types(arch)):
+        c1 = _measure(mk(1), shape_name, mesh)
+        c2 = _measure(mk(2), shape_name, mesh)
+        delta = {k: c2[k] - c1[k] for k in total}
+        detail[name] = {"per_layer": delta, "count": count}
+        if i == 0:
+            base = {k: max(c1[k] - delta[k], 0.0) for k in total}
+        for k in total:
+            total[k] += count * delta[k]
+    for k in total:
+        total[k] += base[k]
+    detail["base"] = base
+    return {"total": total, "detail": detail}
+
+
+# --------------------------------------------------------------------------
+# cell runner
+# --------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str | None,
+             *, compile_only: bool = False):
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = 512 if multi else 256
+    cfg = get_config(arch)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        # 1) production artifact: proves lowering; memory + collective schedule
+        lowered = lower_step(cfg, shape_name, mesh)
+        compiled = lowered.compile()
+        t1 = time.time()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        coll_sched = roofline_lib.collective_bytes(hlo)
+
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+            "compile_s": round(t1 - t0, 1),
+            "temp_bytes_per_dev": getattr(mem, "temp_size_in_bytes", None),
+            "arg_bytes_per_dev": getattr(mem, "argument_size_in_bytes", None),
+            "out_bytes_per_dev": getattr(mem, "output_size_in_bytes", None),
+            "coll_schedule_scan_artifact": coll_sched,
+        }
+
+        # 2) loop-corrected roofline terms (single-pod table per DESIGN §6)
+        if not compile_only:
+            est = cost_extrapolate(arch, shape_name, mesh)
+            rl = roofline_lib.roofline_terms(
+                arch=arch, shape=shape_name, mesh_name=mesh_name, chips=chips,
+                cost={"flops": est["total"]["flops"], "bytes accessed": est["total"]["bytes"]},
+                hlo_text="",  # collective bytes supplied below
+                model_flops=model_flops(arch, shape_name),
+                bytes_per_device=rec["temp_bytes_per_dev"],
+            )
+            rl.coll_bytes_per_dev = est["total"]["coll"]
+            rl.t_collective = est["total"]["coll"] / roofline_lib.HW["ici_bw"]
+            terms = {
+                "compute": rl.t_compute, "memory": rl.t_memory,
+                "collective": rl.t_collective,
+            }
+            rl.bottleneck = max(terms, key=terms.get)
+            rec.update(rl.to_dict())
+            rec["cost_detail"] = est["detail"]
+
+    if not compile_only:
+        print(
+            f"[{arch} × {shape_name} × {mesh_name}] OK compile={rec['compile_s']}s "
+            f"flops/dev={rec['hlo_flops']:.3e} bytes/dev={rec['hlo_bytes']:.3e} "
+            f"coll/dev={rec['coll_bytes_per_dev']:.3e} "
+            f"t=(c {rec['t_compute']*1e3:.2f} | m {rec['t_memory']*1e3:.2f} | "
+            f"x {rec['t_collective']*1e3:.2f}) ms bottleneck={rec['bottleneck']} "
+            f"useful={rec['useful_ratio']:.2f} temp/dev={_fmt_bytes(rec['temp_bytes_per_dev'])}"
+        )
+    else:
+        print(
+            f"[{arch} × {shape_name} × {mesh_name}] COMPILE OK "
+            f"({rec['compile_s']}s, temp/dev={_fmt_bytes(rec['temp_bytes_per_dev'])}, "
+            f"colls={sorted(rec['coll_schedule_scan_artifact'])})"
+        )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = "compileonly" if compile_only else "full"
+        fn = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}__{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "?"
+    return f"{b/2**30:.2f}GiB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--compile-only", action="store_true",
+                    help="skip cost extrapolation (multi-pod lowering proof)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        todo = [(a, s) for a, s, skipped in cells() if not skipped]
+    else:
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in todo:
+        for m in meshes:
+            try:
+                run_cell(arch, shape, m, args.out, compile_only=args.compile_only)
+            except Exception as e:
+                failures.append((arch, shape, m, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"FAILED {len(failures)} cells:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print(f"all {len(todo) * len(meshes)} dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

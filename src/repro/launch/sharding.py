@@ -1,0 +1,198 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs for any mesh.
+
+Strategy (DESIGN.md §4):
+  * params: 2-D sharded — tensor-parallel dim over "model", the other big
+    dim FSDP over "data". Pods are data-parallel replicas of params, so
+    specs never mention "pod" for weights; batch shards over ("pod","data").
+  * MoE experts: expert dim over "model" when divisible (arctic 128/16),
+    otherwise F over "model" (grok 8 experts) — EP degenerates to TP.
+  * decode caches: batch over DP when divisible, sequence over "model"
+    (sequence-parallel cache for long-context), SSM state heads over "model".
+  * every rule checks divisibility and falls back to replication, so any
+    (arch × shape × mesh) cell lowers.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as model_lib
+from repro.models.transformer import Cache
+
+__all__ = [
+    "dp_axes",
+    "param_specs",
+    "batch_specs",
+    "cache_spec",
+    "named",
+    "opt_state_specs",
+]
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Data-parallel axes: ("pod","data") on multi-pod, else ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_axes(cfg, mesh: Mesh, batch: int) -> tuple | None:
+    """Axes the batch dim shards over. Pure-FSDP configs spread the batch
+    over every mesh axis; fall back through shorter prefixes when the batch
+    doesn't divide (e.g. 256 sequences on the 512-chip multi-pod mesh)."""
+    if cfg.parallelism == "fsdp":
+        candidates = [tuple(mesh.axis_names), dp_axes(mesh)]
+    else:
+        candidates = [dp_axes(mesh)]
+    for cand in candidates:
+        if cand and _div(batch, mesh, cand):
+            return cand
+    return None
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = 1
+    for a in axis if isinstance(axis, tuple) else (axis,):
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def _guard(shape: tuple, spec: tuple, mesh: Mesh) -> P:
+    """Replace any non-divisible dim sharding with replication."""
+    fixed = tuple(s if _div(dim, mesh, s) else None for dim, s in zip(shape, spec))
+    return P(*fixed)
+
+
+# (tp_dim_last?, rule) per leaf name; 2-D core weights are (in, out).
+_ROW = ("data", "model")  # shard out-features over model (wq, w_gate, in_proj)
+_COL = ("model", "data")  # shard in-features over model (wo, w_down, out_proj)
+
+_CORE_RULES: dict[str, tuple] = {
+    "embed": _COL,  # (V, D): vocab over model, D fsdp
+    "lm_head": _COL,
+    "final_norm": (None,),
+    "ln1": (None,),
+    "ln2": (None,),
+    "norm_w": (None,),
+    "wq": _ROW,
+    "wk": _ROW,
+    "wv": _ROW,
+    "wo": _COL,
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    "w_gate": _ROW,
+    "w_up": _ROW,
+    "w_down": _COL,
+    "wr_gate": _ROW,
+    "wr_up": _ROW,
+    "wr_down": _COL,
+    "router": ("data", None),
+    "in_proj": _ROW,
+    "out_proj": _COL,
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "a_log": (None,),
+    "d_skip": (None,),
+    "dt_bias": (None,),
+}
+
+_MOE_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _leaf_spec(name: str, shape: tuple, cfg, mesh: Mesh) -> P:
+    core = _CORE_RULES[name]
+    if cfg.num_experts and name in _MOE_LEAVES and len(shape) - len(core) >= 2:
+        # expert-stacked (..., E, in, out): prefer EP over model axis
+        e = cfg.num_experts
+        if _div(e, mesh, "model"):
+            core = ("model", "data", None) if name != "w_down" else ("model", None, "data")
+        else:
+            core = (None,) + core
+    lead = len(shape) - len(core)
+    # FSDP spans ALL data-parallel axes: on the multi-pod mesh the "data"
+    # placeholder becomes ("pod","data") — ZeRO across pods, so a 480B
+    # optimizer state divides by 512, not 256. Pure-FSDP configs fold the
+    # model axis into FSDP and drop TP entirely.
+    if cfg.parallelism == "fsdp":
+        fsdp = tuple(mesh.axis_names)
+        spec = tuple(
+            fsdp if s == "data" else (None if s == "model" else s)
+            for s in (None,) * lead + tuple(core)
+        )
+    else:
+        dp = dp_axes(mesh)
+        spec = tuple(dp if s == "data" else s for s in (None,) * lead + tuple(core))
+    return _guard(shape, spec, mesh)
+
+
+def param_specs(cfg, mesh: Mesh) -> Any:
+    shapes = model_lib.param_shapes(cfg)
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = _leaf_spec(k, v, cfg, mesh)
+        return out
+
+    return walk(shapes)
+
+
+def batch_specs(cfg, mesh: Mesh, batch: int, seq_len: int, kind: str) -> Any:
+    bspec = batch_axes(cfg, mesh, batch)
+    if kind == "train":
+        out = {"labels": P(bspec, None)}
+        if cfg.embeds_input:
+            out["embeds"] = P(bspec, None, None)
+        else:
+            out["tokens"] = P(bspec, None)
+        return out
+    if kind == "prefill":
+        return P(bspec, None, None) if cfg.embeds_input else P(bspec, None)
+    if kind == "decode":
+        return P(bspec, None)  # (B, 1) token ids
+    raise ValueError(kind)
+
+
+def cache_spec(cfg, mesh: Mesh, batch: int, capacity: int) -> Cache:
+    """PartitionSpecs for the decode cache (see module docstring)."""
+    b = batch_axes(cfg, mesh, batch)
+    # sequence-parallel cache whenever the model axis isn't already carrying
+    # the batch (long-context: batch=1 decodes shard the 500k cache seq dim)
+    seq = None
+    if (b is None or "model" not in b) and _div(capacity, mesh, "model"):
+        seq = "model"
+    kv = None
+    shapes = model_lib.cache_shapes(cfg, batch, capacity)
+    kw = {}
+    if "k" in shapes:
+        kw["k"] = P(None, b, seq, kv, None)
+        kw["v"] = P(None, b, seq, kv, None)
+    if "conv" in shapes:
+        conv_c = shapes["conv"][-1]
+        kw["conv"] = P(None, b, None, "model" if _div(conv_c, mesh, "model") else None)
+        h = shapes["ssd"][2]
+        kw["ssd"] = P(None, b, "model" if _div(h, mesh, "model") else None, None, None)
+    return Cache(length=P(), **kw)
+
+
+def opt_state_specs(pspecs) -> Any:
+    """AdamW state inherits param specs (ZeRO: moments sharded like params)."""
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(step=P(), master=pspecs, mu=pspecs, nu=pspecs)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+No device allocation happens here — the dry-run lowers against these specs
+(the shannon/kernels pattern): weak-type-correct, shardable, zero bytes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.models import model as model_lib
+
+__all__ = ["input_specs", "model_flops"]
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Stand-ins for one cell: params/opt/batch (train) or params/cache/token."""
+    return input_specs_for(get_config(arch), shape_name)
+
+
+def input_specs_for(cfg, shape_name: str) -> dict:
+    """Same, for an arbitrary (possibly variant) ModelConfig."""
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    params = model_lib.abstract_params(cfg)
+
+    if shape.kind == "train":
+        batch = {"labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.embeds_input:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return {"params": params, "batch": batch}
+
+    if shape.kind == "prefill":
+        if cfg.embeds_input:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return {"params": params, "inputs": inputs}
+
+    # decode: one new token against a seq_len cache
+    cache = model_lib.abstract_cache(cfg, b, s)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return {"params": params, "token": token, "cache": cache}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS for the usefulness ratio: 6·N·D train, 2·N·D inference
+    (N = active params for MoE, D = processed tokens)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq

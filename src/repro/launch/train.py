@@ -1,0 +1,79 @@
+"""Training launcher: real training on the available devices.
+
+On this CPU container it trains reduced/small configs end-to-end (see
+examples/train_lm.py for the ~100M run); on a real pod the same entry point
+takes --arch/--shape and the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 50 --batch 8 --seq-len 128 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models import model as model_lib
+from repro.optim import adamw
+from repro.train import runner as runner_lib
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    else:
+        n = len(jax.devices())
+        mesh = make_mesh((1, n), ("data", "model"))
+
+    with jax.set_mesh(mesh):
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
+        opt_state = adamw.init(params)
+        step_fn, info = make_train_step(
+            cfg, mesh,
+            lr_fn=adamw.cosine_schedule(args.lr, 10, args.steps),
+            batch=args.batch, seq_len=args.seq_len,
+            microbatches=args.microbatches,
+        )
+        from repro.train.steps import place_state
+
+        params, opt_state = place_state(mesh, info, params, opt_state)
+        rcfg = runner_lib.RunnerConfig(
+            total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, seed=args.seed,
+        )
+        report = runner_lib.run_training(
+            step_fn, params, opt_state, cfg, args.batch, args.seq_len, rcfg
+        )
+    print(
+        f"done: {report.steps_done} steps, first loss {report.losses[0]:.4f}, "
+        f"last loss {report.losses[-1]:.4f}, restarts {report.restarts}"
+    )
+
+
+if __name__ == "__main__":
+    main()

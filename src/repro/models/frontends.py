@@ -1,0 +1,24 @@
+"""Modality frontend STUBS for [vlm]/[audio] architectures.
+
+Per the assignment, these entries specify the transformer BACKBONE only; the
+modality frontend provides precomputed patch/frame embeddings. These helpers
+generate deterministic synthetic embeddings with the right shapes/dtypes for
+tests/examples, and the matching ShapeDtypeStructs for the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["synthetic_embeddings", "embedding_spec"]
+
+
+def synthetic_embeddings(cfg, batch: int, seq_len: int, seed: int = 0) -> jax.Array:
+    """Stand-in for InternViT patch embeddings / EnCodec frame embeddings."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (batch, seq_len, cfg.d_model), jnp.float32).astype(cfg.dtype)
+
+
+def embedding_spec(cfg, batch: int, seq_len: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model), cfg.dtype)

@@ -1,0 +1,89 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Conventions:
+  * params are plain nested dicts of jax.Arrays;
+  * activations run in ``cfg.dtype`` (bf16 on TPU), accumulations/norms in f32;
+  * weights are stored as flat 2-D matrices where possible so tensor-parallel
+    sharding works for any head count (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "dense",
+    "swiglu",
+    "embed",
+    "unembed",
+    "rope",
+    "softmax_cross_entropy",
+]
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = dense(x, w_gate)
+    u = dense(x, w_up)
+    return dense(jax.nn.silu(g) * u, w_down)
+
+
+def embed(tokens: jax.Array, table: jax.Array, dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Project to vocab logits (f32 for a stable loss/softmax)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., L, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (B, L, H, hd); positions: (B, L) or (L,)."""
+    head_dim = x.shape[-1]
+    cos, sin = _rope_angles(positions, head_dim, theta)  # (B, L, half)
+    cos = cos[..., None, :]  # (B, L, 1, half)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, vocab_size: int) -> jax.Array:
+    """Mean token cross-entropy. logits f32 (B, L, Vpad); labels int (B, L).
+
+    Padded vocab entries never receive probability mass because the label ids
+    are < vocab_size and padded logits are finite; we mask them to -inf.
+    """
+    if logits.shape[-1] > vocab_size:
+        pad = logits.shape[-1] - vocab_size
+        neg = jnp.full((pad,), -1e30, dtype=logits.dtype)
+        logits = jnp.concatenate(
+            [logits[..., :vocab_size], jnp.broadcast_to(neg, (*logits.shape[:-1], pad))],
+            axis=-1,
+        )
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,199 @@
+"""Model facade: parameter init, loss, prefill/decode steps, cache init.
+
+``init_params`` is jit/eval_shape-friendly, so the dry-run can derive
+ShapeDtypeStructs for 314B-parameter configs without allocating a byte.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_lib
+from repro.models import transformer
+from repro.models.layers import softmax_cross_entropy
+from repro.models.transformer import Cache
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "init_cache",
+    "abstract_cache",
+    "train_loss",
+    "prefill",
+    "decode_step",
+]
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def _attn_layer_shapes(cfg):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    shapes = {
+        "ln1": (d,),
+        "ln2": (d,),
+        "wq": (d, h * hd),
+        "wk": (d, kv * hd),
+        "wv": (d, kv * hd),
+        "wo": (h * hd, d),
+    }
+    if cfg.qkv_bias:
+        shapes.update({"bq": (h * hd,), "bk": (kv * hd,), "bv": (kv * hd,)})
+    return shapes
+
+
+def _ffn_shapes(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.num_experts:
+        e = cfg.num_experts
+        shapes = {
+            "router": (d, e),
+            "w_gate": (e, d, f),
+            "w_up": (e, d, f),
+            "w_down": (e, f, d),
+        }
+        if cfg.dense_residual:
+            shapes.update({"wr_gate": (d, f), "wr_up": (d, f), "wr_down": (f, d)})
+        return shapes
+    return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+
+
+def _ssm_layer_shapes(cfg):
+    dims = ssm_lib.ssm_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv)
+    return {
+        "ln1": (cfg.d_model,),
+        "in_proj": (cfg.d_model, dims["d_in_proj"]),
+        "conv_w": (dims["conv_k"], dims["conv_dim"]),
+        "conv_b": (dims["conv_dim"],),
+        "a_log": (dims["nheads"],),
+        "d_skip": (dims["nheads"],),
+        "dt_bias": (dims["nheads"],),
+        "norm_w": (dims["d_inner"],),
+        "out_proj": (dims["d_inner"], cfg.d_model),
+    }
+
+
+def param_shapes(cfg) -> dict:
+    """Nested dict of shapes; layer stacks carry a leading layer axis."""
+    v, d, l = cfg.padded_vocab, cfg.d_model, cfg.num_layers
+    out: dict[str, Any] = {"embed": (v, d), "final_norm": (d,)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = (v, d)
+
+    if cfg.family == "ssm":
+        out["layers"] = {k: (l, *s) for k, s in _ssm_layer_shapes(cfg).items()}
+    elif cfg.family == "hybrid":
+        n_seg = l // cfg.attn_every
+        out["layers"] = {
+            k: (n_seg, cfg.attn_every, *s) for k, s in _ssm_layer_shapes(cfg).items()
+        }
+        out["shared_attn"] = {**_attn_layer_shapes(cfg), **_ffn_shapes(cfg)}
+    else:
+        out["layers"] = {
+            k: (l, *s)
+            for k, s in {**_attn_layer_shapes(cfg), **_ffn_shapes(cfg)}.items()
+        }
+    return out
+
+
+_INIT_SCALE = {"ln1": 0.0, "ln2": 0.0, "final_norm": 0.0, "norm_w": 0.0}
+
+
+def init_params(cfg, key) -> dict:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+    leaves = []
+    for i, (path, shape) in enumerate(flat):
+        name = path[-1].key
+        k = jax.random.fold_in(key, i)
+        if any(t in name for t in ("ln1", "ln2", "final_norm", "norm_w")):
+            leaves.append(jnp.zeros(shape, cfg.param_dtype))
+        elif "dt_bias" in name:
+            leaves.append(jnp.log(jnp.expm1(jnp.full(shape, 0.01, jnp.float32))).astype(cfg.param_dtype))
+        elif "a_log" in name:
+            leaves.append(jnp.log(jnp.ones(shape, jnp.float32)).astype(cfg.param_dtype))
+        elif "d_skip" in name:
+            leaves.append(jnp.ones(shape, cfg.param_dtype))
+        elif name.startswith("b") or "conv_b" in name:
+            leaves.append(jnp.zeros(shape, cfg.param_dtype))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 0.02 if "embed" in name or "lm_head" in name else fan_in**-0.5
+            leaves.append((jax.random.normal(k, shape, jnp.float32) * std).astype(cfg.param_dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def abstract_params(cfg) -> dict:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s, cfg.param_dtype),
+        param_shapes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def cache_shapes(cfg, batch: int, capacity: int) -> dict:
+    """Shapes of the decode cache for a given batch/capacity."""
+    out = {}
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        a = cfg.num_layers
+    elif cfg.family == "hybrid":
+        a = cfg.num_layers // cfg.attn_every
+    else:
+        a = 0
+    if a:
+        kvshape = (a, batch, capacity, cfg.num_kv_heads, cfg.head_dim)
+        out["k"] = kvshape
+        out["v"] = kvshape
+    if cfg.family in ("ssm", "hybrid"):
+        dims = ssm_lib.ssm_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv)
+        m = cfg.num_layers
+        out["conv"] = (m, batch, dims["conv_k"] - 1, dims["conv_dim"])
+        out["ssd"] = (m, batch, dims["nheads"], dims["headdim"], dims["state"])
+    return out
+
+
+def init_cache(cfg, batch: int, capacity: int, length: int = 0) -> Cache:
+    shapes = cache_shapes(cfg, batch, capacity)
+    kw = {k: jnp.zeros(s, jnp.float32 if k == "ssd" else cfg.dtype) for k, s in shapes.items()}
+    return Cache(length=jnp.int32(length), **kw)
+
+
+def abstract_cache(cfg, batch: int, capacity: int) -> Cache:
+    shapes = cache_shapes(cfg, batch, capacity)
+    kw = {
+        k: jax.ShapeDtypeStruct(s, jnp.float32 if k == "ssd" else cfg.dtype)
+        for k, s in shapes.items()
+    }
+    return Cache(length=jax.ShapeDtypeStruct((), jnp.int32), **kw)
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+
+def train_loss(params, batch, cfg):
+    """batch: {tokens|embeds: (B, L[, D]), labels: (B, L)} -> scalar loss."""
+    inputs = batch["embeds"] if cfg.embeds_input else batch["tokens"]
+    logits, aux, _ = transformer.forward(params, inputs, cfg, mode="train")
+    loss = softmax_cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    return loss + AUX_WEIGHT * aux
+
+
+def prefill(params, inputs, cfg):
+    """Full-sequence forward building a decode cache. Returns (logits, cache)."""
+    logits, _, cache = transformer.forward(params, inputs, cfg, mode="prefill")
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg):
+    """One decode step. token: (B, 1) int32. Returns (logits, new cache)."""
+    logits, _, cache = transformer.forward(params, token, cfg, mode="decode", cache=cache)
+    return logits, cache

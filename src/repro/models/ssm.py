@@ -1,0 +1,200 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060), chunked form.
+
+Train/prefill runs the block-decomposed SSD algorithm: intra-chunk
+"attention-like" masked matmuls (MXU-friendly) plus an inter-chunk recurrence
+carried by ``lax.scan`` — O(L·Q) compute with O(1) state, which is what makes
+the 500k-token cells tractable (DESIGN.md §5).
+
+Decode carries (conv window, SSM state) per layer — the attention-free
+analogue of a KV cache with O(1) memory per step.
+
+Group convention: n_groups=1 (B/C shared across heads), matching mamba2-2.7b.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+__all__ = ["SSMParamsSpec", "ssm_forward", "ssm_decode_step", "SSMState", "ssm_dims"]
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, K-1, conv_dim) last inputs of the causal conv
+    ssd: jax.Array  # (B, H, P, N) state matrix
+
+
+def ssm_dims(d_model: int, expand: int, headdim: int, state: int, conv_k: int):
+    d_inner = expand * d_model
+    nheads = d_inner // headdim
+    conv_dim = d_inner + 2 * state  # x + B + C (G=1)
+    d_in_proj = 2 * d_inner + 2 * state + nheads  # z, xBC, dt
+    return dict(
+        d_inner=d_inner, nheads=nheads, conv_dim=conv_dim, d_in_proj=d_in_proj,
+        headdim=headdim, state=state, conv_k=conv_k,
+    )
+
+
+class SSMParamsSpec(NamedTuple):
+    """Per-layer parameter shapes (used by the init code in model.py)."""
+
+    in_proj: tuple  # (D, d_in_proj)
+    conv_w: tuple  # (K, conv_dim)
+    conv_b: tuple  # (conv_dim,)
+    a_log: tuple  # (H,)
+    d_skip: tuple  # (H,)
+    dt_bias: tuple  # (H,)
+    norm_w: tuple  # (d_inner,)
+    out_proj: tuple  # (d_inner, D)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # (B, L, C) with feature_group_count=C; kernel (K, 1, C)
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b.astype(x.dtype)
+
+
+def _segsum_chunk(dA: jax.Array) -> jax.Array:
+    """exp-safe segment sums within a chunk: out[..., i, j] = sum_{j<t<=i} dA_t."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_forward(p: dict, u: jax.Array, cfg, *, return_state: bool = False):
+    """One Mamba2 mixer. u: (B, L, D) -> (B, L, D) (+ final SSMState)."""
+    dims = ssm_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv)
+    d_inner, h, n, pdim = dims["d_inner"], dims["nheads"], dims["state"], dims["headdim"]
+    b, l_real, _ = u.shape
+    q = min(cfg.ssm_chunk, l_real)
+    pad = (-l_real) % q
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+    l = l_real + pad
+    nc = l // q
+
+    zxbcdt = jnp.einsum("bld,de->ble", u, p["in_proj"].astype(u.dtype))
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + dims["conv_dim"]]
+    dt = zxbcdt[..., -h:]
+
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x = xbc[..., :d_inner].reshape(b, l, h, pdim)
+    bmat = xbc[..., d_inner : d_inner + n]  # (B, L, N) — G=1
+    cmat = xbc[..., d_inner + n :]  # (B, L, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,L,H)
+    if pad:
+        # padded positions must be identity state updates: dt=0 => dA=0,
+        # zero state contribution, zero output weight
+        valid = (jnp.arange(l) < l_real)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+    da = dt * a  # (B, L, H)
+
+    # --- chunked SSD ------------------------------------------------------
+    xc = x.reshape(b, nc, q, h, pdim).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dac = da.reshape(b, nc, q, h).transpose(0, 1, 3, 2)  # (B, NC, H, Q)
+    dtc = dt.reshape(b, nc, q, h)
+
+    # intra-chunk: y[i] = sum_{j<=i} C_i.B_j exp(sum dA (j,i]) dt_j x_j
+    seg = _segsum_chunk(dac)  # (B, NC, H, Q, Q)
+    lmat = jnp.exp(seg)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B, NC, Q, Q)
+    m = scores[:, :, None] * lmat  # (B, NC, H, Q, Q)
+    y_diag = jnp.einsum("bchij,bcjh,bcjhp->bcihp", m, dtc, xc)
+
+    # chunk states: S_c = sum_j exp(sum dA (j, Q]) dt_j B_j x_j^T
+    cum = jnp.cumsum(dac, axis=-1)  # (B, NC, H, Q)
+    total = cum[..., -1:]
+    decay_out = jnp.exp(total - cum)  # (B, NC, H, Q)
+    states = jnp.einsum("bcjn,bchj,bcjh,bcjhp->bchpn", bc, decay_out, dtc, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(total[..., 0])  # (B, NC, H)
+
+    def body(s, inp):
+        st_c, dec_c = inp  # (B, H, P, N), (B, H)
+        s_new = s * dec_c[..., None, None] + st_c
+        return s_new, s  # emit state BEFORE this chunk
+
+    s0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    st_seq = states.transpose(1, 0, 2, 3, 4)
+    dec_seq = chunk_decay.transpose(1, 0, 2)
+    if getattr(cfg, "ssm_unroll", False):  # cost-model mode (see dryrun.py)
+        s = s0
+        prevs = []
+        for c in range(nc):
+            s, emitted = body(s, (st_seq[c], dec_seq[c]))
+            prevs.append(emitted)
+        s_final, prev = s, jnp.stack(prevs)
+    else:
+        s_final, prev = jax.lax.scan(body, s0, (st_seq, dec_seq))
+    prev = prev.transpose(1, 0, 2, 3, 4)  # (B, NC, H, P, N)
+
+    decay_in = jnp.exp(cum)  # (B, NC, H, Q)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc, prev, decay_in)
+
+    y = (y_diag + y_off).reshape(b, l, h, pdim)
+    y = y + xc.reshape(b, l, h, pdim) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, l, d_inner).astype(u.dtype)[:, :l_real]
+
+    # gated RMSNorm then output projection
+    y = rms_norm(y * jax.nn.silu(z[:, :l_real]), p["norm_w"])
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(u.dtype))
+
+    if not return_state:
+        return out
+    km1 = dims["conv_k"] - 1
+    raw_xbc = zxbcdt[..., d_inner : d_inner + dims["conv_dim"]]
+    conv_state = raw_xbc[:, l_real - km1 : l_real, :]
+    return out, SSMState(conv=conv_state, ssd=s_final)
+
+
+def ssm_decode_step(p: dict, u_t: jax.Array, state: SSMState, cfg):
+    """One-token step. u_t: (B, D) -> (B, D), new state."""
+    dims = ssm_dims(cfg.d_model, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_conv)
+    d_inner, h, n, pdim = dims["d_inner"], dims["nheads"], dims["state"], dims["headdim"]
+    b = u_t.shape[0]
+
+    zxbcdt = jnp.einsum("bd,de->be", u_t, p["in_proj"].astype(u_t.dtype))
+    z = zxbcdt[..., :d_inner]
+    xbc_t = zxbcdt[..., d_inner : d_inner + dims["conv_dim"]]
+    dt = zxbcdt[..., -h:]
+
+    # conv over the cached window
+    window = jnp.concatenate([state.conv, xbc_t[:, None, :]], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    x = xbc[..., :d_inner].reshape(b, h, pdim)
+    bvec = xbc[..., d_inner : d_inner + n]
+    cvec = xbc[..., d_inner + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B, H)
+
+    s_new = state.ssd * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, x, bvec
+    )
+    y = jnp.einsum("bhpn,bn->bhp", s_new, cvec) + x * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, d_inner).astype(u_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(u_t.dtype))
+    return out, SSMState(conv=window[:, 1:, :], ssd=s_new)

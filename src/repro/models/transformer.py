@@ -1,0 +1,400 @@
+"""Decoder stacks for all assigned families, built for scan-over-layers.
+
+All per-layer parameters are *stacked* on a leading layer axis and the stack
+is traversed with ``lax.scan`` — HLO size stays O(1) in depth, which keeps
+the 66 multi-pod dry-run compiles tractable and is the standard production
+pattern (MaxText does the same). Heterogeneous patterns are handled as:
+
+  * gemma3 5:1 local:global — per-layer ``is_global`` flag rides the scan;
+  * zamba2 — homogeneous Mamba2 segments scanned, the *shared* attention
+    block (one param set) applied between segments (python loop, 9 calls);
+  * MoE — expert weights stacked (L, E, D, F), dispatched inside the scan.
+
+Modes: "train"/"prefill" process full sequences (flash attention / chunked
+SSD); "decode" processes one token against a cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import dense, embed, rms_norm, rope, swiglu, unembed
+
+__all__ = ["forward", "Cache", "layer_flags"]
+
+
+class Cache(NamedTuple):
+    """Unified decode cache. Attention slots and/or SSM slots may be present.
+
+    k/v: (A, B, S, KV, hd) for the A attention layers of the model
+    conv/ssd: (M, B, K-1, C) / (M, B, H, P, N) for the M Mamba layers
+    length: () int32 — number of valid tokens already in the cache.
+    """
+
+    k: Any = None
+    v: Any = None
+    conv: Any = None
+    ssd: Any = None
+    length: Any = None
+
+
+def _act(x, cfg):
+    """Pin activations to (batch, seq)-sharded layout at layer boundaries.
+
+    Without this GSPMD may propagate the params' tensor-parallel shardings
+    into the activations and *all-gather the batch* (measured: granite-3-8b
+    train_4k ran the full global batch on every device — 16x flop waste).
+
+    With seq_parallel (Megatron-SP) the seq dim additionally shards over the
+    model axis, so the per-layer scan carry saved for the backward pass is
+    1/model_size the size (granite train_4k: 21GiB -> 1.3GiB per device).
+    """
+    if not cfg.mesh_dp:
+        return x
+    seq = None
+    if (
+        cfg.seq_parallel
+        and x.ndim >= 3
+        and cfg.mesh_model
+        and cfg.mesh_model_size
+        and x.shape[1] % cfg.mesh_model_size == 0
+    ):
+        seq = cfg.mesh_model
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(cfg.mesh_dp), seq, *(None,) * (x.ndim - 2))
+    )
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def layer_flags(cfg) -> jax.Array | None:
+    """Per-layer is_global flags (gemma3 5:1 pattern); None when uniform."""
+    if cfg.global_every:
+        i = jnp.arange(cfg.num_layers)
+        return (i % cfg.global_every) == (cfg.global_every - 1)
+    return None
+
+
+# --------------------------------------------------------------------------
+# sub-blocks
+# --------------------------------------------------------------------------
+
+
+def _attn_sublayer(p, x, cfg, *, positions, mode, is_global=None, ck=None, cv=None, length=None):
+    """Attention residual branch. Returns (delta, new_k, new_v)."""
+    b, l, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["ln1"])
+    q = dense(xn, p["wq"], p.get("bq")).reshape(b, l, h, hd)
+    k = dense(xn, p["wk"], p.get("bk")).reshape(b, l, kv, hd)
+    v = dense(xn, p["wv"], p.get("bv")).reshape(b, l, kv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if mode == "decode":
+        # insert at position `length`, then attend over length+1 tokens
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, length, 0, 0))
+        o = attn_lib.decode_attention(
+            q, ck, cv, length + 1, window=cfg.sliding_window, is_global=is_global
+        )
+        out_k, out_v = ck, cv
+    else:
+        o = attn_lib.flash_attention(
+            q, k, v,
+            causal=True, window=cfg.sliding_window, is_global=is_global,
+            kv_chunk=cfg.attn_kv_chunk, unroll=cfg.attn_unroll,
+            attn_shard=cfg.attn_shard, dp_axes=cfg.mesh_dp, model_axis=cfg.mesh_model,
+        )
+        out_k, out_v = k, v
+    return dense(o.reshape(b, l, h * hd), p["wo"]), out_k, out_v
+
+
+def _ff_sublayer(p, x, cfg):
+    """FFN residual branch: dense SwiGLU or MoE (+optional dense residual)."""
+    xn = rms_norm(x, p["ln2"])
+    if cfg.num_experts:
+        b, l, d = xn.shape
+        ep, cap_axis, groups = None, None, 1
+        sizes = dict(cfg.mesh_axis_sizes)
+        if cfg.mesh_model and sizes:
+            dp_size = 1
+            for a in cfg.mesh_dp:
+                dp_size *= sizes[a]
+            groups = dp_size if (b * l) % dp_size == 0 else 1
+            # GShard groups = DP shards; E shards over model when divisible,
+            # else per-group capacity takes the model axis.
+            msize = sizes[cfg.mesh_model]
+            cap_g = max(
+                int(cfg.capacity_factor * cfg.top_k * (b * l // groups) / cfg.num_experts),
+                cfg.top_k, 1,
+            )
+            if cfg.num_experts % msize == 0:
+                ep = cfg.mesh_model
+            elif cap_g % msize == 0:
+                cap_axis = cfg.mesh_model
+        out = moe_lib.moe_ffn(
+            xn.reshape(b * l, d),
+            p["router"], p["w_gate"], p["w_up"], p["w_down"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            num_groups=groups, group_axes=tuple(cfg.mesh_dp),
+            ep_axis=ep, cap_axis=cap_axis,
+        )
+        y = out.y.reshape(b, l, d)
+        if cfg.dense_residual:
+            y = y + swiglu(xn, p["wr_gate"], p["wr_up"], p["wr_down"])
+        return y, out.aux_loss
+    return swiglu(xn, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0.0)
+
+
+# --------------------------------------------------------------------------
+# family forwards
+# --------------------------------------------------------------------------
+
+
+def _fwd_attn_stack(params, x, cfg, *, positions, mode, cache: Cache | None):
+    """Dense / MoE / gemma-pattern attention stacks (one scan)."""
+    flags = layer_flags(cfg)
+    remat = cfg.remat and mode == "train"
+
+    def body(carry, xs):
+        x, aux = carry
+        x = _act(x, cfg)
+        if cache is not None:
+            lp, flag, ck, cv = xs
+        else:
+            lp, flag = xs
+            ck = cv = None
+        delta, nk, nv = _attn_sublayer(
+            lp, x, cfg, positions=positions, mode=mode,
+            is_global=None if flags is None else flag,
+            ck=ck, cv=cv, length=None if cache is None else cache.length,
+        )
+        x = x + delta
+        ff, aux_l = _ff_sublayer(lp, x, cfg)
+        x = x + ff
+        # Emitting K/V is only needed when building/updating a cache; in
+        # train mode it would stack (L, B, S, KV, hd) for nothing.
+        ys = None if mode == "train" else (nk, nv)
+        return (x, aux + aux_l), ys
+
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+
+    flags_xs = flags if flags is not None else jnp.zeros((cfg.num_layers,), bool)
+    if cache is not None:
+        xs = (params["layers"], flags_xs, cache.k, cache.v)
+    else:
+        xs = (params["layers"], flags_xs)
+    if cfg.unroll_layers:  # cost-model mode (see launch/dryrun.py)
+        carry = (x, jnp.float32(0.0))
+        ys_list = []
+        for i in range(cfg.num_layers):
+            carry, ys_i = body(carry, jax.tree.map(lambda a: a[i], xs))
+            ys_list.append(ys_i)
+        (x, aux) = carry
+        ys = None if ys_list[0] is None else jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+    else:
+        (x, aux), ys = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    ks, vs = ys if ys is not None else (None, None)
+    return x, aux, ks, vs
+
+
+def _fwd_ssm_stack(params, x, cfg, *, mode, cache: Cache | None):
+    """Pure Mamba2 stack (mamba2-2.7b)."""
+    remat = cfg.remat and mode == "train"
+
+    if mode == "decode":
+        def body(x, xs):
+            lp, conv, ssd = xs
+            delta, st = ssm_lib.ssm_decode_step(
+                {k: v for k, v in lp.items() if k != "ln1"},
+                rms_norm(x[:, 0], lp["ln1"]), ssm_lib.SSMState(conv, ssd), cfg
+            )
+            return x + delta[:, None], (st.conv, st.ssd)
+
+        xs_dec = (params["layers"], cache.conv, cache.ssd)
+        if cfg.unroll_layers:
+            sts = []
+            n_l = jax.tree.leaves(params["layers"])[0].shape[0]
+            for i in range(n_l):
+                x, st_i = body(x, jax.tree.map(lambda a: a[i], xs_dec))
+                sts.append(st_i)
+            convs, ssds = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+        else:
+            x, (convs, ssds) = jax.lax.scan(body, x, xs_dec)
+        return x, jnp.float32(0.0), convs, ssds
+
+    def body(x, lp):
+        x = _act(x, cfg)
+        xn = rms_norm(x, lp["ln1"])
+        out = ssm_lib.ssm_forward(
+            {k: v for k, v in lp.items() if k != "ln1"}, xn, cfg,
+            return_state=(mode == "prefill"),
+        )
+        if mode == "prefill":
+            delta, st = out
+            return x + delta, (st.conv, st.ssd)
+        return x + out, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+    if cfg.unroll_layers:
+        n_l = jax.tree.leaves(params["layers"])[0].shape[0]
+        sts_list = []
+        for i in range(n_l):
+            x, st_i = body(x, jax.tree.map(lambda a: a[i], params["layers"]))
+            sts_list.append(st_i)
+        sts = None if sts_list[0] is None else jax.tree.map(lambda *a: jnp.stack(a), *sts_list)
+    else:
+        x, sts = jax.lax.scan(body, x, params["layers"])
+    if mode == "prefill":
+        return x, jnp.float32(0.0), sts[0], sts[1]
+    return x, jnp.float32(0.0), None, None
+
+
+def _fwd_hybrid(params, x, cfg, *, positions, mode, cache: Cache | None):
+    """Zamba2: Mamba2 segments + ONE shared attention block between segments."""
+    every = cfg.attn_every
+    n_seg = cfg.num_layers // every
+    sp = params["shared_attn"]
+    seg_params = params["layers"]  # leaves: (n_seg, every, ...)
+
+    new_convs, new_ssds, new_ks, new_vs = [], [], [], []
+    aux = jnp.float32(0.0)
+    # Per-LAYER remat inside segments (segment-granularity remat was
+    # measured at 149-215GiB/dev: the backward recompute of a whole segment
+    # holds every internal SSD buffer at once); the shared attention block
+    # is checkpointed on its own below.
+    inner_cfg = cfg
+    for s in range(n_seg):
+        lp_seg = jax.tree.map(lambda a: a[s], seg_params)
+        sub_cache = None
+        if cache is not None and mode == "decode":
+            sub_cache = Cache(
+                conv=cache.conv[s * every : (s + 1) * every],
+                ssd=cache.ssd[s * every : (s + 1) * every],
+                length=cache.length,
+            )
+        ck = cache.k[s] if (cache is not None and cache.k is not None) else None
+        cv = cache.v[s] if (cache is not None and cache.v is not None) else None
+
+        x, _, conv_s, ssd_s = _fwd_ssm_stack(
+            {"layers": lp_seg}, x, inner_cfg, mode=mode, cache=sub_cache
+        )
+
+        def shared_block(x, ck=ck, cv=cv):
+            delta, nk, nv = _attn_sublayer(
+                sp, x, cfg, positions=positions, mode=mode,
+                ck=ck, cv=cv, length=None if cache is None else cache.length,
+            )
+            x = x + delta
+            ff, aux_l = _ff_sublayer(sp, x, cfg)
+            if mode == "train":  # emitting K/V would pin (B, L, KV, hd) x9
+                nk = nv = None
+            return _act(x + ff, cfg), nk, nv, aux_l
+
+        if cfg.remat and mode == "train":
+            shared_block = jax.checkpoint(shared_block, policy=_remat_policy(cfg))
+        x, nk, nv, aux_l = shared_block(_act(x, cfg))
+        aux = aux + aux_l
+        if conv_s is not None:
+            new_convs.append(conv_s)
+            new_ssds.append(ssd_s)
+        if nk is not None:
+            new_ks.append(nk)
+            new_vs.append(nv)
+
+    ks = jnp.stack(new_ks) if new_ks else None
+    vs = jnp.stack(new_vs) if new_vs else None
+    convs = jnp.concatenate(new_convs) if new_convs else None
+    ssds = jnp.concatenate(new_ssds) if new_ssds else None
+    return x, aux, ks, vs, convs, ssds
+
+
+# --------------------------------------------------------------------------
+# public entry
+# --------------------------------------------------------------------------
+
+
+def forward(params, inputs, cfg, *, mode: str, cache: Cache | None = None):
+    """Run the stack.
+
+    inputs: int tokens (B, L) or precomputed embeddings (B, L, D) for the
+    stubbed [vlm]/[audio] frontends. Returns (logits_f32, aux_loss, Cache|None).
+    """
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = embed(inputs, params["embed"], cfg.dtype)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    else:
+        x = inputs.astype(cfg.dtype)
+    x = _act(x, cfg)
+    b, l = x.shape[0], x.shape[1]
+
+    if mode == "decode":
+        positions = jnp.broadcast_to(cache.length, (b, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+
+    family = cfg.family
+    new_cache = None
+    if family in ("dense", "moe", "vlm", "audio"):
+        x, aux, ks, vs = _fwd_attn_stack(
+            params, x, cfg, positions=positions, mode=mode, cache=cache
+        )
+        if mode == "prefill":
+            new_cache = _prefill_attn_cache(ks, vs, cfg, b, l)
+        elif mode == "decode":
+            new_cache = cache._replace(k=ks, v=vs, length=cache.length + 1)
+    elif family == "ssm":
+        x, aux, convs, ssds = _fwd_ssm_stack(params, x, cfg, mode=mode, cache=cache)
+        if mode == "prefill":
+            new_cache = Cache(conv=convs, ssd=ssds, length=jnp.int32(l))
+        elif mode == "decode":
+            new_cache = cache._replace(conv=convs, ssd=ssds, length=cache.length + 1)
+    elif family == "hybrid":
+        x, aux, ks, vs, convs, ssds = _fwd_hybrid(
+            params, x, cfg, positions=positions, mode=mode, cache=cache
+        )
+        if mode == "prefill":
+            kc = _prefill_attn_cache(ks, vs, cfg, b, l)
+            new_cache = Cache(k=kc.k, v=kc.v, conv=convs, ssd=ssds, length=jnp.int32(l))
+        elif mode == "decode":
+            new_cache = cache._replace(
+                k=ks, v=vs, conv=convs, ssd=ssds, length=cache.length + 1
+            )
+    else:
+        raise ValueError(f"unknown family {family}")
+
+    x = _act(rms_norm(x, params["final_norm"]), cfg)
+    if mode in ("prefill", "decode"):
+        x = x[:, -1:]  # only the last position produces a next-token logit
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, table)
+    return logits, aux, new_cache
+
+
+def _prefill_attn_cache(ks, vs, cfg, b, l) -> Cache:
+    """Stacked per-layer K/V from prefill become the decode cache as-is.
+
+    The cache is sized to (prefill length + decode budget); launch code pads
+    to the shape's seq_len via cache_pad.
+    """
+    pad = cfg.cache_pad
+    if pad:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return Cache(k=ks, v=vs, length=jnp.int32(l))

@@ -1,0 +1,93 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Mixed-precision contract: model params live in ``param_dtype`` (bf16 on TPU);
+the optimizer holds the fp32 master copy plus two fp32 moments (ZeRO-sharded
+on the mesh via the same PartitionSpecs as the params — launch/sharding.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "init", "update", "cosine_schedule", "global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    master: Any  # fp32 params
+    mu: Any
+    nu: Any
+
+
+def init(params) -> AdamWState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.int32(0),
+        master=jax.tree.map(f32, params),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def update(
+    grads,
+    state: AdamWState,
+    *,
+    lr_fn,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+    param_dtype=jnp.bfloat16,
+):
+    """One AdamW step. Returns (new model params, new state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_fn(step)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        return m, v, p
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, state.master)
+    mu = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    # optimization_barrier: when param_dtype == f32 the cast is the identity
+    # and XLA would alias params to master — a donating caller then hits
+    # "donate the same buffer twice" on the next step.
+    params = jax.lax.optimization_barrier(
+        jax.tree.map(lambda p: p.astype(param_dtype), master)
+    )
+    new_state = AdamWState(step=step, master=master, mu=mu, nu=nu)
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

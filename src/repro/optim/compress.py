@@ -1,0 +1,57 @@
+"""Int8 gradient compression with error feedback (1000+-node posture).
+
+At multi-pod scale the cross-pod gradient all-reduce is the scarcest
+bandwidth (DCN/optical, not ICI). This transform quantizes each gradient
+leaf to int8 with a per-leaf scale before the reduction and decompresses
+after, carrying the quantization residual to the next step (error feedback,
+Seide et al. / 1-bit SGD lineage) so convergence is preserved.
+
+Usage (train/steps.py): grads -> compress -> (collective) -> decompress.
+Under jit/GSPMD the reduction is implicit, so the value of the transform is
+realized when the step is built with ``shard_map`` cross-pod reductions; the
+numerical contract (int8 + EF) is what unit tests pin down.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["EFState", "init_ef", "compress", "decompress", "ef_compress_grads"]
+
+
+class EFState(NamedTuple):
+    residual: Any  # fp32 pytree, same structure as grads
+
+
+def init_ef(grads_like) -> EFState:
+    return EFState(residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def compress(g: jax.Array):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads, ef: EFState):
+    """Quantize grads with error feedback. Returns (dequantized grads, new EF)."""
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = compress(target)
+        deq = decompress(q, s)
+        return deq, target - deq
+
+    out = jax.tree.map(one, grads, ef.residual)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return deq, EFState(residual=res)

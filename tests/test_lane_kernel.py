@@ -1,0 +1,37 @@
+"""Sweep for the fused lane-RMQ Pallas kernel vs the pure-jnp engine/oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lane_rmq, ref
+from repro.kernels import ops
+
+
+@pytest.mark.parametrize("n", [64, 130, 1000, 4096])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_lane_query_kernel_matches_oracle(n, dtype, rng):
+    x = rng.integers(0, 25, n).astype(dtype)
+    b = 64
+    l = rng.integers(0, n, b)
+    r = rng.integers(0, n, b)
+    l, r = np.minimum(l, r), np.maximum(l, r)
+    s = lane_rmq.build(jnp.asarray(x))
+    gi, gv = ops.lane_query(s, jnp.asarray(l), jnp.asarray(r), interpret=True)
+    gold = ref.rmq_ref(x, l, r)
+    np.testing.assert_array_equal(np.asarray(gi), gold)
+    np.testing.assert_allclose(np.asarray(gv).astype(np.float64), x[gold].astype(np.float64))
+
+
+def test_lane_query_kernel_matches_jnp_engine(rng):
+    n = 3000
+    x = rng.standard_normal(n).astype(np.float32)
+    b = 128
+    l = rng.integers(0, n, b)
+    r = rng.integers(0, n, b)
+    l, r = np.minimum(l, r), np.maximum(l, r)
+    s = lane_rmq.build(jnp.asarray(x))
+    i1, v1 = ops.lane_query(s, jnp.asarray(l), jnp.asarray(r), interpret=True)
+    i2, v2 = lane_rmq.query(s, jnp.asarray(l), jnp.asarray(r))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))

@@ -1,0 +1,117 @@
+"""Launch-layer unit tests: sharding rules, specs, roofline parsing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch import roofline, sharding
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import input_specs, model_flops
+from repro.models import model as model_lib
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_every_leaf(arch):
+    cfg = get_config(arch)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    shapes = model_lib.param_shapes(cfg)
+    specs = sharding.param_specs(cfg, mesh)
+    s_leaves = jax.tree.leaves(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    p_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(s_leaves) == len(p_leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible_on_production_shape(arch):
+    """Every sharded dim must divide by its axis size on a 16x16-shaped mesh.
+
+    The mesh itself needs 256 devices, so validate the divisibility rule
+    directly against the guard logic with fake sizes.
+    """
+    cfg = get_config(arch)
+    shapes = model_lib.param_shapes(cfg)
+
+    sizes = {"data": 16, "model": 16}
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = sizes
+
+    specs = sharding.param_specs(cfg, FakeMesh)
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )[0]
+    flat_p = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )[0]
+    for (path_s, shape), (path_p, spec) in zip(flat_s, flat_p):
+        assert path_s == path_p
+        for dim, ax in zip(shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([sizes[a] for a in axes]))
+            assert dim % size == 0, (path_s, shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_wellformed(arch, shape_name):
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        pytest.skip("long_500k skipped for full-attention archs")
+    specs = input_specs(arch, shape_name)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    assert model_flops(arch, shape_name) > 0
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[16,1024] all-gather(bf16[1,1024] %x), replica_groups={}
+  %ar = f32[256] all-reduce(f32[256] %y), to_apply=%sum
+  %rs.1 = f32[8,2] reduce-scatter(f32[64,2] %z), dimensions={0}
+  %done = (f32[4]) all-reduce-done(f32[4] %w)
+  %cp = u32[10] collective-permute(u32[10] %q)
+"""
+    out = roofline.collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["reduce-scatter"] == 8 * 2 * 4
+    assert out["collective-permute"] == 10 * 4
+
+
+def test_roofline_terms_math():
+    rl = roofline.roofline_terms(
+        arch="a", shape="s", mesh_name="single", chips=256,
+        cost={"flops": 197e12, "bytes accessed": 819e9},
+        hlo_text="%x = bf16[25000000000,1] all-reduce(bf16[1] %y)",
+        model_flops=197e12 * 256,
+    )
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(1.0)
+    assert rl.t_collective == pytest.approx(1.0)
+    assert rl.useful_ratio == pytest.approx(1.0)
+
+
+def test_cache_spec_long_context():
+    """long_500k (batch=1): cache must shard seq over model, not batch."""
+    cfg = get_config("gemma3-12b")
+
+    sizes = {"data": 16, "model": 16}
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = sizes
+
+    spec = sharding.cache_spec(cfg, FakeMesh, batch=1, capacity=524288)
+    assert spec.k[2] == "model"  # seq dim
+    assert spec.k[1] is None  # batch=1 unshardable
+
+
+def test_dp_axes():
+    single = make_mesh((1, 1), ("data", "model"))
+    assert sharding.dp_axes(single) == ("data",)

@@ -1,0 +1,83 @@
+"""Hypothesis property tests on the RMQ system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import block_rmq, lane_rmq, ref, sparse_table
+
+arrays = st.lists(
+    st.integers(min_value=-1000, max_value=1000), min_size=1, max_size=600
+)
+
+
+@st.composite
+def array_and_queries(draw):
+    xs = draw(arrays)
+    n = len(xs)
+    qs = draw(
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=1,
+            max_size=32,
+        )
+    )
+    l = np.array([min(a, b) for a, b in qs])
+    r = np.array([max(a, b) for a, b in qs])
+    return np.array(xs, np.float32), l, r
+
+
+@given(array_and_queries())
+@settings(max_examples=80, deadline=None)
+def test_blocked_matches_oracle(data):
+    x, l, r = data
+    s = block_rmq.build(jnp.asarray(x), 128)
+    idx, val = block_rmq.query(s, jnp.asarray(l), jnp.asarray(r))
+    np.testing.assert_array_equal(np.asarray(idx), ref.rmq_ref(x, l, r))
+
+
+@given(array_and_queries())
+@settings(max_examples=80, deadline=None)
+def test_lane_matches_oracle(data):
+    x, l, r = data
+    s = lane_rmq.build(jnp.asarray(x))
+    idx, _ = lane_rmq.query(s, jnp.asarray(l), jnp.asarray(r))
+    np.testing.assert_array_equal(np.asarray(idx), ref.rmq_ref(x, l, r))
+
+
+@given(array_and_queries())
+@settings(max_examples=60, deadline=None)
+def test_rmq_invariants(data):
+    """Structural invariants: answer in range; value is the min; leftmost."""
+    x, l, r = data
+    s = block_rmq.build(jnp.asarray(x), 128)
+    idx, val = block_rmq.query(s, jnp.asarray(l), jnp.asarray(r))
+    idx = np.asarray(idx)
+    val = np.asarray(val)
+    assert ((idx >= l) & (idx <= r)).all()
+    for q in range(len(l)):
+        seg = x[l[q] : r[q] + 1]
+        assert val[q] == seg.min()
+        assert (seg[: idx[q] - l[q]] > val[q]).all()  # leftmost
+
+
+@given(arrays)
+@settings(max_examples=60, deadline=None)
+def test_sparse_table_idempotent_levels(xs):
+    """Doubling level k answers must equal oracle for windows 2^k."""
+    x = np.array(xs, np.float32)
+    st_ = sparse_table.build(jnp.asarray(x))
+    n = len(x)
+    idx = np.asarray(st_.idx)
+    for k in range(idx.shape[0]):
+        w = 1 << k
+        for i in range(0, n, max(1, n // 7)):
+            hi = min(i + w - 1, n - 1)
+            assert idx[k, i] == ref.rmq_ref(x, [i], [hi])[0]
+
+
+@given(st.integers(1, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_exact_log2(length):
+    k = int(sparse_table.exact_log2(jnp.asarray([length], jnp.int32))[0])
+    assert (1 << k) <= length < (1 << (k + 1))

@@ -1,0 +1,82 @@
+"""Core RMQ engines vs. the numpy oracle (exact leftmost-argmin semantics)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import block_rmq, exhaustive, lane_rmq, lca, ref, sparse_table
+
+
+def _queries(rng, n, b):
+    l = rng.integers(0, n, b)
+    r = rng.integers(0, n, b)
+    return np.minimum(l, r), np.maximum(l, r)
+
+
+ENGINES = ["sparse_table", "block128", "block256", "lane", "lca", "exhaustive"]
+
+
+def _run(engine, x, l, r):
+    xj, lj, rj = jnp.asarray(x), jnp.asarray(l), jnp.asarray(r)
+    if engine == "sparse_table":
+        return np.asarray(sparse_table.query(sparse_table.build(xj), lj, rj))
+    if engine == "block128":
+        return np.asarray(block_rmq.query(block_rmq.build(xj, 128), lj, rj)[0])
+    if engine == "block256":
+        return np.asarray(block_rmq.query(block_rmq.build(xj, 256), lj, rj)[0])
+    if engine == "lane":
+        return np.asarray(lane_rmq.query(lane_rmq.build(xj), lj, rj)[0])
+    if engine == "lca":
+        return np.asarray(lca.query(lca.build(x), lj, rj))
+    if engine == "exhaustive":
+        return np.asarray(exhaustive.rmq_exhaustive(xj, lj, rj, query_chunk=64))
+    raise ValueError(engine)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("n", [1, 2, 127, 128, 129, 1000, 4096])
+def test_engine_matches_oracle(engine, n, rng):
+    x = rng.integers(0, 17, n).astype(np.float32)  # dense ties
+    l, r = _queries(rng, n, 200)
+    gold = ref.rmq_ref(x, l, r)
+    got = _run(engine, x, l, r)
+    np.testing.assert_array_equal(got, gold)
+
+
+@pytest.mark.parametrize("engine", ["block128", "lane", "lca"])
+def test_float_values(engine, rng):
+    n = 777
+    x = rng.standard_normal(n).astype(np.float32)
+    l, r = _queries(rng, n, 300)
+    np.testing.assert_array_equal(_run(engine, x, l, r), ref.rmq_ref(x, l, r))
+
+
+def test_all_equal_prefers_leftmost(rng):
+    n = 500
+    x = np.zeros(n, np.float32)
+    l, r = _queries(rng, n, 100)
+    for engine in ENGINES:
+        got = _run(engine, x, l, r)
+        np.testing.assert_array_equal(got, l, err_msg=engine)
+
+
+def test_paper_example():
+    """Section 2: X=[9,2,7,8,4,1,3], RMQ(2,6)=5."""
+    x = np.array([9, 2, 7, 8, 4, 1, 3], np.float32)
+    for engine in ENGINES:
+        got = _run(engine, x, np.array([2]), np.array([6]))
+        assert got[0] == 5, engine
+
+
+def test_block_size_must_be_lane_aligned():
+    with pytest.raises(ValueError):
+        block_rmq.build(jnp.zeros(100), 100)
+
+
+def test_values_returned_match_indices(rng):
+    n = 2048
+    x = rng.integers(0, 50, n).astype(np.float32)
+    l, r = _queries(rng, n, 100)
+    s = block_rmq.build(jnp.asarray(x), 128)
+    idx, val = block_rmq.query(s, jnp.asarray(l), jnp.asarray(r))
+    np.testing.assert_allclose(np.asarray(val), x[np.asarray(idx)])

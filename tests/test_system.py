@@ -1,0 +1,167 @@
+"""End-to-end system tests: training loop, fault tolerance, checkpointing,
+data pipeline determinism, optimizer behavior, packing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs import get_config, reduce_for_smoke
+from repro.data import packing, pipeline
+from repro.launch.mesh import make_mesh
+from repro.models import model
+from repro.optim import adamw, compress
+from repro.train import runner as runner_lib
+from repro.train.steps import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="qwen2-1.5b", steps=12):
+    cfg = reduce_for_smoke(get_config(arch))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    params = model.init_params(cfg, KEY)
+    opt = adamw.init(params)
+    step_fn, _ = make_train_step(
+        cfg, mesh, lr_fn=adamw.cosine_schedule(1e-3, 2, steps), batch=4, seq_len=32
+    )
+    return cfg, mesh, params, opt, step_fn
+
+
+def test_training_reduces_loss():
+    cfg, mesh, params, opt, step_fn = _setup(steps=30)
+    with jax.set_mesh(mesh):
+        losses = []
+        for s in range(30):
+            batch = pipeline.synthetic_batch(cfg, 4, 32, seed=7, step=0)  # same batch
+            params, opt, m = step_fn(params, opt, batch)
+            losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+
+
+def test_runner_fault_recovery(tmp_path):
+    """Kill the step twice; the runner must restart from checkpoints and
+    finish all steps with deterministic data replay."""
+    cfg, mesh, params, opt, step_fn = _setup()
+    boom = {8: True, 5: True}
+
+    def fault_hook(step):
+        if boom.pop(step, None):
+            raise RuntimeError(f"injected node failure at step {step}")
+
+    rcfg = runner_lib.RunnerConfig(
+        total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=4, seed=3, max_retries=5
+    )
+    with jax.set_mesh(mesh):
+        report = runner_lib.run_training(
+            step_fn, params, opt, cfg, 4, 32, rcfg, fault_hook=fault_hook
+        )
+    assert report.restarts == 2
+    assert report.steps_done >= 12
+    assert checkpoint.latest_step(str(tmp_path)) == 12
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, mesh, params, opt, step_fn = _setup()
+    tree = {"params": params, "opt": opt}
+    checkpoint.save(str(tmp_path), 5, tree)
+    restored = checkpoint.restore(str(tmp_path), 5, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    cfg, mesh, params, opt, _ = _setup()
+    checkpoint.save(str(tmp_path), 1, {"p": params})
+    # a torn write (tmp dir) must be invisible to latest_step
+    os.makedirs(os.path.join(str(tmp_path), "step_00000002.tmp"))
+    assert checkpoint.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_async(tmp_path):
+    cfg, mesh, params, opt, _ = _setup()
+    checkpoint.save(str(tmp_path), 3, {"p": params}, background=True)
+    checkpoint.wait_pending()
+    assert checkpoint.latest_step(str(tmp_path)) == 3
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Save under one sharding, restore under another (elastic scaling)."""
+    cfg, mesh, params, opt, _ = _setup()
+    checkpoint.save(str(tmp_path), 1, {"p": params})
+    devs = jax.devices()
+    mesh2 = make_mesh((1, len(devs)), ("data", "model"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sh = jax.tree.map(lambda _: NamedSharding(mesh2, P()), params)
+    restored = checkpoint.restore(str(tmp_path), 1, {"p": params}, shardings={"p": sh})
+    assert all(
+        leaf.sharding.mesh.shape == mesh2.shape
+        for leaf in jax.tree.leaves(restored["p"])
+    )
+
+
+def test_data_pipeline_deterministic_replay():
+    cfg = reduce_for_smoke(get_config("granite-3-8b"))
+    b1 = pipeline.synthetic_batch(cfg, 4, 32, seed=11, step=17)
+    b2 = pipeline.synthetic_batch(cfg, 4, 32, seed=11, step=17)
+    b3 = pipeline.synthetic_batch(cfg, 4, 32, seed=11, step=18)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_packing_uses_rmq_and_fits():
+    lengths = pipeline.synthetic_documents(500, 512, seed=0)
+    assign, free = packing.pack_documents(lengths, 512)
+    assert (assign >= 0).all()
+    # capacity never exceeded
+    used = np.zeros(free.shape[0], np.int64)
+    for d, b in enumerate(assign):
+        used[b] += min(lengths[d], 512)
+    assert (used <= 512).all()
+    # packing efficiency sane vs naive one-doc-per-bin
+    assert (used > 0).sum() < len(lengths)
+
+
+def test_adamw_step_and_clip():
+    params = {"w": jnp.ones((4, 4))}
+    st = adamw.init(params)
+    grads = {"w": jnp.full((4, 4), 100.0)}  # should be clipped
+    new_params, st2, m = adamw.update(
+        grads, st, lr_fn=lambda s: jnp.float32(0.1), clip_norm=1.0,
+        param_dtype=jnp.float32,
+    )
+    assert float(m["grad_norm"]) == pytest.approx(400.0)
+    assert int(st2.step) == 1
+    assert not np.allclose(np.asarray(new_params["w"]), 1.0)
+
+
+def test_grad_compression_error_feedback():
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)) * 1e-3)}
+    ef = compress.init_ef(g)
+    deq, ef2 = compress.ef_compress_grads(g, ef)
+    # int8 quantization error is bounded by scale/2 per element
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(deq["w"] - g["w"]))) <= scale * 0.51
+    # residual carries the error; applying twice recovers ~all mass
+    deq2, _ = compress.ef_compress_grads(jax.tree.map(jnp.zeros_like, g), ef2)
+    total = np.asarray(deq["w"] + deq2["w"])
+    np.testing.assert_allclose(total, np.asarray(g["w"]), atol=scale)
+
+
+def test_microbatch_accumulation_matches_single():
+    cfg = reduce_for_smoke(get_config("granite-3-8b"))
+    mesh = make_mesh((1, 1), ("data", "model"))
+    params = model.init_params(cfg, KEY)
+    batch = pipeline.synthetic_batch(cfg, 4, 32, seed=0, step=0)
+    with jax.set_mesh(mesh):
+        s1, _ = make_train_step(cfg, mesh, lr_fn=lambda s: jnp.float32(0.0), batch=4, seq_len=32)
+        s2, _ = make_train_step(
+            cfg, mesh, lr_fn=lambda s: jnp.float32(0.0), batch=4, seq_len=32, microbatches=2
+        )
+        p1, _, m1 = s1(params, adamw.init(params), batch)
+        p2, _, m2 = s2(params, adamw.init(params), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
