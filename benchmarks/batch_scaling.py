@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core import block_rmq, sparse_table
 
+from . import common
 from .common import emit, make_queries, time_fn
 
 N = 1 << 20
@@ -21,14 +22,15 @@ BATCHES = [1 << k for k in range(6, 17, 2)]
 
 def run():
     rng = np.random.default_rng(1)
-    x = rng.random(N, dtype=np.float32)
+    n, batches = (1 << 14, BATCHES[:3]) if common.SMOKE else (N, BATCHES)
+    x = rng.random(n, dtype=np.float32)
     xj = jnp.asarray(x)
-    blk = block_rmq.build(xj, 1024)
+    blk = block_rmq.build(xj, 1024 if n >= (1 << 17) else 128)
     st = sparse_table.build(xj)
     q_blk = jax.jit(lambda l, r: block_rmq.query(blk, l, r)[0])
     q_st = jax.jit(lambda l, r: sparse_table.query(st, l, r))
-    for b in BATCHES:
-        l, r = make_queries(rng, N, b, "small")
+    for b in batches:
+        l, r = make_queries(rng, n, b, "small")
         lj, rj = jnp.asarray(l), jnp.asarray(r)
         for name, fn in [("RTXRMQ", q_blk), ("HRMQ-proxy", q_st)]:
             t = time_fn(fn, lj, rj)

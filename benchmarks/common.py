@@ -8,7 +8,15 @@ import time
 import jax
 import numpy as np
 
-__all__ = ["make_queries", "time_fn", "emit"]
+__all__ = ["make_queries", "time_fn", "emit", "RESULTS", "SMOKE"]
+
+# Every emit() also lands here (name -> us_per_call) so the harness can dump
+# machine-readable JSON (benchmarks/run.py --json) for cross-PR tracking.
+RESULTS: dict = {}
+
+# Set by `benchmarks.run --smoke`: suites shrink sizes/batches to finish in
+# seconds (CI smoke via tools/check.sh).
+SMOKE = False
 
 
 def make_queries(rng, n: int, batch: int, dist: str):
@@ -40,4 +48,5 @@ def time_fn(fn, *args, repeats: int = 5, warmup: int = 2):
 
 
 def emit(name: str, seconds: float, derived: str = ""):
+    RESULTS[name] = seconds * 1e6
     print(f"{name},{seconds*1e6:.2f},{derived}")

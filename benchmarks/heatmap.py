@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core import block_rmq
 
+from . import common
 from .common import emit, time_fn
 
 SIZES = [1 << 14, 1 << 17, 1 << 20]
@@ -24,23 +25,27 @@ BATCH = 1 << 13
 
 def run():
     rng = np.random.default_rng(3)
-    for n in SIZES:
+    if common.SMOKE:
+        sizes, range_exp, blocks, batch = [1 << 14], [-8, -1], [128, 512], 1 << 10
+    else:
+        sizes, range_exp, blocks, batch = SIZES, RANGE_EXP, BLOCKS, BATCH
+    for n in sizes:
         x = rng.random(n, dtype=np.float32)
         xj = jnp.asarray(x)
-        for bs in BLOCKS:
+        for bs in blocks:
             if bs * 2 > n:
                 continue
             s = block_rmq.build(xj, bs)
             qfn = jax.jit(lambda l, r, s=s: block_rmq.query(s, l, r)[0])
-            for y in RANGE_EXP:
+            for y in range_exp:
                 length = max(1, int(n * (2.0**y)))
-                l = rng.integers(0, n - length + 1, BATCH)
+                l = rng.integers(0, n - length + 1, batch)
                 r = l + length - 1
                 t = time_fn(qfn, jnp.asarray(l), jnp.asarray(r))
                 emit(
                     f"fig10/RTXRMQ/n={n}/len=n*2^{y}/bs={bs}",
-                    t / BATCH,
-                    f"{t/BATCH*1e9:.1f}ns_per_rmq",
+                    t / batch,
+                    f"{t/batch*1e9:.1f}ns_per_rmq",
                 )
 
 

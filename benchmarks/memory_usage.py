@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core import block_rmq, lane_rmq, lca, sparse_table
 
+from . import common
 from .common import emit
 
 SIZES = [1 << 10, 1 << 15, 1 << 20]
@@ -24,7 +25,8 @@ def tree_mb(tree) -> float:
 
 def run():
     rng = np.random.default_rng(2)
-    for n in SIZES:
+    sizes = SIZES[:2] if common.SMOKE else SIZES
+    for n in sizes:
         x = rng.random(n, dtype=np.float32)
         xj = jnp.asarray(x)
         input_mb = n * 4 / 2**20

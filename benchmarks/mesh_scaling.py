@@ -14,18 +14,20 @@ import os
 import subprocess
 import sys
 
+from . import common
 from .common import emit
 
 _CHILD = r"""
-import time, numpy as np, jax, jax.numpy as jnp
+import os, time, numpy as np, jax, jax.numpy as jnp
 from repro.core import distributed
+from repro.launch.mesh import make_mesh, set_mesh
 from benchmarks.common import make_queries
 n_dev = len(jax.devices())
-mesh = jax.make_mesh((n_dev,), ("shard",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((n_dev,), ("shard",))
 rng = np.random.default_rng(0)
-n = 1 << 20
+n = int(os.environ.get("RMQ_MESH_BENCH_N", 1 << 20))
 x = rng.random(n, dtype=np.float32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     s = distributed.build_sharded(jnp.asarray(x), mesh, ("shard",), 1024)
     qfn = distributed.make_query_fn(mesh, ("shard",))
     l, r = make_queries(rng, n, 8192, "small")
@@ -40,10 +42,13 @@ with jax.set_mesh(mesh):
 
 
 def run():
-    for n_dev in [1, 2, 4, 8]:
+    devices = [1, 2] if common.SMOKE else [1, 2, 4, 8]
+    for n_dev in devices:
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
         env["PYTHONPATH"] = "src:."
+        if common.SMOKE:
+            env["RMQ_MESH_BENCH_N"] = str(1 << 16)
         out = subprocess.run(
             [sys.executable, "-c", _CHILD], env=env, capture_output=True, text=True
         )

@@ -1,20 +1,47 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig12,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig12,...] [--json OUT]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows. ``--json OUT`` also writes the
+results as ``{suite: {name: us_per_call}}`` JSON (e.g. BENCH_PR1.json) so the
+perf trajectory is machine-trackable across PRs. ``--smoke`` shrinks sizes so
+a suite finishes in seconds (CI smoke; see tools/check.sh).
 """
 
 import argparse
+import json
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="comma list: fig12,fig13,fig10,fig14,table2,roofline")
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma list: fig12,fig13,fig10,fig14,table2,roofline,crossover",
+    )
+    ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import batch_scaling, heatmap, memory_usage, mesh_scaling, roofline_report, time_per_rmq
+    if args.json:  # fail on an unwritable path BEFORE minutes of benchmarking
+        try:
+            open(args.json, "a").close()
+        except OSError as e:
+            ap.error(f"--json {args.json}: {e}")
+
+    from . import (
+        batch_scaling,
+        common,
+        heatmap,
+        hybrid_crossover,
+        memory_usage,
+        mesh_scaling,
+        roofline_report,
+        time_per_rmq,
+    )
+
+    common.SMOKE = args.smoke
 
     suites = {
         "fig12": time_per_rmq.run,
@@ -23,12 +50,26 @@ def main() -> None:
         "table2": memory_usage.run,
         "fig14": mesh_scaling.run,
         "roofline": roofline_report.run,
+        "crossover": hybrid_crossover.run,
     }
+    if only:
+        unknown = only - set(suites)
+        if unknown:
+            ap.error(f"unknown suite(s) {sorted(unknown)}; have {sorted(suites)}")
     for name, fn in suites.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---")
         fn()
+
+    if args.json:
+        by_suite: dict = {}
+        for name, us in common.RESULTS.items():
+            suite, _, rest = name.partition("/")
+            by_suite.setdefault(suite, {})[rest or suite] = us
+        with open(args.json, "w") as f:
+            json.dump(by_suite, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core import block_rmq, exhaustive, lane_rmq, lca, sparse_table
 
+from . import common
 from .common import emit, make_queries, time_fn
 
 SIZES = [1 << 14, 1 << 17, 1 << 20]
@@ -33,7 +34,8 @@ DISTS = ["large", "medium", "small"]
 
 def run():
     rng = np.random.default_rng(0)
-    for n in SIZES:
+    sizes, batch = ([1 << 14], 1 << 11) if common.SMOKE else (SIZES, BATCH)
+    for n in sizes:
         x = rng.random(n, dtype=np.float32)
         xj = jnp.asarray(x)
         blk = block_rmq.build(xj, 1024 if n >= (1 << 17) else 128)
@@ -46,7 +48,7 @@ def run():
         q_lca = jax.jit(lambda l, r: lca.query(lc, l, r))
         q_ex = jax.jit(lambda l, r: exhaustive.rmq_exhaustive(xj, l, r))
         for dist in DISTS:
-            l, r = make_queries(rng, n, BATCH, dist)
+            l, r = make_queries(rng, n, batch, dist)
             lj, rj = jnp.asarray(l), jnp.asarray(r)
             for name, fn in [
                 ("RTXRMQ", q_blk),
@@ -55,10 +57,10 @@ def run():
                 ("LCA", q_lca),
             ]:
                 t = time_fn(fn, lj, rj)
-                emit(f"fig12/{name}/n={n}/{dist}", t / BATCH, f"{t/BATCH*1e9:.1f}ns_per_rmq")
+                emit(f"fig12/{name}/n={n}/{dist}", t / batch, f"{t/batch*1e9:.1f}ns_per_rmq")
             if n <= (1 << 17):  # exhaustive is O(n) per query — cap sizes
                 t = time_fn(q_ex, lj, rj)
-                emit(f"fig12/EXHAUSTIVE/n={n}/{dist}", t / BATCH, f"{t/BATCH*1e9:.1f}ns_per_rmq")
+                emit(f"fig12/EXHAUSTIVE/n={n}/{dist}", t / batch, f"{t/batch*1e9:.1f}ns_per_rmq")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ import logging
 import jax
 
 from repro.configs import get_config
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.models import model
 from repro.optim import adamw
 from repro.train import runner as runner_lib
@@ -43,7 +43,7 @@ def main():
     print(f"model: {n/1e6:.1f}M params")
 
     mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model.init_params(cfg, jax.random.PRNGKey(0))
         opt = adamw.init(params)
         step_fn, _ = make_train_step(

@@ -2,22 +2,41 @@
 
 Engines:
   * ``block_rmq``  — RTXRMQ-TPU, paper-faithful blocked structure (pure jnp).
-  * ``repro.kernels.ops`` — the same algorithm with fused Pallas kernels.
+  * ``repro.kernels.ops`` — the same algorithm with fused Pallas kernels;
+    ``query`` dispatches the single fused tiled megakernel.
   * ``lane_rmq``   — beyond-paper O(1)-gather variant.
   * ``sparse_table`` — classic doubling table (level-2 building block).
   * ``lca``        — Cartesian-tree/Euler-tour baseline (paper's LCA).
   * ``exhaustive`` — brute-force baseline (paper's EXHAUSTIVE).
+  * ``hybrid``     — range-adaptive dispatcher exploiting the paper's
+    small/large crossover: short ranges -> blocked path, long ranges ->
+    sparse-table path, exact scatter-back merge.
   * ``distributed``— mesh-sharded engine (level-3, multi-pod).
+
+``registry`` exposes all single-host engines behind one uniform
+``(build, query) -> (idx, val)`` interface for tests and benchmarks.
 """
 
-from . import block_rmq, distributed, exhaustive, lane_rmq, lca, ref, sparse_table
+from . import (
+    block_rmq,
+    distributed,
+    exhaustive,
+    hybrid,
+    lane_rmq,
+    lca,
+    ref,
+    registry,
+    sparse_table,
+)
 
 __all__ = [
     "block_rmq",
     "distributed",
     "exhaustive",
+    "hybrid",
     "lane_rmq",
     "lca",
     "ref",
+    "registry",
     "sparse_table",
 ]

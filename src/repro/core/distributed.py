@@ -19,7 +19,21 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6 exposes shard_map at top level with `check_vma`
+    from jax import shard_map as _shard_map_impl
+
+    _SHARD_MAP_CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x: experimental module, kwarg named `check_rep`
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _SHARD_MAP_CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """Version-compat wrapper: maps ``check_vma`` to the installed jax's kwarg."""
+    kw = {_SHARD_MAP_CHECK_KW: check_vma}
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 from . import block_rmq
 from .block_rmq import BlockRMQ, maxval
@@ -30,11 +44,17 @@ __all__ = ["build_sharded", "make_query_fn", "pad_to_shards"]
 _INT_BIG = jnp.int32(2**31 - 1)
 
 
+def _axis_size(name: str):
+    if hasattr(jax.lax, "axis_size"):  # jax >= 0.5
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)  # folds to a constant inside shard_map
+
+
 def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
     """Flattened linear device index across the given mesh axes."""
     idx = jnp.int32(0)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * _axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 

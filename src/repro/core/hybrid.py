@@ -1,0 +1,197 @@
+"""Range-adaptive hybrid RMQ dispatcher (the paper's crossover, exploited).
+
+RTXRMQ §6 (and GPU-RMQ independently) report a regime-dependent winner: the
+blocked/RT-style structure is fastest for *small* query ranges, while the
+O(1) table-lookup family (LCA / sparse table) overtakes it at medium/large
+ranges. This engine exploits that crossover instead of living on one side of
+it: a batch is partitioned by range length against a threshold, short ranges
+go to the blocked path (pure-jnp ``block_rmq`` on CPU, the fused Pallas
+megakernel ``kernels.ops`` on TPU), long ranges go to the pure sparse-table
+path, and the two result sets are scattered back into the original batch
+order. Results are bit-identical to ``block_rmq.query`` — every constituent
+engine implements exact leftmost-tie semantics.
+
+``calibrate`` measures both constituent engines at a few range lengths and
+returns the measured crossover threshold; ``build`` takes it (or a default)
+as a static attribute. The partition runs host-side (numpy) — query batches
+arrive from the host in serving anyway, and a data-dependent partition under
+``jit`` would force padded two-sided execution, which is exactly the waste
+this engine removes. See DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import block_rmq, sparse_table
+from .block_rmq import BlockRMQ
+
+__all__ = ["HybridRMQ", "build", "query", "calibrate", "DEFAULT_THRESHOLD_FRAC"]
+
+# Fallback threshold when no calibration is run: the paper's small/medium
+# boundary sits near n**0.5 for the sizes it sweeps; ranges shorter than
+# sqrt(n) touch only a couple of blocks and favor the blocked path.
+DEFAULT_THRESHOLD_FRAC = 0.5  # threshold = n ** DEFAULT_THRESHOLD_FRAC
+
+
+class HybridRMQ(NamedTuple):
+    """Both constituent structures, routing threshold, jitted path closures."""
+
+    blocked: BlockRMQ
+    st: sparse_table.SparseTable  # doubling table over the raw array
+    x: jax.Array  # raw values (answers value lookups for the long path)
+    threshold: int  # range lengths <= threshold go to the blocked path
+    use_kernels: bool  # short path: fused Pallas megakernel vs pure jnp
+    short_fn: object  # jitted (l, r) -> (idx, val), structure closed over
+    long_fn: object  # jitted (l, r) -> (idx, val)
+
+
+def build(
+    x: jax.Array,
+    block_size: int = 128,
+    *,
+    threshold: int | None = None,
+    use_kernels: bool | None = None,
+) -> HybridRMQ:
+    """Build both constituent engines. ``threshold=None`` -> sqrt(n) default."""
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+    n = x.shape[0]
+    if threshold is None:
+        threshold = max(1, int(round(n**DEFAULT_THRESHOLD_FRAC)))
+    if use_kernels:
+        from repro import kernels
+
+        blocked = kernels.ops.build(x, block_size)
+        short_fn = lambda l, r: kernels.ops.query(blocked, l, r)  # jitted inside
+    else:
+        blocked = block_rmq.build(x, block_size)
+        short_fn = jax.jit(lambda l, r: block_rmq.query(blocked, l, r))
+    st = sparse_table.build(x)
+
+    def _long(l, r):
+        idx = sparse_table.query(st, l, r)
+        return idx, x[idx]
+
+    return HybridRMQ(
+        blocked=blocked,
+        st=st,
+        x=x,
+        threshold=int(threshold),
+        use_kernels=bool(use_kernels),
+        short_fn=short_fn,
+        long_fn=jax.jit(_long),
+    )
+
+
+def _short_query(s: HybridRMQ, l, r):
+    return s.short_fn(l, r)
+
+
+def _long_query(s: HybridRMQ, l, r):
+    return s.long_fn(l, r)
+
+
+def query(s: HybridRMQ, l, r) -> Tuple[jax.Array, jax.Array]:
+    """Range-adaptive batched RMQ. Returns (leftmost argmin idx int32, value).
+
+    Host-side partition by range length, per-engine sub-batches, ordered
+    scatter-back. Bit-identical to ``block_rmq.query`` on the same batch.
+    """
+    l = np.asarray(l).astype(np.int64)
+    r = np.asarray(r).astype(np.int64)
+    short = (r - l + 1) <= s.threshold
+
+    # Every launch pads its batch to a power of two so the jit cache stays
+    # bounded (log2(B) shapes per path) however batch sizes and splits vary.
+    def _launch(fn, lm, rm):
+        k = lm.size
+        kp = 1 << (k - 1).bit_length() if k > 1 else 1
+        if kp != k:
+            lp = np.zeros(kp, np.int64)
+            rp = np.zeros(kp, np.int64)
+            lp[:k] = lm
+            rp[:k] = rm
+            lm, rm = lp, rp
+        qi, qv = fn(s, jnp.asarray(lm), jnp.asarray(rm))
+        return qi, qv, k
+
+    # Uniform batches skip the partition/scatter round-trip entirely.
+    n_short = int(short.sum())
+    if n_short == short.size or n_short == 0:
+        fn = _short_query if n_short else _long_query
+        qi, qv, k = _launch(fn, l, r)
+        return qi[:k], qv[:k]
+
+    # Mixed batch: launch both sub-batches, then sync both — overlapping the
+    # two engines' execution with a single wait.
+    idx = np.empty(l.shape, np.int32)
+    val = np.empty(l.shape, np.dtype(s.x.dtype))
+    launched = []
+    for mask, fn in ((short, _short_query), (~short, _long_query)):
+        launched.append((mask, _launch(fn, l[mask], r[mask])))
+    for mask, (qi, qv, k) in launched:
+        idx[mask] = np.asarray(qi)[:k]
+        val[mask] = np.asarray(qv)[:k]
+    return jnp.asarray(idx), jnp.asarray(val)
+
+
+def calibrate(
+    n: int,
+    batch: int = 4096,
+    *,
+    block_size: int = 128,
+    use_kernels: bool | None = None,
+    seed: int = 0,
+    repeats: int = 3,
+) -> int:
+    """Time both constituent paths across range lengths; return the crossover.
+
+    Sweeps log-spaced range lengths, measures the per-call median of each
+    path on a ``batch``-sized query load, and returns the largest swept
+    length at which the short (blocked) path still wins — i.e. the value to
+    pass as ``threshold`` given the ``len <= threshold -> short`` routing.
+    Degenerate measurements stay honest: ``n`` when the short path wins
+    everywhere, ``0`` (route everything long) when the long path wins even
+    at length 1.
+    """
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(n, dtype=np.float32))
+    s = build(x, block_size, use_kernels=use_kernels)
+
+    short_fn = jax.jit(lambda l, r: _short_query(s, l, r))
+    long_fn = jax.jit(lambda l, r: _long_query(s, l, r))
+
+    lengths = np.unique(
+        np.geomspace(1, n, num=8).astype(np.int64).clip(1, n)
+    )
+    crossover = None
+    prev_length = 0
+    for length in lengths:
+        lo = rng.integers(0, max(n - length + 1, 1), batch)
+        lj = jnp.asarray(lo)
+        rj = jnp.asarray(np.minimum(lo + length - 1, n - 1))
+
+        def _med(fn):
+            fn(lj, rj)  # warmup / compile
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(lj, rj))
+                ts.append(time.perf_counter() - t0)
+            return float(np.median(ts))
+
+        if _med(long_fn) < _med(short_fn):
+            # The long path wins at `length`; routing is `len <= threshold ->
+            # short`, so the threshold is the last length where short won.
+            crossover = int(prev_length)
+            break
+        prev_length = int(length)
+    if crossover is None:
+        crossover = prev_length  # short path won at every swept length (= n)
+    return crossover  # 0 => route everything long (long won even at len 1)

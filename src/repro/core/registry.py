@@ -1,0 +1,82 @@
+"""First-class engine registry: one uniform (build, query) interface.
+
+Tests and benchmarks enumerate engines from here instead of hard-coding
+module calls, so adding an engine (e.g. ``hybrid``) automatically enrolls it
+in the oracle sweeps and the crossover benchmark.
+
+Contract: ``build(x_jnp) -> state``; ``query(state, l, r) -> (idx, val)``
+with exact leftmost-tie argmin indices (int32) and the corresponding values.
+Engines whose native query returns only indices are wrapped with a value
+gather so the interface stays uniform.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import block_rmq, exhaustive, hybrid, lane_rmq, lca, sparse_table
+
+__all__ = ["Engine", "ENGINES", "get", "names"]
+
+
+class Engine(NamedTuple):
+    build: Callable  # (x: jax.Array) -> state
+    query: Callable  # (state, l, r) -> (idx int32, val)
+
+
+def _with_values(build_fn, query_fn):
+    """Adapt an index-only engine to the uniform (idx, val) contract."""
+
+    def build(x):
+        return (build_fn(x), x)
+
+    def query(state, l, r):
+        s, x = state
+        idx = query_fn(s, l, r)
+        return idx, x[idx]
+
+    return Engine(build, query)
+
+
+def _kernels_engine(block_size: int) -> Engine:
+    def build(x):
+        from repro import kernels
+
+        return kernels.ops.build(x, block_size)
+
+    def query(s, l, r):
+        from repro import kernels
+
+        return kernels.ops.query(s, l, r)
+
+    return Engine(build, query)
+
+
+ENGINES: dict = {
+    "sparse_table": _with_values(sparse_table.build, sparse_table.query),
+    "block128": Engine(lambda x: block_rmq.build(x, 128), block_rmq.query),
+    "block256": Engine(lambda x: block_rmq.build(x, 256), block_rmq.query),
+    "lane": Engine(lane_rmq.build, lane_rmq.query),
+    "lca": _with_values(lca.build, lca.query),
+    "exhaustive": _with_values(
+        lambda x: x, lambda x, l, r: exhaustive.rmq_exhaustive(x, l, r, query_chunk=64)
+    ),
+    # Fused tiled Pallas megakernel (interpret mode off-TPU).
+    "fused128": _kernels_engine(128),
+    # Range-adaptive dispatcher over blocked + sparse-table paths.
+    "hybrid": Engine(lambda x: hybrid.build(x, 128), hybrid.query),
+}
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(ENGINES)
+
+
+def get(name: str) -> Engine:
+    try:
+        return ENGINES[name]
+    except KeyError:
+        raise ValueError(f"unknown engine {name!r}; have {sorted(ENGINES)}") from None

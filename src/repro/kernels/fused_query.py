@@ -1,0 +1,203 @@
+"""Pallas TPU megakernel: tiled, fully-fused blocked-RMQ query.
+
+One ``pallas_call`` answers a query batch end-to-end — left partial, right
+partial, *and* the O(1) sparse-table interior candidate — emitting the final
+``(idx, val)``. This collapses the previous three dispatches (partials
+kernel, XLA sparse-table gathers, XLA merge) into a single kernel launch.
+
+Tiling: the grid is ``(B // tile,)`` and each grid step answers ``tile``
+queries at once. Per query the step pulls three data-dependent rows via
+scalar-prefetch index maps (the same "program the DMA with the block id"
+trick as ``rmq_query.py``):
+
+  * ``x_blocks[bl[q]]``       — left partial block,
+  * ``x_blocks[br[q]]``       — right partial block,
+  * ``st.idx[k[q], :]``       — the doubling-table level row, where
+    ``k = floor(log2(interior_len))`` is precomputed on the host side of the
+    dispatch; both interior gathers (``ilo`` and ``ihi - 2^k + 1``) read from
+    this one row, so the whole sparse-table query costs one row DMA plus four
+    scalar VMEM loads.
+
+The partial scans run vectorized on ``(tile, bs)`` VMEM tiles (one VPU masked
+min per side for the whole tile) instead of ``(1, bs)`` rows, amortizing both
+DMA issue and grid overhead. The per-block min arrays (``bmin_val`` /
+``bmin_gidx``) ride along as constant whole-array VMEM residents — they are
+DMA'd once, not per step.
+
+Correctness: the merge keeps the exact leftmost-tie rule of
+``kernels/ops.py`` — partial candidates are merged left-over-right
+(``lv <= rv``), then preferred over the interior only when strictly smaller
+or when the partial index lies left of the interior's block range
+(``pi < (bl + 1) * bs``). See DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.block_rmq import maxval
+from repro.core.sparse_table import exact_log2
+
+from .tiling import pad_to_tiles, row_spec, scalar_col, tile_out_specs
+from .tuning import DEFAULT_TILE
+
+__all__ = ["fused_query", "DEFAULT_TILE"]
+
+
+# Scalar-prefetch operand order (SMEM, available to index maps + kernel).
+_N_PREFETCH = 9  # bl, br, ls, le, re, k, ilo, bpos, hasint
+
+
+def _kernel(tile, *refs):
+    (bl_ref, br_ref, ls_ref, le_ref, re_ref,
+     k_ref, ilo_ref, bpos_ref, hasint_ref) = refs[:_N_PREFETCH]
+    body = refs[_N_PREFETCH:]
+    xl_refs = body[0:tile]
+    xr_refs = body[tile : 2 * tile]
+    st_refs = body[2 * tile : 3 * tile]
+    bv_ref, bg_ref = body[3 * tile], body[3 * tile + 1]
+    val_ref, idx_ref = body[3 * tile + 2], body[3 * tile + 3]
+
+    i = pl.program_id(0)
+    q0 = i * tile
+    bs = xl_refs[0].shape[1]
+    big = maxval(xl_refs[0].dtype)
+    big_i = jnp.int32(bs)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (tile, bs), 1)
+
+    def col(ref):  # (tile,) vector of per-query scalars from SMEM
+        return scalar_col(ref, q0, tile)
+
+    bl, br, ls, le, re = col(bl_ref), col(br_ref), col(ls_ref), col(le_ref), col(re_ref)
+
+    # Left partials, whole tile at once: (tile, bs) masked min + leftmost idx.
+    xl = jnp.concatenate([r[...] for r in xl_refs], axis=0)
+    ml = jnp.where((lanes >= ls[:, None]) & (lanes <= le[:, None]), xl, big)
+    lv = jnp.min(ml, axis=1)
+    li = jnp.min(jnp.where(ml == lv[:, None], lanes, big_i), axis=1)
+    lg = bl * bs + li
+
+    # Right partials (masked off for single-block queries).
+    xr = jnp.concatenate([r[...] for r in xr_refs], axis=0)
+    mr = jnp.where(lanes <= re[:, None], xr, big)
+    rv = jnp.min(mr, axis=1)
+    rv = jnp.where(br > bl, rv, big)
+    ri = jnp.min(jnp.where(mr == rv[:, None], lanes, big_i), axis=1)
+    rg = br * bs + ri
+
+    take_l = lv <= rv  # left candidate has smaller indices: leftmost ties
+    pv = jnp.where(take_l, lv, rv)
+    pi = jnp.where(take_l, lg, rg)
+
+    # Interior sparse-table candidate: two scalar gathers from the prefetched
+    # level-k row, leftmost-tie pick via the block-min values.
+    ivs, iis = [], []
+    for t in range(tile):
+        a = st_refs[t][0, ilo_ref[q0 + t]]
+        b = st_refs[t][0, bpos_ref[q0 + t]]
+        av = bv_ref[0, a]
+        bv = bv_ref[0, b]
+        bi = jnp.where(av <= bv, a, b)
+        ivs.append(jnp.where(hasint_ref[q0 + t] == 1, jnp.minimum(av, bv), big))
+        iis.append(bg_ref[0, bi])
+    iv = jnp.stack(ivs)
+    ii = jnp.stack(iis)
+
+    # Final merge, exact leftmost: prefer the partial only when strictly
+    # smaller, or tied with an index left of the interior block range.
+    int_start = (bl + 1) * bs
+    prefer_partial = (pv < iv) | ((pv == iv) & (pi < int_start))
+    val_ref[...] = jnp.where(prefer_partial, pv, iv)[:, None]
+    idx_ref[...] = jnp.where(prefer_partial, pi, ii)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def fused_query(
+    x_blocks: jax.Array,  # (nb, bs)
+    bmin_val: jax.Array,  # (nb,)
+    bmin_gidx: jax.Array,  # (nb,) int32
+    st_idx: jax.Array,  # (K, nb) int32 doubling table over bmin_val
+    l: jax.Array,  # (B,)
+    r: jax.Array,  # (B,)
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool | None = None,
+):
+    """End-to-end fused blocked RMQ. Returns (idx (B,) int32, value (B,)).
+
+    Single kernel dispatch per batch; ``tile`` queries per grid step.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nb, bs = x_blocks.shape
+    b = l.shape[0]
+    big = maxval(x_blocks.dtype)
+    l = l.astype(jnp.int32)
+    r = r.astype(jnp.int32)
+
+    # Host-side (XLA) scalar decomposition — cheap int ops on (B,) vectors.
+    bl = l // bs
+    br = r // bs
+    ls = l - bl * bs
+    re = r - br * bs
+    le = jnp.where(bl == br, re, bs - 1)
+
+    hasint = ((br - bl) >= 2).astype(jnp.int32)
+    ilo = jnp.clip(bl + 1, 0, nb - 1)
+    ihi = jnp.maximum(jnp.clip(br - 1, 0, nb - 1), ilo)
+    k = exact_log2(ihi - ilo + 1)
+    bpos = ihi - jnp.left_shift(jnp.int32(1), k) + 1
+
+    # Pad the batch to a whole number of tiles with trivial (0, 0) queries.
+    scalars = [bl, br, ls, le, re, k, ilo, bpos, hasint]
+    scalars, bp = pad_to_tiles(scalars, b, tile)
+
+    # Lane-align the per-block tables (last dim multiple of 128 for VMEM).
+    # Per-call cost note: when nb is already lane-aligned (every large-n
+    # config: nb = n/bs is a multiple of 128) the zero-width pads are elided
+    # by XLA; a misaligned nb implies a small nb, so the copy is sub-VREG
+    # noise. Keeping the pad here avoids widening the shared BlockRMQ pytree
+    # (whose field layout distributed.py's PartitionSpecs mirror).
+    nbp = -(-nb // 128) * 128
+    bv2 = jnp.pad(bmin_val, (0, nbp - nb), constant_values=big)[None, :]
+    bg2 = jnp.pad(bmin_gidx, (0, nbp - nb))[None, :]
+    st2 = jnp.pad(st_idx, ((0, 0), (0, nbp - nb)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=_N_PREFETCH,
+        grid=(bp // tile,),
+        in_specs=(
+            # data-dependent rows: x_blocks[bl[q]], x_blocks[br[q]], and the
+            # doubling-table level row st.idx[k[q], :] (k is prefetch slot 5)
+            [row_spec((1, bs), 0, t, tile) for t in range(tile)]
+            + [row_spec((1, bs), 1, t, tile) for t in range(tile)]
+            + [row_spec((1, nbp), 5, t, tile) for t in range(tile)]
+            + [
+                pl.BlockSpec((1, nbp), lambda i, *s: (0, 0)),  # bmin_val (resident)
+                pl.BlockSpec((1, nbp), lambda i, *s: (0, 0)),  # bmin_gidx (resident)
+            ]
+        ),
+        out_specs=tile_out_specs(tile),
+    )
+    val, idx = pl.pallas_call(
+        functools.partial(_kernel, tile),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 1), x_blocks.dtype),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        *scalars,
+        *([x_blocks] * tile),
+        *([x_blocks] * tile),
+        *([st2] * tile),
+        bv2,
+        bg2,
+    )
+    return idx[:b, 0], val[:b, 0]

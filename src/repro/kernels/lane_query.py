@@ -1,12 +1,15 @@
 """Pallas TPU kernel: fused lane-RMQ query (beyond-paper O(1) engine).
 
 Fuses the per-query work of ``repro.core.lane_rmq.query`` minus the O(1)
-sparse-table interior (which stays in XLA): one grid step per query loads
-three 128-lane rows — the suffix-min row of l's lane-block, the prefix-min
-row of r's lane-block, and the raw row for the same-block case — and emits
-the merged (value, global index) candidate. On TPU each row is exactly one
-VREG, so the whole query is a handful of vector ops; scalar prefetch drives
-the data-dependent row selection (same pattern as rmq_query.py).
+sparse-table interior (which stays in XLA). The grid is tiled
+``(B // tile,)``: each step answers ``tile`` queries, loading per query three
+128-lane rows — the suffix-min row of l's lane-block, the prefix-min row of
+r's lane-block, and the raw row for the same-block case. The same-block
+masked min runs vectorized on the ``(tile, LANE)`` stack of raw rows (one VPU
+op per tile rather than per query); the straddle candidates are scalar VMEM
+picks. Scalar prefetch drives the data-dependent row selection (same pattern
+as rmq_query.py); ``tile=1`` reproduces the original one-query-per-step
+layout.
 """
 
 from __future__ import annotations
@@ -21,46 +24,60 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.block_rmq import maxval
 from repro.core.lane_rmq import LANE
 
-__all__ = ["lane_partials"]
+from .tiling import pad_to_tiles, row_spec, scalar_col, tile_out_specs
+from .tuning import DEFAULT_TILE
+
+__all__ = ["lane_partials", "DEFAULT_TILE"]
 
 
-def _kernel(sl_ref, sr_ref, llo_ref, rlo_ref,
-            sv_ref, si_ref, pv_ref, pi_ref, xs_ref,
-            val_ref, idx_ref):
+
+def _kernel(tile, sl_ref, sr_ref, llo_ref, rlo_ref, *refs):
+    sv_refs = refs[0:tile]
+    si_refs = refs[tile : 2 * tile]
+    pv_refs = refs[2 * tile : 3 * tile]
+    pi_refs = refs[3 * tile : 4 * tile]
+    xs_refs = refs[4 * tile : 5 * tile]
+    val_ref, idx_ref = refs[5 * tile], refs[5 * tile + 1]
+
     i = pl.program_id(0)
-    big = maxval(xs_ref.dtype)
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, LANE), 1)
-    llo = llo_ref[i]
-    rlo = rlo_ref[i]
-    same = sl_ref[i] == sr_ref[i]
+    q0 = i * tile
+    big = maxval(xs_refs[0].dtype)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (tile, LANE), 1)
 
-    # straddling candidates: one dynamic lane pick from each min row
-    lv = sv_ref[0, llo]
-    li = si_ref[0, llo]
-    rv = pv_ref[0, rlo]
-    ri = pi_ref[0, rlo]
+    def col(ref):
+        return scalar_col(ref, q0, tile)
+
+    sl, sr, llo, rlo = col(sl_ref), col(sr_ref), col(llo_ref), col(rlo_ref)
+    same = sl == sr
+
+    # Straddling candidates: one dynamic lane pick from each min row.
+    lv = jnp.stack([sv_refs[t][0, llo_ref[q0 + t]] for t in range(tile)])
+    li = jnp.stack([si_refs[t][0, llo_ref[q0 + t]] for t in range(tile)])
+    rv = jnp.stack([pv_refs[t][0, rlo_ref[q0 + t]] for t in range(tile)])
+    ri = jnp.stack([pi_refs[t][0, rlo_ref[q0 + t]] for t in range(tile)])
     take_l = lv <= rv  # suffix candidate has smaller indices on ties
     str_v = jnp.where(take_l, lv, rv)
     str_i = jnp.where(take_l, li, ri)
 
-    # same-block: masked vector min over the raw row (one VREG op)
-    row = xs_ref[...]
-    masked = jnp.where((lanes >= llo) & (lanes <= rlo), row, big)
-    mv = jnp.min(masked)
-    mi = jnp.min(jnp.where(masked == mv, lanes, jnp.int32(LANE)))
-    mi = sl_ref[i] * LANE + mi
+    # Same-block: masked vector min over the (tile, LANE) stack of raw rows.
+    rows = jnp.concatenate([r[...] for r in xs_refs], axis=0)
+    masked = jnp.where((lanes >= llo[:, None]) & (lanes <= rlo[:, None]), rows, big)
+    mv = jnp.min(masked, axis=1)
+    mi = jnp.min(jnp.where(masked == mv[:, None], lanes, jnp.int32(LANE)), axis=1)
+    mi = sl * LANE + mi
 
-    val_ref[0, 0] = jnp.where(same, mv, str_v)
-    idx_ref[0, 0] = jnp.where(same, mi, str_i)
+    val_ref[...] = jnp.where(same, mv, str_v)[:, None]
+    idx_ref[...] = jnp.where(same, mi, str_i)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def lane_partials(
     xs: jax.Array,  # (nsub, LANE)
     suff_val: jax.Array, suff_idx: jax.Array,  # (nsub, LANE)
     pref_val: jax.Array, pref_idx: jax.Array,
     sl: jax.Array, sr: jax.Array, llo: jax.Array, rlo: jax.Array,  # (B,)
     *,
+    tile: int = DEFAULT_TILE,
     interpret: bool | None = None,
 ):
     """Fused non-interior candidates. Returns (value (B,), global idx (B,))."""
@@ -68,28 +85,36 @@ def lane_partials(
         interpret = jax.default_backend() != "tpu"
     b = sl.shape[0]
     args = [a.astype(jnp.int32) for a in (sl, sr, llo, rlo)]
+
+    args, bp = pad_to_tiles(args, b, tile)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
-        grid=(b,),
-        in_specs=[
-            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sl[i], 0)),  # suff_val
-            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sl[i], 0)),  # suff_idx
-            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sr[i], 0)),  # pref_val
-            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sr[i], 0)),  # pref_idx
-            pl.BlockSpec((1, LANE), lambda i, sl, sr, llo, rlo: (sl[i], 0)),  # xs
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
-        ],
+        grid=(bp // tile,),
+        in_specs=(
+            # data-dependent row picks driven by sl (sel=0) / sr (sel=1)
+            [row_spec((1, LANE), 0, t, tile) for t in range(tile)]  # suff_val @ sl
+            + [row_spec((1, LANE), 0, t, tile) for t in range(tile)]  # suff_idx @ sl
+            + [row_spec((1, LANE), 1, t, tile) for t in range(tile)]  # pref_val @ sr
+            + [row_spec((1, LANE), 1, t, tile) for t in range(tile)]  # pref_idx @ sr
+            + [row_spec((1, LANE), 0, t, tile) for t in range(tile)]  # raw xs @ sl
+        ),
+        out_specs=tile_out_specs(tile),
     )
     val, idx = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, tile),
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((b, 1), xs.dtype),
-            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), xs.dtype),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(*args, suff_val, suff_idx, pref_val, pref_idx, xs)
-    return val[:, 0], idx[:, 0]
+    )(
+        *args,
+        *([suff_val] * tile),
+        *([suff_idx] * tile),
+        *([pref_val] * tile),
+        *([pref_idx] * tile),
+        *([xs] * tile),
+    )
+    return val[:b, 0], idx[:b, 0]

@@ -1,10 +1,12 @@
 """Jit'd public wrappers: the kernelized RTXRMQ-TPU engine.
 
-``build`` / ``query`` mirror ``repro.core.block_rmq`` but route the two
-compute hot spots through the Pallas kernels (validated in interpret mode on
-CPU, compiled for TPU on real hardware). The O(1) interior sparse-table path
-stays in XLA — it is gather-bound, not compute-bound, and XLA already emits
-optimal dynamic-gathers for it.
+``build`` / ``query`` mirror ``repro.core.block_rmq`` but route the hot path
+through the Pallas kernels (validated in interpret mode on CPU, compiled for
+TPU on real hardware). ``query`` dispatches the *fused tiled megakernel*
+(``fused_query.py``): one kernel launch answers the whole batch end-to-end —
+partials, sparse-table interior, and final merge — ``tile`` queries per grid
+step. The legacy two-pass path (partials kernel + XLA interior/merge) remains
+available via ``query(..., fused=False)`` for A/B benchmarking.
 """
 
 from __future__ import annotations
@@ -16,10 +18,19 @@ from repro.core import block_rmq, sparse_table
 from repro.core.block_rmq import BlockRMQ, maxval, _pick
 
 from .block_min import block_min
+from .fused_query import DEFAULT_TILE, fused_query
 from .lane_query import lane_partials
 from .rmq_query import rmq_partials
 
-__all__ = ["build", "query", "block_min", "rmq_partials", "lane_query", "lane_partials"]
+__all__ = [
+    "build",
+    "query",
+    "block_min",
+    "fused_query",
+    "rmq_partials",
+    "lane_query",
+    "lane_partials",
+]
 
 
 def build(x: jax.Array, block_size: int, *, interpret: bool | None = None) -> BlockRMQ:
@@ -37,8 +48,26 @@ def build(x: jax.Array, block_size: int, *, interpret: bool | None = None) -> Bl
     return BlockRMQ(x_blocks=xb, bmin_val=bmin_val, bmin_gidx=bmin_gidx, st=st)
 
 
-def query(s: BlockRMQ, l: jax.Array, r: jax.Array, *, interpret: bool | None = None):
-    """Kernelized batched query. Returns (leftmost argmin idx int32, value)."""
+def query(
+    s: BlockRMQ,
+    l: jax.Array,
+    r: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    fused: bool = True,
+    interpret: bool | None = None,
+):
+    """Kernelized batched query. Returns (leftmost argmin idx int32, value).
+
+    ``fused=True`` (default): single megakernel dispatch (fused_query.py).
+    ``fused=False``: legacy two-pass path — tiled partials kernel, then the
+    XLA sparse-table interior + merge (kept for A/B benchmarking).
+    """
+    if fused:
+        return fused_query(
+            s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx, l, r,
+            tile=tile, interpret=interpret,
+        )
     bs = s.x_blocks.shape[1]
     nb = s.x_blocks.shape[0]
     big = maxval(s.x_blocks.dtype)
@@ -51,7 +80,7 @@ def query(s: BlockRMQ, l: jax.Array, r: jax.Array, *, interpret: bool | None = N
     rl = r - br * bs
     lend = jnp.where(bl == br, rl, bs - 1)
 
-    pv, pi = rmq_partials(s.x_blocks, bl, br, ll, lend, rl, interpret=interpret)
+    pv, pi = rmq_partials(s.x_blocks, bl, br, ll, lend, rl, tile=tile, interpret=interpret)
 
     has_interior = (br - bl) >= 2
     ilo = jnp.clip(bl + 1, 0, nb - 1)
@@ -74,11 +103,19 @@ def query(s: BlockRMQ, l: jax.Array, r: jax.Array, *, interpret: bool | None = N
     return i, v
 
 
-def lane_query(s, l: jax.Array, r: jax.Array, *, interpret: bool | None = None):
+def lane_query(
+    s,
+    l: jax.Array,
+    r: jax.Array,
+    *,
+    tile: int = DEFAULT_TILE,
+    interpret: bool | None = None,
+):
     """Kernelized beyond-paper lane-RMQ query (mirrors core.lane_rmq.query).
 
-    The fused Pallas kernel answers the same-block case and the straddle
-    prefix/suffix candidates; the O(1) sparse-table interior stays in XLA.
+    The fused tiled Pallas kernel answers the same-block case and the
+    straddle prefix/suffix candidates (``tile`` queries per grid step); the
+    O(1) sparse-table interior stays in XLA.
     """
     from repro.core import lane_rmq, sparse_table
     from repro.core.block_rmq import _pick
@@ -94,7 +131,7 @@ def lane_query(s, l: jax.Array, r: jax.Array, *, interpret: bool | None = None):
 
     pv, pi = lane_partials(
         s.xs, s.suff_val, s.suff_idx, s.pref_val, s.pref_idx,
-        sl, sr, llo, rlo, interpret=interpret,
+        sl, sr, llo, rlo, tile=tile, interpret=interpret,
     )
 
     has_interior = (sr - sl) >= 2

@@ -1,14 +1,20 @@
 """Pallas TPU kernel: fused partial-block RMQ scans (query phase, level 1).
 
-The RT-core analogue: one grid step per query ("one ray per query"), with the
-query's two candidate blocks streamed HBM->VMEM by the pipeline. Scalar
+The RT-core analogue: ``tile`` queries per grid step ("a warp of rays"), with
+each query's two candidate blocks streamed HBM->VMEM by the pipeline. Scalar
 prefetch (SMEM) carries per-query block ids so the BlockSpec index_map can
 select *data-dependent* blocks — the TPU-idiomatic replacement for the BVH
 descent picking which leaf a ray visits: instead of a pointer walk, the DMA
-engine is programmed with the block id while the previous query computes.
+engine is programmed with the block id while the previous tile computes.
 
-Both partial scans (left tail, right head) are fused into one kernel so each
-query costs exactly two VMEM block loads and two masked vector mins.
+Both partial scans (left tail, right head) are fused into one kernel, and the
+grid is tiled ``(B // tile,)``: each step concatenates its ``tile`` left rows
+and ``tile`` right rows into ``(tile, bs)`` VMEM tiles so the VPU does two
+masked mins for the whole tile instead of per query, amortizing DMA issue and
+grid overhead. ``tile=1`` reproduces the original one-ray-per-step layout.
+
+For the fully fused path (interior sparse-table candidate + final merge in
+the same dispatch) see ``fused_query.py``.
 """
 
 from __future__ import annotations
@@ -22,40 +28,51 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.block_rmq import maxval
 
-__all__ = ["rmq_partials"]
+from .tiling import pad_to_tiles, row_spec, scalar_col, tile_out_specs
+from .tuning import DEFAULT_TILE
+
+__all__ = ["rmq_partials", "DEFAULT_TILE"]
 
 
-def _kernel(bl_ref, br_ref, ls_ref, le_ref, re_ref, xl_ref, xr_ref, val_ref, idx_ref):
+
+def _kernel(tile, bl_ref, br_ref, ls_ref, le_ref, re_ref, *refs):
+    xl_refs = refs[0:tile]
+    xr_refs = refs[tile : 2 * tile]
+    val_ref, idx_ref = refs[2 * tile], refs[2 * tile + 1]
+
     i = pl.program_id(0)
-    bs = xl_ref.shape[1]
-    big = maxval(xl_ref.dtype)
+    q0 = i * tile
+    bs = xl_refs[0].shape[1]
+    big = maxval(xl_refs[0].dtype)
     big_i = jnp.int32(bs)
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (tile, bs), 1)
 
-    bl = bl_ref[i]
-    br = br_ref[i]
+    def col(ref):
+        return scalar_col(ref, q0, tile)
 
-    # Left partial: x[bl, ls:le+1] (non-empty by construction).
-    xl = xl_ref[...]
-    ml = jnp.where((lanes >= ls_ref[i]) & (lanes <= le_ref[i]), xl, big)
-    lv = jnp.min(ml)
-    li = jnp.min(jnp.where(ml == lv, lanes, big_i))
+    bl, br, ls, le, re = col(bl_ref), col(br_ref), col(ls_ref), col(le_ref), col(re_ref)
+
+    # Left partials: x[bl, ls:le+1] (non-empty by construction), whole tile.
+    xl = jnp.concatenate([r[...] for r in xl_refs], axis=0)
+    ml = jnp.where((lanes >= ls[:, None]) & (lanes <= le[:, None]), xl, big)
+    lv = jnp.min(ml, axis=1)
+    li = jnp.min(jnp.where(ml == lv[:, None], lanes, big_i), axis=1)
     lg = bl * bs + li
 
-    # Right partial: x[br, 0:re+1], masked off for single-block queries.
-    xr = xr_ref[...]
-    mr = jnp.where(lanes <= re_ref[i], xr, big)
-    rv = jnp.min(mr)
+    # Right partials: x[br, 0:re+1], masked off for single-block queries.
+    xr = jnp.concatenate([r[...] for r in xr_refs], axis=0)
+    mr = jnp.where(lanes <= re[:, None], xr, big)
+    rv = jnp.min(mr, axis=1)
     rv = jnp.where(br > bl, rv, big)
-    ri = jnp.min(jnp.where(mr == rv, lanes, big_i))
+    ri = jnp.min(jnp.where(mr == rv[:, None], lanes, big_i), axis=1)
     rg = br * bs + ri
 
     take_l = lv <= rv  # left candidate has smaller indices: leftmost ties
-    val_ref[0, 0] = jnp.where(take_l, lv, rv)
-    idx_ref[0, 0] = jnp.where(take_l, lg, rg)
+    val_ref[...] = jnp.where(take_l, lv, rv)[:, None]
+    idx_ref[...] = jnp.where(take_l, lg, rg)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def rmq_partials(
     x_blocks: jax.Array,
     bl: jax.Array,
@@ -64,6 +81,7 @@ def rmq_partials(
     lend: jax.Array,
     rend: jax.Array,
     *,
+    tile: int = DEFAULT_TILE,
     interpret: bool | None = None,
 ):
     """Fused partial-block candidates. Returns (value (B,), global idx (B,))."""
@@ -73,25 +91,26 @@ def rmq_partials(
     _, bs = x_blocks.shape
     args = [a.astype(jnp.int32) for a in (bl, br, lstart, lend, rend)]
 
+    # Pad the batch to a whole number of tiles with trivial block-0 queries.
+    args, bp = pad_to_tiles(args, b, tile)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=5,
-        grid=(b,),
-        in_specs=[
-            pl.BlockSpec((1, bs), lambda i, bl, br, ls, le, re: (bl[i], 0)),
-            pl.BlockSpec((1, bs), lambda i, bl, br, ls, le, re: (br[i], 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i, *_: (i, 0)),
-        ],
+        grid=(bp // tile,),
+        in_specs=(
+            # data-dependent rows: x_blocks[bl[q]] then x_blocks[br[q]]
+            [row_spec((1, bs), 0, t, tile) for t in range(tile)]
+            + [row_spec((1, bs), 1, t, tile) for t in range(tile)]
+        ),
+        out_specs=tile_out_specs(tile),
     )
     val, idx = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, tile),
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((b, 1), x_blocks.dtype),
-            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), x_blocks.dtype),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(*args, x_blocks, x_blocks)
-    return val[:, 0], idx[:, 0]
+    )(*args, *([x_blocks] * (2 * tile)))
+    return val[:b, 0], idx[:b, 0]

@@ -1,0 +1,52 @@
+"""Shared scaffolding for the tiled query kernels.
+
+All three query kernels (``rmq_query``, ``lane_query``, ``fused_query``) use
+the same grid layout — ``tile`` queries per grid step, scalar-prefetch-driven
+data-dependent row DMAs — so the batch padding, the per-query row BlockSpec
+(with its ``t=t`` default-arg closure capture), the SMEM scalar stacking, and
+the (tile, 1) output specs live here once.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pad_to_tiles", "row_spec", "scalar_col", "tile_out_specs"]
+
+
+def pad_to_tiles(args, b: int, tile: int):
+    """Zero-pad each (B,) int array to a whole number of tiles.
+
+    The pad queries resolve to block/row 0 with trivial bounds — valid by
+    construction; callers slice outputs back to ``b``. Returns (args, bp).
+    """
+    bp = -(-b // tile) * tile
+    if bp != b:
+        args = [jnp.pad(a, (0, bp - b)) for a in args]
+    return args, bp
+
+
+def row_spec(block_shape, sel: int, t: int, tile: int) -> pl.BlockSpec:
+    """BlockSpec fetching one data-dependent row per query.
+
+    ``sel`` picks which scalar-prefetch operand carries the row id; ``t`` is
+    the query's slot within the tile. The defaults pin the loop variables at
+    definition time (the classic late-binding closure trap).
+    """
+    return pl.BlockSpec(
+        block_shape, lambda i, *s, t=t, sel=sel: (s[sel][i * tile + t], 0)
+    )
+
+
+def scalar_col(ref, q0, tile: int):
+    """Stack a tile's per-query scalars from an SMEM prefetch ref: (tile,)."""
+    return jnp.stack([ref[q0 + t] for t in range(tile)])
+
+
+def tile_out_specs(tile: int):
+    """The two (tile, 1) outputs (value, index) every query kernel emits."""
+    return [
+        pl.BlockSpec((tile, 1), lambda i, *s: (i, 0)),
+        pl.BlockSpec((tile, 1), lambda i, *s: (i, 0)),
+    ]

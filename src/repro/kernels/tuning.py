@@ -1,0 +1,9 @@
+"""Shared kernel tunables (single source of truth for the query kernels).
+
+``DEFAULT_TILE``: queries answered per grid step by the tiled query kernels
+(``rmq_query``, ``lane_query``, ``fused_query``). 8 packs a full sublane and
+was validated in interpret mode; ROADMAP carries the item to autotune it per
+(block_size, batch) on real TPU hardware.
+"""
+
+DEFAULT_TILE = 8

@@ -39,6 +39,7 @@ from repro.configs import SHAPES, cells, get_config
 from repro.launch import roofline as roofline_lib
 from repro.launch import sharding as shard_rules
 from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import set_mesh
 from repro.launch.specs import input_specs_for, model_flops
 from repro.optim.adamw import AdamWState
 
@@ -162,7 +163,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str | None,
     chips = 512 if multi else 256
     cfg = get_config(arch)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # 1) production artifact: proves lowering; memory + collective schedule
         lowered = lower_step(cfg, shape_name, mesh)
         compiled = lowered.compile()

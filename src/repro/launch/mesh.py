@@ -9,18 +9,36 @@ sees the full placeholder fleet.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
 
-__all__ = ["make_production_mesh", "make_mesh"]
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: no AxisType; make_mesh takes no axis_types
+    AxisType = None
+
+__all__ = ["make_production_mesh", "make_mesh", "set_mesh"]
+
+
+def _mk(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return _mk(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/examples (e.g. (2, 4) on 8 fake devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(shape))
+    return _mk(tuple(shape), tuple(axes))
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh, or the Mesh itself
+    on jax 0.4.x where Mesh is the context manager)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distributed, ref
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 
 
 def make_queries(rng, n: int, batch: int, dist: str):
@@ -49,7 +49,7 @@ def main():
     rng = np.random.default_rng(0)
     x = rng.random(args.n, dtype=np.float32)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         t0 = time.perf_counter()
         s = distributed.build_sharded(jnp.asarray(x), mesh, ("shard",), args.block_size)
         jax.block_until_ready(s.x_blocks)

@@ -16,7 +16,7 @@ import logging
 import jax
 
 from repro.configs import get_config, reduce_for_smoke
-from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh, set_mesh
 from repro.models import model as model_lib
 from repro.optim import adamw
 from repro.train import runner as runner_lib
@@ -50,7 +50,7 @@ def main():
         n = len(jax.devices())
         mesh = make_mesh((1, n), ("data", "model"))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model_lib.init_params(cfg, jax.random.PRNGKey(args.seed))
         opt_state = adamw.init(params)
         step_fn, info = make_train_step(

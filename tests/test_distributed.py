@@ -12,7 +12,7 @@ _CHILD = textwrap.dedent(
     """
     import numpy as np, jax, jax.numpy as jnp
     from repro.core import distributed, ref
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, set_mesh
 
     mesh = make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(1)
@@ -21,7 +21,7 @@ _CHILD = textwrap.dedent(
     l = rng.integers(0, n, 300); r = rng.integers(0, n, 300)
     l, r = np.minimum(l, r), np.maximum(l, r)
     gold = ref.rmq_ref(x, l, r)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         s = distributed.build_sharded(jnp.asarray(x), mesh, ("data", "model"), 128)
         qfn = distributed.make_query_fn(mesh, ("data", "model"))
         gi, gv = qfn(s, jnp.asarray(l), jnp.asarray(r))
@@ -36,14 +36,14 @@ _CHILD_TRAIN = textwrap.dedent(
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_config, reduce_for_smoke
     from repro.data import pipeline
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, set_mesh
     from repro.models import model
     from repro.optim import adamw
     from repro.train.steps import make_train_step
 
     cfg = reduce_for_smoke(get_config("granite-3-8b"))
     mesh = make_mesh((2, 4), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model.init_params(cfg, jax.random.PRNGKey(0))
         opt = adamw.init(params)
         step, info = make_train_step(cfg, mesh, lr_fn=lambda s: jnp.float32(1e-3),

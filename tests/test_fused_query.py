@@ -1,0 +1,120 @@
+"""Property sweeps for the fused tiled megakernel (kernels/fused_query.py).
+
+Seeded generator loops (hypothesis-style, no dependency) against
+``repro.core.ref``: leftmost-tie stress (constant arrays, repeated minima
+spanning block boundaries), degenerate queries (l == r, full range), batch
+sizes not divisible by the tile, and several tile widths.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import block_rmq, ref
+from repro.kernels import ops
+from repro.kernels.fused_query import fused_query
+
+
+def _fused(x, l, r, bs=128, tile=8):
+    s = block_rmq.build(jnp.asarray(x), bs)
+    idx, val = fused_query(
+        s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx,
+        jnp.asarray(l), jnp.asarray(r), tile=tile, interpret=True,
+    )
+    return np.asarray(idx), np.asarray(val)
+
+
+def _check(x, l, r, **kw):
+    l = np.asarray(l)
+    r = np.asarray(r)
+    idx, val = _fused(x, l, r, **kw)
+    gold = ref.rmq_ref(x, l, r)
+    np.testing.assert_array_equal(idx, gold)
+    np.testing.assert_allclose(val, np.asarray(x)[gold])
+
+
+def test_constant_array_prefers_leftmost():
+    """All-equal values: every query must return l (hardest tie case)."""
+    n = 700
+    rng = np.random.default_rng(0)
+    x = np.ones(n, np.float32)
+    a = rng.integers(0, n, 57)  # deliberately not a multiple of the tile
+    b = rng.integers(0, n, 57)
+    l, r = np.minimum(a, b), np.maximum(a, b)
+    idx, _ = _fused(x, l, r)
+    np.testing.assert_array_equal(idx, l)
+
+
+def test_repeated_minima_spanning_block_boundaries():
+    """A tied global minimum planted in every block, including boundary lanes."""
+    bs, nb = 128, 6
+    n = bs * nb
+    x = np.full(n, 5.0, np.float32)
+    # Tie sites: last lane of each block, first lane of the next block.
+    sites = []
+    for blk in range(nb - 1):
+        sites += [blk * bs + bs - 1, (blk + 1) * bs]
+    x[np.array(sites)] = -3.0
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, n, 100)
+    b = rng.integers(0, n, 100)
+    l, r = np.minimum(a, b), np.maximum(a, b)
+    _check(x, l, r)
+
+
+def test_point_and_full_range_queries():
+    rng = np.random.default_rng(2)
+    n = 1000
+    x = rng.integers(0, 9, n).astype(np.float32)
+    pts = rng.integers(0, n, 33)
+    _check(x, pts, pts)  # l == r
+    _check(x, np.zeros(4, np.int64), np.full(4, n - 1))  # full range
+
+
+@pytest.mark.parametrize("batch", [1, 3, 7, 8, 9, 63])
+def test_batch_not_divisible_by_tile(batch):
+    """Padded tail queries must not leak into the first `batch` outputs."""
+    rng = np.random.default_rng(batch)
+    n = 513
+    x = rng.integers(-4, 5, n).astype(np.float32)
+    a = rng.integers(0, n, batch)
+    b = rng.integers(0, n, batch)
+    _check(x, np.minimum(a, b), np.maximum(a, b), tile=8)
+
+
+@pytest.mark.parametrize("tile", [1, 2, 4, 16])
+def test_tile_widths(tile):
+    rng = np.random.default_rng(tile)
+    n = 2000
+    x = rng.integers(0, 6, n).astype(np.float32)
+    a = rng.integers(0, n, 40)
+    b = rng.integers(0, n, 40)
+    _check(x, np.minimum(a, b), np.maximum(a, b), tile=tile)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_property_sweep(dtype):
+    """Random arrays with dense ties, random batches, several sizes."""
+    rng = np.random.default_rng(42)
+    for _ in range(6):
+        n = int(rng.integers(1, 1500))
+        x = rng.integers(-3, 4, n).astype(dtype)
+        q = int(rng.integers(1, 48))
+        a = rng.integers(0, n, q)
+        b = rng.integers(0, n, q)
+        _check(x, np.minimum(a, b), np.maximum(a, b))
+
+
+def test_ops_query_routes_through_fused_and_matches_legacy():
+    """ops.query (fused) must be bit-identical to the legacy two-pass path."""
+    rng = np.random.default_rng(3)
+    n = 3000
+    x = rng.standard_normal(n).astype(np.float32)
+    a = rng.integers(0, n, 90)
+    b = rng.integers(0, n, 90)
+    l, r = np.minimum(a, b), np.maximum(a, b)
+    s = ops.build(jnp.asarray(x), 128, interpret=True)
+    i1, v1 = ops.query(s, jnp.asarray(l), jnp.asarray(r), interpret=True)
+    i2, v2 = ops.query(s, jnp.asarray(l), jnp.asarray(r), fused=False, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))

@@ -1,0 +1,83 @@
+"""Hybrid dispatcher: bit-identical results + correct scatter-back ordering."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import block_rmq, hybrid, ref
+
+
+def _mixed_batch(rng, n, b, threshold):
+    """Half short ranges (<= threshold), half long, interleaved randomly."""
+    length_short = rng.integers(1, threshold + 1, b // 2)
+    length_long = rng.integers(threshold + 1, n + 1, b - b // 2)
+    length = np.concatenate([length_short, length_long])
+    rng.shuffle(length)
+    l = rng.integers(0, np.maximum(n - length + 1, 1), b)
+    r = np.minimum(l + length - 1, n - 1)
+    return l, r
+
+
+@pytest.mark.parametrize("n", [300, 1000, 4096])
+def test_hybrid_bit_identical_to_blocked(n, rng):
+    x = rng.integers(0, 11, n).astype(np.float32)  # dense ties
+    s = hybrid.build(jnp.asarray(x), 128, use_kernels=False)
+    sb = block_rmq.build(jnp.asarray(x), 128)
+    l, r = _mixed_batch(rng, n, 256, s.threshold)
+    hi, hv = hybrid.query(s, l, r)
+    bi, bv = block_rmq.query(sb, jnp.asarray(l), jnp.asarray(r))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(bi))
+    np.testing.assert_array_equal(np.asarray(hv), np.asarray(bv))
+
+
+def test_hybrid_kernel_path_matches_oracle(rng):
+    """Short ranges through the fused Pallas megakernel (interpret off-TPU)."""
+    n = 1500
+    x = rng.integers(-5, 6, n).astype(np.float32)
+    s = hybrid.build(jnp.asarray(x), 128, use_kernels=True)
+    l, r = _mixed_batch(rng, n, 64, s.threshold)
+    hi, hv = hybrid.query(s, l, r)
+    gold = ref.rmq_ref(x, l, r)
+    np.testing.assert_array_equal(np.asarray(hi), gold)
+    np.testing.assert_allclose(np.asarray(hv), x[gold])
+
+
+def test_scatter_back_ordering():
+    """Known alternating short/long pattern: outputs stay in batch order."""
+    n = 1024
+    x = np.arange(n, 0, -1).astype(np.float32)  # strictly decreasing: min at r
+    s = hybrid.build(jnp.asarray(x), 128, use_kernels=False, threshold=8)
+    # Even positions short (len 2 <= 8), odd positions long (len 512 > 8).
+    b = 40
+    l = np.empty(b, np.int64)
+    r = np.empty(b, np.int64)
+    l[0::2] = np.arange(20) * 3
+    r[0::2] = l[0::2] + 1
+    l[1::2] = np.arange(20) * 5
+    r[1::2] = l[1::2] + 511
+    idx, val = hybrid.query(s, l, r)
+    np.testing.assert_array_equal(np.asarray(idx), r)  # min of decreasing = r
+    np.testing.assert_allclose(np.asarray(val), x[r])
+
+
+def test_all_short_and_all_long_batches(rng):
+    """Single-sided batches must not call the other engine's path at all."""
+    n = 2048
+    x = rng.standard_normal(n).astype(np.float32)
+    s = hybrid.build(jnp.asarray(x), 128, use_kernels=False, threshold=64)
+    for lo, hi in [(1, 64), (65, n)]:  # all-short, then all-long
+        length = rng.integers(lo, hi + 1, 50)
+        l = rng.integers(0, np.maximum(n - length + 1, 1), 50)
+        r = np.minimum(l + length - 1, n - 1)
+        idx, val = hybrid.query(s, l, r)
+        gold = ref.rmq_ref(x, l, r)
+        np.testing.assert_array_equal(np.asarray(idx), gold)
+        np.testing.assert_allclose(np.asarray(val), x[gold])
+
+
+def test_threshold_default_and_calibrate_smoke():
+    s = hybrid.build(jnp.zeros(10_000, jnp.float32), 128, use_kernels=False)
+    assert s.threshold == 100  # sqrt(n) default
+    # 0 (all-long) and 4096 (all-short) are honest degenerate measurements.
+    thr = hybrid.calibrate(4096, batch=256, use_kernels=False, repeats=1)
+    assert 0 <= thr <= 4096

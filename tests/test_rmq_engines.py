@@ -1,10 +1,15 @@
-"""Core RMQ engines vs. the numpy oracle (exact leftmost-argmin semantics)."""
+"""Core RMQ engines vs. the numpy oracle (exact leftmost-argmin semantics).
+
+Engines are enumerated from ``repro.core.registry`` so every registered
+engine — including the fused Pallas megakernel and the range-adaptive hybrid
+dispatcher — is swept against the oracle automatically.
+"""
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import block_rmq, exhaustive, lane_rmq, lca, ref, sparse_table
+from repro.core import block_rmq, ref, registry
 
 
 def _queries(rng, n, b):
@@ -13,27 +18,21 @@ def _queries(rng, n, b):
     return np.minimum(l, r), np.maximum(l, r)
 
 
-ENGINES = ["sparse_table", "block128", "block256", "lane", "lca", "exhaustive"]
+ENGINES = list(registry.names())
+# Keep the interpret-mode Pallas engine out of the big n-sweep (it is a
+# Python emulation off-TPU — functional, but slow); it gets its own sweep in
+# tests/test_fused_query.py plus the tie/paper cases below.
+SWEEP_ENGINES = [e for e in ENGINES if e != "fused128"]
 
 
 def _run(engine, x, l, r):
-    xj, lj, rj = jnp.asarray(x), jnp.asarray(l), jnp.asarray(r)
-    if engine == "sparse_table":
-        return np.asarray(sparse_table.query(sparse_table.build(xj), lj, rj))
-    if engine == "block128":
-        return np.asarray(block_rmq.query(block_rmq.build(xj, 128), lj, rj)[0])
-    if engine == "block256":
-        return np.asarray(block_rmq.query(block_rmq.build(xj, 256), lj, rj)[0])
-    if engine == "lane":
-        return np.asarray(lane_rmq.query(lane_rmq.build(xj), lj, rj)[0])
-    if engine == "lca":
-        return np.asarray(lca.query(lca.build(x), lj, rj))
-    if engine == "exhaustive":
-        return np.asarray(exhaustive.rmq_exhaustive(xj, lj, rj, query_chunk=64))
-    raise ValueError(engine)
+    eng = registry.get(engine)
+    s = eng.build(jnp.asarray(x))
+    idx, _ = eng.query(s, jnp.asarray(l), jnp.asarray(r))
+    return np.asarray(idx)
 
 
-@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("engine", SWEEP_ENGINES)
 @pytest.mark.parametrize("n", [1, 2, 127, 128, 129, 1000, 4096])
 def test_engine_matches_oracle(engine, n, rng):
     x = rng.integers(0, 17, n).astype(np.float32)  # dense ties
@@ -43,7 +42,7 @@ def test_engine_matches_oracle(engine, n, rng):
     np.testing.assert_array_equal(got, gold)
 
 
-@pytest.mark.parametrize("engine", ["block128", "lane", "lca"])
+@pytest.mark.parametrize("engine", ["block128", "lane", "lca", "hybrid"])
 def test_float_values(engine, rng):
     n = 777
     x = rng.standard_normal(n).astype(np.float32)
@@ -73,10 +72,17 @@ def test_block_size_must_be_lane_aligned():
         block_rmq.build(jnp.zeros(100), 100)
 
 
-def test_values_returned_match_indices(rng):
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        registry.get("definitely-not-an-engine")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_values_returned_match_indices(engine, rng):
     n = 2048
     x = rng.integers(0, 50, n).astype(np.float32)
     l, r = _queries(rng, n, 100)
-    s = block_rmq.build(jnp.asarray(x), 128)
-    idx, val = block_rmq.query(s, jnp.asarray(l), jnp.asarray(r))
+    eng = registry.get(engine)
+    s = eng.build(jnp.asarray(x))
+    idx, val = eng.query(s, jnp.asarray(l), jnp.asarray(r))
     np.testing.assert_allclose(np.asarray(val), x[np.asarray(idx)])

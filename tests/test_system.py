@@ -11,7 +11,7 @@ import pytest
 from repro import checkpoint
 from repro.configs import get_config, reduce_for_smoke
 from repro.data import packing, pipeline
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, set_mesh
 from repro.models import model
 from repro.optim import adamw, compress
 from repro.train import runner as runner_lib
@@ -33,7 +33,7 @@ def _setup(arch="qwen2-1.5b", steps=12):
 
 def test_training_reduces_loss():
     cfg, mesh, params, opt, step_fn = _setup(steps=30)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         losses = []
         for s in range(30):
             batch = pipeline.synthetic_batch(cfg, 4, 32, seed=7, step=0)  # same batch
@@ -55,7 +55,7 @@ def test_runner_fault_recovery(tmp_path):
     rcfg = runner_lib.RunnerConfig(
         total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=4, seed=3, max_retries=5
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         report = runner_lib.run_training(
             step_fn, params, opt, cfg, 4, 32, rcfg, fault_hook=fault_hook
         )
@@ -157,7 +157,7 @@ def test_microbatch_accumulation_matches_single():
     mesh = make_mesh((1, 1), ("data", "model"))
     params = model.init_params(cfg, KEY)
     batch = pipeline.synthetic_batch(cfg, 4, 32, seed=0, step=0)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         s1, _ = make_train_step(cfg, mesh, lr_fn=lambda s: jnp.float32(0.0), batch=4, seq_len=32)
         s2, _ = make_train_step(
             cfg, mesh, lr_fn=lambda s: jnp.float32(0.0), batch=4, seq_len=32, microbatches=2

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a seconds-long smoke of the perf path.
+#
+#   bash tools/check.sh            # from the repo root
+#
+# 1. tier-1: the full pytest suite (ROADMAP "Tier-1 verify").
+# 2. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+#    CPU — Pallas kernels validate through the test suite; the smoke catches
+#    perf-path regressions like import errors, shape breaks, or a suite that
+#    stopped emitting rows).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== perf smoke (fig12, smoke sizes) =="
+out=$(timeout 300 python -m benchmarks.run --only fig12 --smoke)
+echo "$out"
+rows=$(echo "$out" | grep -c '^fig12/' || true)
+if [ "$rows" -lt 4 ]; then
+    echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
+    exit 1
+fi
+echo "OK: tier-1 green, fig12 smoke emitted $rows rows"
