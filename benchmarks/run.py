@@ -17,7 +17,8 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default="",
-        help="comma list: fig12,fig13,fig10,fig14,table2,roofline,crossover",
+        help="comma list: fig12,fig13,fig10,fig14,table2,roofline,crossover,"
+        "sharded_hybrid",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -38,6 +39,7 @@ def main() -> None:
         memory_usage,
         mesh_scaling,
         roofline_report,
+        sharded_hybrid,
         time_per_rmq,
     )
 
@@ -51,6 +53,7 @@ def main() -> None:
         "fig14": mesh_scaling.run,
         "roofline": roofline_report.run,
         "crossover": hybrid_crossover.run,
+        "sharded_hybrid": sharded_hybrid.run,
     }
     if only:
         unknown = only - set(suites)

@@ -1,0 +1,79 @@
+"""Sharded range-adaptive hybrid sweep: devices x range distribution.
+
+Extends fig14's shard-scaling story to the fused engine (core/sharded_hybrid):
+for each fake-device count and each §6.4 range distribution, serve a batch
+through the range-adaptive sharded engine and report ns/RMQ. The small/large
+regimes exercise the single-constituent fast paths (sharded blocked / sharded
+sparse table); medium mixes regimes and exercises the partition+scatter-back.
+One batch-sharded-mode row per device count shows the replicated-structure /
+sharded-queries dual.
+
+Subprocess per device count (XLA fixes the device count at first jax import).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from . import common
+from .common import emit
+
+_BATCH = 8192
+
+_CHILD = r"""
+import os, time, numpy as np, jax, jax.numpy as jnp
+from repro.core import sharded_hybrid
+from repro.launch.mesh import make_mesh
+from benchmarks.common import make_queries
+n_dev = len(jax.devices())
+mesh = make_mesh((n_dev,), ("shard",))
+rng = np.random.default_rng(0)
+n = int(os.environ["RMQ_SHYBRID_BENCH_N"])
+batch = int(os.environ["RMQ_SHYBRID_BENCH_B"])
+x = rng.random(n, dtype=np.float32)
+for mode in ("shard_structure", "shard_batch"):
+    s = sharded_hybrid.build(jnp.asarray(x), mesh, ("shard",), 1024, mode=mode)
+    dists = ("small", "medium", "large") if mode == "shard_structure" else ("medium",)
+    for dist in dists:
+        l, r = make_queries(rng, n, batch, dist)
+        out = sharded_hybrid.query(s, l, r)  # warmup / compile
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = sharded_hybrid.query(s, l, r)
+        jax.block_until_ready(out)
+        print(f"{mode},{dist},{(time.perf_counter() - t0) / 5}")
+"""
+
+
+def run():
+    devices = [1, 2] if common.SMOKE else [1, 2, 4, 8]
+    n = 1 << 16 if common.SMOKE else 1 << 20
+    batch = 2048 if common.SMOKE else _BATCH
+    for n_dev in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+        env["PYTHONPATH"] = "src:."
+        env["RMQ_SHYBRID_BENCH_N"] = str(n)
+        env["RMQ_SHYBRID_BENCH_B"] = str(batch)
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD], env=env, capture_output=True, text=True
+        )
+        if out.returncode != 0:
+            emit(f"sharded_hybrid/shards={n_dev}", 0.0, "FAILED")
+            continue
+        for line in out.stdout.strip().splitlines():
+            mode, dist, t = line.split(",")
+            t = float(t)
+            tag = "qshard/" if mode == "shard_batch" else ""
+            emit(
+                f"sharded_hybrid/shards={n_dev}/{tag}dist={dist}",
+                t / batch,
+                f"{t/batch*1e9:.1f}ns_per_rmq",
+            )
+
+
+if __name__ == "__main__":
+    run()

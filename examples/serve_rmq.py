@@ -1,7 +1,10 @@
-"""End-to-end serving driver: distributed RMQ engine over a device mesh,
+"""End-to-end serving driver: distributed RMQ engines over a device mesh,
 serving batched queries under the paper's three range distributions.
 
-Run with multiple fake devices to exercise the collective merge:
+Runs the plain mesh-sharded blocked engine on the small/large regimes, then
+the sharded range-adaptive hybrid (``--engine sharded_hybrid``) on a mixed
+regime — in both its structure-sharded and batch-sharded (``--qshard``)
+modes. Run with multiple fake devices to exercise the collective merges:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_rmq.py
@@ -12,13 +15,17 @@ import sys
 from repro.launch import serve
 
 
+def _run(*extra):
+    sys.argv = [sys.argv[0], "--n", str(1 << 20), "--batch", "8192",
+                "--batches", "8", *extra]
+    serve.main()
+
+
 def main():
-    sys.argv = [sys.argv[0], "--n", str(1 << 20), "--batch", "8192",
-                "--batches", "8", "--dist", "small"]
-    serve.main()
-    sys.argv = [sys.argv[0], "--n", str(1 << 20), "--batch", "8192",
-                "--batches", "8", "--dist", "large"]
-    serve.main()
+    _run("--dist", "small")
+    _run("--dist", "large")
+    _run("--dist", "medium", "--engine", "sharded_hybrid")
+    _run("--dist", "medium", "--engine", "sharded_hybrid", "--qshard")
 
 
 if __name__ == "__main__":

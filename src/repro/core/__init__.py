@@ -12,6 +12,11 @@ Engines:
     small/large crossover: short ranges -> blocked path, long ranges ->
     sparse-table path, exact scatter-back merge.
   * ``distributed``— mesh-sharded engine (level-3, multi-pod).
+  * ``sharded_hybrid`` — the two fused: range-adaptive dispatch where each
+    regime sub-batch is served by a mesh-sharded constituent (blocked /
+    global column-sharded doubling table), plus a batch-sharded mode.
+  * ``calib_cache`` — persistent JSON cache of calibrated crossover
+    thresholds, keyed by (n, block_size, backend, n_devices).
 
 ``registry`` exposes all single-host engines behind one uniform
 ``(build, query) -> (idx, val)`` interface for tests and benchmarks.
@@ -19,6 +24,7 @@ Engines:
 
 from . import (
     block_rmq,
+    calib_cache,
     distributed,
     exhaustive,
     hybrid,
@@ -26,11 +32,13 @@ from . import (
     lca,
     ref,
     registry,
+    sharded_hybrid,
     sparse_table,
 )
 
 __all__ = [
     "block_rmq",
+    "calib_cache",
     "distributed",
     "exhaustive",
     "hybrid",
@@ -38,5 +46,6 @@ __all__ = [
     "lca",
     "ref",
     "registry",
+    "sharded_hybrid",
     "sparse_table",
 ]

@@ -1,0 +1,120 @@
+"""Persistent calibration-threshold cache (ROADMAP's calibration-cache item).
+
+``hybrid.calibrate`` measures the blocked-vs-sparse-table crossover by timing
+both constituent paths — seconds of wall-clock per (n, block_size) point.
+Re-measuring at every build is waste: the crossover is a property of the
+machine, not of the process. This module persists measured thresholds in a
+small JSON file keyed by ``(n, block_size, backend, n_devices)`` so builds
+hit the cache and only a first-ever configuration pays the measurement.
+
+File format (atomic rename on write):
+
+    {"version": 1, "entries": {"n=1048576/bs=128/backend=tpu/ndev=8": 1024}}
+
+A version mismatch marks every entry stale: ``load`` misses, and the next
+``store`` drops the old entries wholesale. Corrupt or unreadable files are
+treated as empty — a cache must never turn into a crash.
+
+Path resolution: explicit ``path`` argument > ``RMQ_CALIB_CACHE`` env var >
+``~/.cache/rtxrmq-tpu/calibration.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+
+import jax
+
+__all__ = [
+    "CACHE_VERSION",
+    "ENV_VAR",
+    "cache_key",
+    "default_path",
+    "get_threshold",
+    "load",
+    "store",
+]
+
+CACHE_VERSION = 1
+ENV_VAR = "RMQ_CALIB_CACHE"
+
+
+def default_path() -> Path:
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "rtxrmq-tpu" / "calibration.json"
+
+
+def cache_key(
+    n: int, block_size: int, *, backend: str | None = None, n_devices: int | None = None
+) -> str:
+    """The cache key: array size, block size, backend, and device count."""
+    if backend is None:
+        backend = jax.default_backend()
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    return f"n={n}/bs={block_size}/backend={backend}/ndev={n_devices}"
+
+
+def _read(path: Path) -> dict:
+    """Entries dict, or {} on missing / corrupt / stale-version files."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    if not isinstance(data, dict) or data.get("version") != CACHE_VERSION:
+        return {}  # stale format: every entry is a miss
+    entries = data.get("entries")
+    return entries if isinstance(entries, dict) else {}
+
+
+def load(key: str, path: str | Path | None = None) -> int | None:
+    """Cached threshold for ``key``, or None on miss/stale/corrupt."""
+    entries = _read(Path(path) if path is not None else default_path())
+    val = entries.get(key)
+    return int(val) if val is not None else None
+
+
+def store(key: str, threshold: int, path: str | Path | None = None) -> None:
+    """Persist ``key -> threshold``, keeping other same-version entries."""
+    p = Path(path) if path is not None else default_path()
+    p.parent.mkdir(parents=True, exist_ok=True)
+    entries = _read(p)  # drops stale-version/corrupt content wholesale
+    entries[key] = int(threshold)
+    fd, tmp = tempfile.mkstemp(dir=p.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": entries}, f, indent=2)
+        os.replace(tmp, p)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def get_threshold(
+    n: int,
+    block_size: int,
+    *,
+    backend: str | None = None,
+    n_devices: int | None = None,
+    path: str | Path | None = None,
+    **calibrate_kw,
+) -> int:
+    """Cached crossover threshold; measures via ``hybrid.calibrate`` on miss."""
+    key = cache_key(n, block_size, backend=backend, n_devices=n_devices)
+    hit = load(key, path)
+    if hit is not None:
+        return hit
+    from . import hybrid  # deferred: hybrid also consumes this module
+
+    thr = hybrid.calibrate(n, block_size=block_size, **calibrate_kw)
+    store(key, thr, path)
+    return thr

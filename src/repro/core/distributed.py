@@ -9,6 +9,26 @@ value-matching shards — exact leftmost semantics with only min collectives).
 
 Works on any mesh: the array is sharded over *all* given axes flattened, so
 the same code runs a 16x16 pod and a (pod=2, 16, 16) multi-pod mesh.
+
+Two orthogonal distribution strategies are provided (DESIGN.md §6):
+
+* **Structure-sharded** (``build_sharded`` / ``build_sharded_st`` +
+  ``make_query_fn`` / ``make_st_query_fn``): the *array* is sharded, the
+  query batch is replicated, and every device answers every query against
+  its chunk; shards merge with the two-pmin leftmost trick. Memory scales
+  with device count; per-query work is replicated.
+* **Batch-sharded** (``build_replicated`` / ``build_replicated_st`` + the
+  same query factories with ``batch_sharded=True``): the *query batch* is
+  sharded over the flattened mesh axes and each device answers its slice
+  locally against a replicated structure. Serving throughput scales with
+  device count; each query is answered by exactly one device, so the merge
+  degenerates from the two-pmin reduction to a collective-free concatenation
+  along the sharded batch dim.
+
+The sharded sparse-table path (``ShardedSparseTable``) is the long-range
+constituent of ``core.sharded_hybrid``: the doubling table is built globally
+and column-sharded, each lookup column is owned by exactly one device, and
+the two window candidates merge with the same pmin trick.
 """
 
 from __future__ import annotations
@@ -35,13 +55,33 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
     kw = {_SHARD_MAP_CHECK_KW: check_vma}
     return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
-from . import block_rmq
+from typing import NamedTuple
+
+from . import block_rmq, sparse_table
 from .block_rmq import BlockRMQ, maxval
 from .sparse_table import SparseTable
 
-__all__ = ["build_sharded", "make_query_fn", "pad_to_shards"]
+__all__ = [
+    "ShardedSparseTable",
+    "build_replicated",
+    "build_replicated_st",
+    "build_sharded",
+    "build_sharded_st",
+    "make_query_fn",
+    "make_st_query_fn",
+    "num_shards",
+    "pad_to_shards",
+]
 
 _INT_BIG = jnp.int32(2**31 - 1)
+
+
+def num_shards(mesh: Mesh, axis_names: Sequence[str]) -> int:
+    """Product of the given mesh axes — the flattened shard count."""
+    num = 1
+    for a in axis_names:
+        num *= mesh.shape[a]
+    return num
 
 
 def _axis_size(name: str):
@@ -68,9 +108,7 @@ def pad_to_shards(x: jax.Array, num_shards: int, block_size: int) -> jax.Array:
 def build_sharded(x: jax.Array, mesh: Mesh, axis_names: Sequence[str], block_size: int) -> BlockRMQ:
     """Build per-shard blocked structures; leaves are sharded on the block dim."""
     axis_names = tuple(axis_names)
-    num = 1
-    for a in axis_names:
-        num *= mesh.shape[a]
+    num = num_shards(mesh, axis_names)
     x = pad_to_shards(x, num, block_size)
 
     def local_build(x_local):
@@ -94,9 +132,54 @@ def build_sharded(x: jax.Array, mesh: Mesh, axis_names: Sequence[str], block_siz
     return fn(x.reshape(num, -1))
 
 
-def make_query_fn(mesh: Mesh, axis_names: Sequence[str]):
-    """Jitted batched distributed query: (sharded BlockRMQ, l, r) -> (idx, val)."""
+def _block_rmq_specs(spec_blocks, spec_table):
+    """BlockRMQ pytree of PartitionSpecs: block dim `spec_blocks`, tables too."""
+    return BlockRMQ(
+        x_blocks=spec_blocks,
+        bmin_val=spec_blocks,
+        bmin_gidx=spec_blocks,
+        st=SparseTable(idx=spec_table, x=spec_blocks),
+    )
+
+
+def _pad_batch(l, r, num: int):
+    """Pad a query batch with trivial (0, 0) queries to a multiple of `num`."""
+    b = l.shape[0]
+    bp = -(-b // num) * num
+    return jnp.pad(l, (0, bp - b)), jnp.pad(r, (0, bp - b)), b
+
+
+def make_query_fn(mesh: Mesh, axis_names: Sequence[str], *, batch_sharded: bool = False):
+    """Jitted batched distributed query: (BlockRMQ, l, r) -> (idx, val).
+
+    ``batch_sharded=False`` (default): the structure is sharded
+    (``build_sharded``), queries are replicated, every device answers every
+    query against its chunk, and shards merge with two pmin all-reduces.
+
+    ``batch_sharded=True``: the structure is replicated (``build_replicated``),
+    the query batch is sharded over the flattened mesh axes, and each device
+    answers only its ``B / num_shards`` slice — work scales with device count
+    and the outputs concatenate along the sharded batch dim with no
+    collective. Batches are padded internally to a shard multiple.
+    """
     axis_names = tuple(axis_names)
+
+    if batch_sharded:
+        num = num_shards(mesh, axis_names)
+        inner = shard_map(
+            block_rmq.query,
+            mesh=mesh,
+            in_specs=(_block_rmq_specs(P(), P()), P(axis_names), P(axis_names)),
+            out_specs=(P(axis_names), P(axis_names)),
+            check_vma=False,
+        )
+
+        def fn(s: BlockRMQ, l, r):
+            lp, rp, b = _pad_batch(l, r, num)
+            idx, val = inner(s, lp, rp)
+            return idx[:b], val[:b]
+
+        return jax.jit(fn)
 
     def local_query(s: BlockRMQ, l, r):
         bs = s.x_blocks.shape[1]
@@ -118,12 +201,7 @@ def make_query_fn(mesh: Mesh, axis_names: Sequence[str]):
         return imin, vmin
 
     in_specs = (
-        BlockRMQ(
-            x_blocks=P(axis_names),
-            bmin_val=P(axis_names),
-            bmin_gidx=P(axis_names),
-            st=SparseTable(idx=P(None, axis_names), x=P(axis_names)),
-        ),
+        _block_rmq_specs(P(axis_names), P(None, axis_names)),
         P(),  # queries replicated
         P(),
     )
@@ -131,6 +209,128 @@ def make_query_fn(mesh: Mesh, axis_names: Sequence[str]):
         local_query,
         mesh=mesh,
         in_specs=in_specs,
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def build_replicated(x: jax.Array, mesh: Mesh, block_size: int) -> BlockRMQ:
+    """Full blocked structure, replicated on every device (batch-sharded mode).
+
+    The memory/throughput dual of ``build_sharded``: every device holds the
+    whole structure so it can answer any query slice locally.
+    """
+    s = block_rmq.build(x, block_size)
+    return jax.device_put(s, jax.sharding.NamedSharding(mesh, P()))
+
+
+class ShardedSparseTable(NamedTuple):
+    """Globally-built doubling table, column-sharded over the mesh.
+
+    Unlike the per-shard tables inside ``build_sharded`` (whose windows never
+    cross a chunk boundary), this table is built over the *full* array and
+    then sharded by column, so any O(1) window lookup is answered by exactly
+    the device owning that column. ``val`` materializes ``x[idx]`` so a
+    lookup never needs a cross-shard value gather.
+    """
+
+    idx: jax.Array  # (K, n_pad) int32 leftmost argmin per doubling window
+    val: jax.Array  # (K, n_pad) the corresponding window-min values
+
+
+def build_sharded_st(x: jax.Array, mesh: Mesh, axis_names: Sequence[str]) -> ShardedSparseTable:
+    """Build the global doubling table and shard its columns over the mesh.
+
+    The *steady-state* layout is sharded (K*n/D entries per device), but the
+    build itself materializes the full (K, n) table on the default device
+    before the device_put — the build-time memory ceiling is one device's
+    table, not one shard's. A distributed build (level-k halo exchange under
+    shard_map) lifts that ceiling; see ROADMAP.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    n = x.shape[0]
+    n_pad = -(-n // num) * num
+    # Pad columns with +inf values; queries never index past n-1 and every
+    # window [c, c + 2^k) they touch lies inside [l, r], so pads never win.
+    xp = jnp.pad(x, (0, n_pad - n), constant_values=maxval(x.dtype))
+    st = sparse_table.build(xp)
+    sh = jax.sharding.NamedSharding(mesh, P(None, axis_names))
+    return ShardedSparseTable(
+        idx=jax.device_put(st.idx, sh),
+        val=jax.device_put(xp[st.idx], sh),
+    )
+
+
+def build_replicated_st(x: jax.Array, mesh: Mesh) -> SparseTable:
+    """Full doubling table replicated on every device (batch-sharded mode)."""
+    st = sparse_table.build(x)
+    return jax.device_put(st, jax.sharding.NamedSharding(mesh, P()))
+
+
+def make_st_query_fn(mesh: Mesh, axis_names: Sequence[str], *, batch_sharded: bool = False):
+    """Jitted distributed sparse-table query -> (idx, val).
+
+    ``batch_sharded=False``: takes a ``ShardedSparseTable`` (column-sharded
+    global table), queries replicated. Each query needs two window lookups
+    (columns ``l`` and ``r - 2^k + 1``); each column is owned by exactly one
+    device, so non-owners contribute +inf/int-max and two pmins recover both
+    candidates everywhere, then the standard leftmost-tie pick (prefer the
+    left window on value ties) finishes the query.
+
+    ``batch_sharded=True``: takes a replicated ``SparseTable``
+    (``build_replicated_st``), the query batch is sharded, and each device
+    answers its slice with the plain O(1) lookup plus a local value gather.
+    """
+    axis_names = tuple(axis_names)
+
+    if batch_sharded:
+        num = num_shards(mesh, axis_names)
+
+        def local_st(t: SparseTable, l, r):
+            idx = sparse_table.query(t, l, r)
+            return idx, t.x[idx]
+
+        inner = shard_map(
+            local_st,
+            mesh=mesh,
+            in_specs=(SparseTable(idx=P(), x=P()), P(axis_names), P(axis_names)),
+            out_specs=(P(axis_names), P(axis_names)),
+            check_vma=False,
+        )
+
+        def fn(t: SparseTable, l, r):
+            lp, rp, b = _pad_batch(l, r, num)
+            idx, val = inner(t, lp, rp)
+            return idx[:b], val[:b]
+
+        return jax.jit(fn)
+
+    def local_query(t: ShardedSparseTable, l, r):
+        cols = t.idx.shape[1]  # columns owned by this shard
+        c0 = _flat_axis_index(axis_names) * cols
+        big = maxval(t.val.dtype)
+        l = l.astype(jnp.int32)
+        r = r.astype(jnp.int32)
+        k = sparse_table.exact_log2(r - l + 1)
+        # The two covering windows start at columns l and r - 2^k + 1.
+        cand = jnp.stack([l, r - jnp.left_shift(jnp.int32(1), k) + 1])  # (2, B)
+        owned = (cand >= c0) & (cand < c0 + cols)
+        cl = jnp.clip(cand - c0, 0, cols - 1)
+        kk = jnp.broadcast_to(k[None, :], cand.shape)
+        v = jnp.where(owned, t.val[kk, cl], big)
+        i = jnp.where(owned, t.idx[kk, cl], _INT_BIG)
+        # One owner per column: the pmins select the owner's candidate.
+        v = jax.lax.pmin(v, axis_names)
+        i = jax.lax.pmin(i, axis_names)
+        take_left = v[0] <= v[1]  # left window on ties -> exact leftmost
+        return jnp.where(take_left, i[0], i[1]), jnp.where(take_left, v[0], v[1])
+
+    fn = shard_map(
+        local_query,
+        mesh=mesh,
+        in_specs=(ShardedSparseTable(idx=P(None, axis_names), val=P(None, axis_names)), P(), P()),
         out_specs=(P(), P()),
         check_vma=False,
     )

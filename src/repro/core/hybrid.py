@@ -31,7 +31,14 @@ import numpy as np
 from . import block_rmq, sparse_table
 from .block_rmq import BlockRMQ
 
-__all__ = ["HybridRMQ", "build", "query", "calibrate", "DEFAULT_THRESHOLD_FRAC"]
+__all__ = [
+    "HybridRMQ",
+    "build",
+    "query",
+    "calibrate",
+    "dispatch_by_length",
+    "DEFAULT_THRESHOLD_FRAC",
+]
 
 # Fallback threshold when no calibration is run: the paper's small/medium
 # boundary sits near n**0.5 for the sizes it sweeps; ranges shorter than
@@ -55,15 +62,33 @@ def build(
     x: jax.Array,
     block_size: int = 128,
     *,
-    threshold: int | None = None,
+    threshold: int | str | None = None,
     use_kernels: bool | None = None,
 ) -> HybridRMQ:
-    """Build both constituent engines. ``threshold=None`` -> sqrt(n) default."""
+    """Build both constituent engines.
+
+    ``threshold=None`` -> deterministic sqrt(n) default (never touches
+    machine state); ``"cached"`` -> the persistent JSON cache
+    (``calib_cache``) with the sqrt(n) fallback, never measuring;
+    ``"calibrated"`` -> the cache, measuring via ``calibrate`` only on a
+    miss, so repeated builds of the same configuration never re-measure.
+    """
     if use_kernels is None:
         use_kernels = jax.default_backend() == "tpu"
     n = x.shape[0]
     if threshold is None:
         threshold = max(1, int(round(n**DEFAULT_THRESHOLD_FRAC)))
+    elif threshold == "cached":
+        from . import calib_cache
+
+        hit = calib_cache.load(calib_cache.cache_key(n, block_size))
+        threshold = hit if hit is not None else max(
+            1, int(round(n**DEFAULT_THRESHOLD_FRAC))
+        )
+    elif threshold == "calibrated":
+        from . import calib_cache
+
+        threshold = calib_cache.get_threshold(n, block_size, use_kernels=use_kernels)
     if use_kernels:
         from repro import kernels
 
@@ -89,23 +114,19 @@ def build(
     )
 
 
-def _short_query(s: HybridRMQ, l, r):
-    return s.short_fn(l, r)
+def dispatch_by_length(l, r, threshold: int, short_fn, long_fn, out_dtype):
+    """Range-adaptive dispatch core, shared by ``hybrid`` and ``sharded_hybrid``.
 
-
-def _long_query(s: HybridRMQ, l, r):
-    return s.long_fn(l, r)
-
-
-def query(s: HybridRMQ, l, r) -> Tuple[jax.Array, jax.Array]:
-    """Range-adaptive batched RMQ. Returns (leftmost argmin idx int32, value).
-
-    Host-side partition by range length, per-engine sub-batches, ordered
-    scatter-back. Bit-identical to ``block_rmq.query`` on the same batch.
+    Host-side partition of the batch by range length against ``threshold``,
+    per-regime launches through ``short_fn`` / ``long_fn`` (each
+    ``(l_jnp, r_jnp) -> (idx, val)``), ordered exact-leftmost scatter-back.
+    Empty batches return empty ``(idx, val)`` without launching anything.
     """
     l = np.asarray(l).astype(np.int64)
     r = np.asarray(r).astype(np.int64)
-    short = (r - l + 1) <= s.threshold
+    if l.size == 0:  # nothing to do: no phantom padded query, no launch
+        return jnp.zeros(0, jnp.int32), jnp.zeros(0, out_dtype)
+    short = (r - l + 1) <= threshold
 
     # Every launch pads its batch to a power of two so the jit cache stays
     # bounded (log2(B) shapes per path) however batch sizes and splits vary.
@@ -118,27 +139,51 @@ def query(s: HybridRMQ, l, r) -> Tuple[jax.Array, jax.Array]:
             lp[:k] = lm
             rp[:k] = rm
             lm, rm = lp, rp
-        qi, qv = fn(s, jnp.asarray(lm), jnp.asarray(rm))
+        qi, qv = fn(jnp.asarray(lm), jnp.asarray(rm))
         return qi, qv, k
 
     # Uniform batches skip the partition/scatter round-trip entirely.
     n_short = int(short.sum())
     if n_short == short.size or n_short == 0:
-        fn = _short_query if n_short else _long_query
-        qi, qv, k = _launch(fn, l, r)
+        qi, qv, k = _launch(short_fn if n_short else long_fn, l, r)
         return qi[:k], qv[:k]
 
     # Mixed batch: launch both sub-batches, then sync both — overlapping the
     # two engines' execution with a single wait.
     idx = np.empty(l.shape, np.int32)
-    val = np.empty(l.shape, np.dtype(s.x.dtype))
+    val = np.empty(l.shape, np.dtype(out_dtype))
     launched = []
-    for mask, fn in ((short, _short_query), (~short, _long_query)):
+    for mask, fn in ((short, short_fn), (~short, long_fn)):
         launched.append((mask, _launch(fn, l[mask], r[mask])))
     for mask, (qi, qv, k) in launched:
         idx[mask] = np.asarray(qi)[:k]
         val[mask] = np.asarray(qv)[:k]
     return jnp.asarray(idx), jnp.asarray(val)
+
+
+def query(s: HybridRMQ, l, r) -> Tuple[jax.Array, jax.Array]:
+    """Range-adaptive batched RMQ. Returns (leftmost argmin idx int32, value).
+
+    Host-side partition by range length, per-engine sub-batches, ordered
+    scatter-back. Bit-identical to ``block_rmq.query`` on the same batch.
+    """
+    return dispatch_by_length(l, r, s.threshold, s.short_fn, s.long_fn, s.x.dtype)
+
+
+def _measure(kind: str, fn, lj, rj, repeats: int) -> float:
+    """Median wall seconds of one jitted path (post-warmup).
+
+    ``kind`` names the path ("short" / "long") purely so tests can swap this
+    out for a deterministic fake and pin calibrate's control flow.
+    """
+    del kind
+    fn(lj, rj)  # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(lj, rj))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
 
 
 def calibrate(
@@ -163,9 +208,7 @@ def calibrate(
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.random(n, dtype=np.float32))
     s = build(x, block_size, use_kernels=use_kernels)
-
-    short_fn = jax.jit(lambda l, r: _short_query(s, l, r))
-    long_fn = jax.jit(lambda l, r: _long_query(s, l, r))
+    short_fn, long_fn = s.short_fn, s.long_fn  # both already jit-wrapped
 
     lengths = np.unique(
         np.geomspace(1, n, num=8).astype(np.int64).clip(1, n)
@@ -177,16 +220,9 @@ def calibrate(
         lj = jnp.asarray(lo)
         rj = jnp.asarray(np.minimum(lo + length - 1, n - 1))
 
-        def _med(fn):
-            fn(lj, rj)  # warmup / compile
-            ts = []
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn(lj, rj))
-                ts.append(time.perf_counter() - t0)
-            return float(np.median(ts))
-
-        if _med(long_fn) < _med(short_fn):
+        if _measure("long", long_fn, lj, rj, repeats) < _measure(
+            "short", short_fn, lj, rj, repeats
+        ):
             # The long path wins at `length`; routing is `len <= threshold ->
             # short`, so the threshold is the last length where short won.
             crossover = int(prev_length)

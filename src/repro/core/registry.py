@@ -17,7 +17,7 @@ from typing import Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import block_rmq, exhaustive, hybrid, lane_rmq, lca, sparse_table
+from . import block_rmq, exhaustive, hybrid, lane_rmq, lca, sharded_hybrid, sparse_table
 
 __all__ = ["Engine", "ENGINES", "get", "names"]
 
@@ -68,6 +68,11 @@ ENGINES: dict = {
     "fused128": _kernels_engine(128),
     # Range-adaptive dispatcher over blocked + sparse-table paths.
     "hybrid": Engine(lambda x: hybrid.build(x, 128), hybrid.query),
+    # Mesh-sharded range-adaptive dispatcher (builds over all visible
+    # devices; 1-device meshes degenerate to the single-host hybrid).
+    "sharded_hybrid": Engine(
+        lambda x: sharded_hybrid.build(x, block_size=128), sharded_hybrid.query
+    ),
 }
 
 

@@ -1,0 +1,161 @@
+"""Sharded range-adaptive hybrid RMQ: the crossover, distributed.
+
+The paper's two deferred directions meet here. §7.i leaves multi-BVH
+distribution ("one BVH per cluster of blocks") as future work — that is
+``core.distributed``'s mesh-sharded blocked engine. §6 shows the headline
+result is regime-dependent — the blocked structure wins at small ranges, the
+O(1) table family at large ones — which ``core.hybrid`` exploits on one
+host. This engine fuses them: a sharded deployment that still routes every
+query to the regime-appropriate structure.
+
+Data flow (DESIGN.md §6):
+
+    host batch (l, r)
+      └─ partition by range length vs threshold        (numpy, host-side)
+           ├─ short sub-batch -> sharded blocked path  (two-pmin merge)
+           └─ long sub-batch  -> sharded sparse-table  (owner-column pmin)
+      └─ exact leftmost scatter-back into batch order
+
+Two distribution modes, one per scaling axis:
+
+* ``mode="shard_structure"`` (default): the *array* is sharded — per-device
+  blocked chunks for the short path, a column-sharded global doubling table
+  for the long path. Memory scales with device count; queries are replicated
+  and merge via pmin collectives.
+* ``mode="shard_batch"``: the *query batch* is sharded — each device holds
+  the full (replicated) structures and answers only its slice, so serving
+  throughput scales with device count instead of being replicated work.
+
+The routing threshold (``build(threshold=...)``): ``None`` is the
+deterministic sqrt(n) default, exactly as in ``hybrid.build``; ``"cached"``
+consults the persistent calibration cache (``calib_cache``, keyed by
+``(n, block_size, backend, n_devices)``) and falls back to sqrt(n) on a
+miss without ever measuring; ``"calibrated"`` measures on a miss and
+persists the result; an int pins it explicitly. Machine state is opt-in —
+default builds (registry, tests, benchmarks) never read the cache.
+
+Results are bit-identical to ``block_rmq.query`` on the same batch — every
+constituent is exact-leftmost, and the scatter-back preserves batch order.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import calib_cache, distributed
+from .hybrid import DEFAULT_THRESHOLD_FRAC, dispatch_by_length
+
+__all__ = ["MODES", "ShardedHybridRMQ", "build", "query"]
+
+MODES = ("shard_structure", "shard_batch")
+
+
+class ShardedHybridRMQ(NamedTuple):
+    """Both distributed constituents plus routing/launch metadata."""
+
+    blocked: object  # sharded (or replicated) BlockRMQ — short-range path
+    st: object  # ShardedSparseTable (or replicated SparseTable) — long path
+    n: int  # logical array length (pre-padding)
+    threshold: int  # range lengths <= threshold go to the blocked path
+    mode: str  # "shard_structure" | "shard_batch"
+    n_shards: int  # flattened mesh size (batch-pad granularity)
+    dtype: object  # value dtype for the host-side scatter-back
+    short_fn: object  # jitted (blocked, l, r) -> (idx, val)
+    long_fn: object  # jitted (st, l, r) -> (idx, val)
+
+
+def _default_mesh():
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((len(jax.devices()),), ("shard",)), ("shard",)
+
+
+def build(
+    x: jax.Array,
+    mesh=None,
+    axis_names: Sequence[str] | None = None,
+    block_size: int = 128,
+    *,
+    threshold: int | str | None = None,
+    mode: str = "shard_structure",
+    cache_path=None,
+) -> ShardedHybridRMQ:
+    """Build both distributed constituents over ``mesh`` (default: all devices).
+
+    ``threshold``: int pins the crossover; ``None`` is the deterministic
+    sqrt(n) default (no cache, matching ``hybrid.build``); ``"cached"``
+    reads the calibration cache with the sqrt(n) fallback, never measuring;
+    ``"calibrated"`` measures on a cache miss and persists the result.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; have {MODES}")
+    x = jnp.asarray(x)
+    if mesh is None:
+        mesh, axis_names = _default_mesh()
+    axis_names = tuple(axis_names if axis_names is not None else mesh.axis_names)
+    num = distributed.num_shards(mesh, axis_names)
+    n = x.shape[0]
+
+    if threshold is None:
+        threshold = max(1, int(round(n**DEFAULT_THRESHOLD_FRAC)))
+    elif threshold == "cached":
+        key = calib_cache.cache_key(n, block_size, n_devices=num)
+        cached = calib_cache.load(key, path=cache_path)
+        threshold = (
+            cached
+            if cached is not None
+            else max(1, int(round(n**DEFAULT_THRESHOLD_FRAC)))
+        )
+    elif threshold == "calibrated":
+        # The crossover is a property of the constituent structures, measured
+        # by hybrid.calibrate on the single-host paths; the cache key still
+        # carries n_devices so a sharded deployment calibrates per mesh size.
+        threshold = calib_cache.get_threshold(
+            n, block_size, n_devices=num, path=cache_path, use_kernels=False
+        )
+
+    if mode == "shard_structure":
+        blocked = distributed.build_sharded(x, mesh, axis_names, block_size)
+        short_fn = distributed.make_query_fn(mesh, axis_names)
+        st = distributed.build_sharded_st(x, mesh, axis_names)
+        long_fn = distributed.make_st_query_fn(mesh, axis_names)
+    else:  # shard_batch
+        blocked = distributed.build_replicated(x, mesh, block_size)
+        short_fn = distributed.make_query_fn(mesh, axis_names, batch_sharded=True)
+        st = distributed.build_replicated_st(x, mesh)
+        long_fn = distributed.make_st_query_fn(mesh, axis_names, batch_sharded=True)
+
+    return ShardedHybridRMQ(
+        blocked=blocked,
+        st=st,
+        n=int(n),
+        threshold=int(threshold),
+        mode=mode,
+        n_shards=int(num),
+        dtype=np.dtype(x.dtype),
+        short_fn=short_fn,
+        long_fn=long_fn,
+    )
+
+
+def query(s: ShardedHybridRMQ, l, r) -> Tuple[jax.Array, jax.Array]:
+    """Range-adaptive distributed batched RMQ -> (leftmost idx int32, value).
+
+    Host-side partition by range length, per-regime *sharded* launches,
+    ordered scatter-back — ``hybrid.dispatch_by_length`` with the sharded
+    constituents closed over their states. (The batch-sharded query fns pad
+    to a shard multiple internally, so divisibility is not this layer's
+    concern.) Bit-identical to ``block_rmq.query``.
+    """
+    return dispatch_by_length(
+        l,
+        r,
+        s.threshold,
+        lambda lm, rm: s.short_fn(s.blocked, lm, rm),
+        lambda lm, rm: s.long_fn(s.st, lm, rm),
+        s.dtype,
+    )

@@ -1,11 +1,20 @@
 """RMQ serving launcher — the paper's workload as a service (end-to-end driver).
 
-Builds the distributed blocked-RMQ structure over the mesh, then serves
-batches of RMQ(l, r) queries (uniform / lognormal range distributions, the
-paper's §6.4 workloads) and verifies a sample against the numpy oracle.
+Builds a distributed RMQ engine over the mesh, then serves batches of
+RMQ(l, r) queries (uniform / lognormal range distributions, the paper's §6.4
+workloads) and verifies a sample against the numpy oracle.
+
+Engines (``--engine``):
+  * ``distributed``    — the mesh-sharded blocked engine (structure sharded,
+    queries replicated, two-pmin merge).
+  * ``sharded_hybrid`` — the range-adaptive sharded engine: short ranges via
+    the sharded blocked path, long ranges via the sharded sparse table, with
+    ``--qshard`` switching to the batch-sharded mode (replicated structure,
+    sharded queries) and ``--calibrate`` taking the routing threshold from
+    the persistent calibration cache (measured once per configuration).
 
   PYTHONPATH=src python -m repro.launch.serve --n 1048576 --batch 4096 \
-      --batches 8 --dist small
+      --batches 8 --dist small --engine sharded_hybrid
 """
 
 from __future__ import annotations
@@ -17,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed, ref
+from repro.core import distributed, ref, sharded_hybrid
 from repro.launch.mesh import make_mesh, set_mesh
 
 
@@ -42,7 +51,24 @@ def main():
     ap.add_argument("--block-size", type=int, default=1024)
     ap.add_argument("--dist", choices=["large", "medium", "small"], default="small")
     ap.add_argument("--verify", type=int, default=64)
+    ap.add_argument(
+        "--engine", choices=["distributed", "sharded_hybrid"], default="distributed"
+    )
+    ap.add_argument(
+        "--qshard",
+        action="store_true",
+        help="sharded_hybrid: shard the query batch (replicated structure) "
+        "instead of the structure",
+    )
+    ap.add_argument(
+        "--calibrate",
+        action="store_true",
+        help="sharded_hybrid: routing threshold from the calibration cache "
+        "(measures once per (n, bs, backend, ndev) configuration)",
+    )
     args = ap.parse_args()
+    if args.engine != "sharded_hybrid" and (args.qshard or args.calibrate):
+        ap.error("--qshard/--calibrate only apply to --engine sharded_hybrid")
 
     n_dev = len(jax.devices())
     mesh = make_mesh((n_dev,), ("shard",))
@@ -51,17 +77,30 @@ def main():
 
     with set_mesh(mesh):
         t0 = time.perf_counter()
-        s = distributed.build_sharded(jnp.asarray(x), mesh, ("shard",), args.block_size)
-        jax.block_until_ready(s.x_blocks)
+        if args.engine == "sharded_hybrid":
+            s = sharded_hybrid.build(
+                jnp.asarray(x),
+                mesh,
+                ("shard",),
+                args.block_size,
+                threshold="calibrated" if args.calibrate else "cached",
+                mode="shard_batch" if args.qshard else "shard_structure",
+            )
+            jax.block_until_ready(s.blocked.x_blocks)
+            qfn = sharded_hybrid.query
+        else:
+            s = distributed.build_sharded(jnp.asarray(x), mesh, ("shard",), args.block_size)
+            jax.block_until_ready(s.x_blocks)
+            dist_q = distributed.make_query_fn(mesh, ("shard",))
+            qfn = lambda st, l, r: dist_q(st, jnp.asarray(l), jnp.asarray(r))
         t_build = time.perf_counter() - t0
-        qfn = distributed.make_query_fn(mesh, ("shard",))
 
         total_q = 0
         t0 = time.perf_counter()
         last = None
         for b in range(args.batches):
             l, r = make_queries(rng, args.n, args.batch, args.dist)
-            idx, val = qfn(s, jnp.asarray(l), jnp.asarray(r))
+            idx, val = qfn(s, l, r)
             last = (l, r, idx, val)
             total_q += args.batch
         jax.block_until_ready(last[2])
@@ -71,8 +110,10 @@ def main():
     k = min(args.verify, args.batch)
     gold = ref.rmq_ref(x, l[:k], r[:k])
     ok = (np.asarray(idx[:k]) == gold).all()
+    mode = " qshard" if (args.engine == "sharded_hybrid" and args.qshard) else ""
     print(
-        f"served {total_q} RMQs over n={args.n} ({args.dist} ranges) on {n_dev} shard(s): "
+        f"[{args.engine}{mode}] served {total_q} RMQs over n={args.n} "
+        f"({args.dist} ranges) on {n_dev} shard(s): "
         f"build {t_build*1e3:.1f} ms, serve {t_serve*1e3:.1f} ms "
         f"({t_serve/total_q*1e9:.1f} ns/RMQ), verify[{k}] {'OK' if ok else 'MISMATCH'}"
     )

@@ -1,0 +1,148 @@
+"""Calibration: degenerate crossover paths (deterministic via a fake timer)
+and the persistent threshold cache (hit / miss / stale-key / corrupt)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import calib_cache, hybrid
+
+
+# --- hybrid.calibrate degenerate paths ------------------------------------
+# calibrate's control flow is driven entirely by hybrid._measure (the only
+# timing primitive); swapping it for a constant-per-path fake pins the
+# decision at every swept range length.
+
+
+def test_calibrate_returns_n_when_short_always_wins(monkeypatch):
+    monkeypatch.setattr(
+        hybrid, "_measure", lambda kind, *a, **k: 0.0 if kind == "short" else 1.0
+    )
+    # Short path wins at every swept length -> threshold = largest length = n.
+    assert hybrid.calibrate(256, batch=8, use_kernels=False, repeats=1) == 256
+
+
+def test_calibrate_returns_zero_when_long_wins_at_length_one(monkeypatch):
+    monkeypatch.setattr(
+        hybrid, "_measure", lambda kind, *a, **k: 1.0 if kind == "short" else 0.0
+    )
+    # Long path wins even at length 1 -> threshold 0 = route everything long.
+    assert hybrid.calibrate(256, batch=8, use_kernels=False, repeats=1) == 0
+
+
+def test_calibrate_reports_interior_crossover(monkeypatch):
+    """Long overtakes short above length 16: the last short win is returned."""
+
+    def fake_measure(kind, fn, lj, rj, repeats):
+        length = int(np.asarray(rj)[0] - np.asarray(lj)[0] + 1)
+        if kind == "short":
+            return 1.0
+        return 2.0 if length <= 16 else 0.5
+
+    monkeypatch.setattr(hybrid, "_measure", fake_measure)
+    thr = hybrid.calibrate(256, batch=8, use_kernels=False, repeats=1)
+    # Swept lengths are log-spaced over [1, 256]; the crossover must be the
+    # largest swept length <= 16.
+    lengths = np.unique(np.geomspace(1, 256, num=8).astype(np.int64).clip(1, 256))
+    assert thr == int(lengths[lengths <= 16].max())
+
+
+# --- threshold cache round-trip -------------------------------------------
+
+
+def test_cache_miss_then_hit_then_other_key_miss(tmp_path):
+    p = tmp_path / "cal.json"
+    key = calib_cache.cache_key(1024, 128, backend="cpu", n_devices=1)
+    assert calib_cache.load(key, path=p) is None  # miss: no file yet
+    calib_cache.store(key, 77, path=p)
+    assert calib_cache.load(key, path=p) == 77  # hit
+    other = calib_cache.cache_key(2048, 128, backend="cpu", n_devices=1)
+    assert calib_cache.load(other, path=p) is None  # miss: different key
+    dev8 = calib_cache.cache_key(1024, 128, backend="cpu", n_devices=8)
+    assert dev8 != key  # device count is part of the key
+    assert calib_cache.load(dev8, path=p) is None
+
+
+def test_cache_stale_version_is_a_miss_and_store_drops_it(tmp_path):
+    p = tmp_path / "cal.json"
+    key = calib_cache.cache_key(512, 128, backend="cpu", n_devices=1)
+    stale_key = "n=99/bs=128/backend=cpu/ndev=1"
+    p.write_text(
+        json.dumps(
+            {"version": calib_cache.CACHE_VERSION + 1, "entries": {stale_key: 5}}
+        )
+    )
+    assert calib_cache.load(stale_key, path=p) is None  # stale format: miss
+    calib_cache.store(key, 33, path=p)
+    assert calib_cache.load(key, path=p) == 33
+    assert calib_cache.load(stale_key, path=p) is None  # old entries dropped
+    data = json.loads(p.read_text())
+    assert data["version"] == calib_cache.CACHE_VERSION
+    assert stale_key not in data["entries"]
+
+
+def test_cache_corrupt_file_is_a_miss_and_recoverable(tmp_path):
+    p = tmp_path / "cal.json"
+    p.write_text("definitely{not json")
+    key = calib_cache.cache_key(64, 128, backend="cpu", n_devices=1)
+    assert calib_cache.load(key, path=p) is None
+    calib_cache.store(key, 9, path=p)
+    assert calib_cache.load(key, path=p) == 9
+
+
+def test_get_threshold_measures_once_then_hits(tmp_path, monkeypatch):
+    p = tmp_path / "cal.json"
+    calls = []
+    monkeypatch.setattr(
+        hybrid, "calibrate", lambda n, **kw: calls.append(n) or 42
+    )
+    kw = dict(backend="cpu", n_devices=1, path=p)
+    assert calib_cache.get_threshold(512, 128, **kw) == 42  # miss -> measures
+    assert calib_cache.get_threshold(512, 128, **kw) == 42  # hit -> cached
+    assert calls == [512]
+
+
+def test_build_calibrated_threshold_reads_cache(tmp_path, monkeypatch):
+    """hybrid.build(threshold="calibrated") must not re-measure on a hit."""
+    import jax.numpy as jnp
+
+    p = tmp_path / "cal.json"
+    monkeypatch.setenv(calib_cache.ENV_VAR, str(p))
+    key = calib_cache.cache_key(1000, 128)  # live backend/device defaults
+    calib_cache.store(key, 21, path=p)
+    monkeypatch.setattr(
+        hybrid,
+        "calibrate",
+        lambda *a, **k: pytest.fail("re-measured despite a cache hit"),
+    )
+    s = hybrid.build(jnp.zeros(1000, jnp.float32), 128, threshold="calibrated",
+                     use_kernels=False)
+    assert s.threshold == 21
+
+
+def test_sharded_hybrid_build_reads_cache_without_measuring(tmp_path, monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.core import sharded_hybrid
+
+    p = tmp_path / "cal.json"
+    key = calib_cache.cache_key(777, 128, n_devices=1)
+    calib_cache.store(key, 55, path=p)
+    monkeypatch.setattr(
+        hybrid,
+        "calibrate",
+        lambda *a, **k: pytest.fail('"cached"/None must never measure'),
+    )
+    s = sharded_hybrid.build(
+        jnp.zeros(777, jnp.float32), threshold="cached", cache_path=p
+    )
+    assert s.threshold == 55
+    # "cached" without an entry: sqrt(n) fallback, still no measurement.
+    s2 = sharded_hybrid.build(
+        jnp.zeros(778, jnp.float32), threshold="cached", cache_path=p
+    )
+    assert s2.threshold == 28  # round(sqrt(778))
+    # Default build is deterministic sqrt(n): machine state stays opt-in.
+    s3 = sharded_hybrid.build(jnp.zeros(777, jnp.float32))
+    assert s3.threshold == 28  # round(sqrt(777)), NOT the cached 55

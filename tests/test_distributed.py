@@ -59,6 +59,72 @@ _CHILD_TRAIN = textwrap.dedent(
 )
 
 
+_CHILD_TIE = textwrap.dedent(
+    """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import distributed
+    from repro.launch.mesh import make_mesh, set_mesh
+
+    mesh = make_mesh((8,), ("shard",))
+    n = 8 * 256  # each shard owns 256 elements (2 blocks of 128)
+    x = np.ones(n, np.float32)
+    p1, p2 = 2 * 256 + 17, 5 * 256 + 100  # tied global min in shards 2 and 5
+    x[p1] = x[p2] = -3.0
+    l = np.array([0, p1, p1 + 1, p2 + 1])
+    r = np.array([n - 1, p2, p2, n - 1])
+    with set_mesh(mesh):
+        s = distributed.build_sharded(jnp.asarray(x), mesh, ("shard",), 128)
+        qfn = distributed.make_query_fn(mesh, ("shard",))
+        gi, gv = qfn(s, jnp.asarray(l), jnp.asarray(r))
+        gi, gv = np.asarray(gi), np.asarray(gv)
+        # Two-pmin merge must pick the LEFTMOST of the two tied shard minima.
+        assert gi[0] == p1 and gv[0] == -3.0, (gi[0], gv[0])
+        assert gi[1] == p1, gi[1]
+        assert gi[2] == p2, gi[2]  # p1 excluded: the other shard's copy wins
+        assert gi[3] == p2 + 1 and gv[3] == 1.0, (gi[3], gv[3])
+
+        # Same tie discipline on the column-sharded sparse-table path.
+        t = distributed.build_sharded_st(jnp.asarray(x), mesh, ("shard",))
+        stq = distributed.make_st_query_fn(mesh, ("shard",))
+        si, sv = stq(t, jnp.asarray(l), jnp.asarray(r))
+        si, sv = np.asarray(si), np.asarray(sv)
+        assert (si == gi).all(), (si, gi)
+        assert (sv == gv).all(), (sv, gv)
+    print("TIE_OK")
+    """
+)
+
+_CHILD_SHYBRID = textwrap.dedent(
+    """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import block_rmq, sharded_hybrid
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    rng = np.random.default_rng(2)
+    n = 5000
+    x = rng.integers(0, 9, n).astype(np.float32)  # dense ties
+    thr = 64
+    ls_ = rng.integers(1, thr + 1, 150)
+    ll_ = rng.integers(thr + 1, n + 1, 150)
+    length = np.concatenate([ls_, ll_])
+    rng.shuffle(length)
+    l = rng.integers(0, np.maximum(n - length + 1, 1), 300)
+    r = np.minimum(l + length - 1, n - 1)
+
+    sb = block_rmq.build(jnp.asarray(x), 128)
+    bi, bv = block_rmq.query(sb, jnp.asarray(l), jnp.asarray(r))
+    for mode in sharded_hybrid.MODES:
+        s = sharded_hybrid.build(jnp.asarray(x), mesh, ("data", "model"), 128,
+                                 threshold=thr, mode=mode)
+        hi, hv = sharded_hybrid.query(s, l, r)  # 300 % 8 != 0: pad path too
+        assert (np.asarray(hi) == np.asarray(bi)).all(), mode
+        assert (np.asarray(hv) == np.asarray(bv)).all(), mode
+    print("SHYBRID_OK")
+    """
+)
+
+
 def _run_child(code):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -73,6 +139,20 @@ def _run_child(code):
 def test_distributed_rmq_8_shards():
     out = _run_child(_CHILD)
     assert "DISTRIBUTED_OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_distributed_leftmost_tie_across_shards():
+    """Global min duplicated in two different shards: the merge must return
+    the leftmost global index (blocked and sparse-table paths alike)."""
+    out = _run_child(_CHILD_TIE)
+    assert "TIE_OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_sharded_hybrid_bit_identical_on_8_device_mesh():
+    """Mixed small/large batch through both distribution modes must be
+    bit-identical to the single-host blocked oracle (acceptance criterion)."""
+    out = _run_child(_CHILD_SHYBRID)
+    assert "SHYBRID_OK" in out.stdout, out.stderr[-3000:]
 
 
 def test_sharded_train_step_2x4_mesh():

@@ -75,6 +75,18 @@ def test_all_short_and_all_long_batches(rng):
         np.testing.assert_allclose(np.asarray(val), x[gold])
 
 
+def test_empty_batch_returns_empty_without_launching():
+    """Regression: an empty batch used to pad to a phantom (0, 0) query and
+    launch a kernel for nothing. It must return empty (idx, val) early."""
+    s = hybrid.build(jnp.arange(64.0), 128, use_kernels=False)
+    boom = lambda *a: (_ for _ in ()).throw(AssertionError("launched on empty batch"))
+    s = s._replace(short_fn=boom, long_fn=boom)
+    idx, val = hybrid.query(s, np.zeros(0, np.int64), np.zeros(0, np.int64))
+    assert idx.shape == (0,) and val.shape == (0,)
+    assert idx.dtype == jnp.int32
+    assert val.dtype == s.x.dtype
+
+
 def test_threshold_default_and_calibrate_smoke():
     s = hybrid.build(jnp.zeros(10_000, jnp.float32), 128, use_kernels=False)
     assert s.threshold == 100  # sqrt(n) default

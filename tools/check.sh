@@ -1,13 +1,20 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 tests + a seconds-long smoke of the perf path.
+# CI gate: tier-1 tests + engine conformance + serving and perf smokes.
 #
 #   bash tools/check.sh            # from the repo root
 #
 # 1. tier-1: the full pytest suite (ROADMAP "Tier-1 verify").
-# 2. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+# 2. conformance: every registry engine through the shared oracle sweep
+#    (tests/test_conformance.py — also part of tier-1; gated explicitly so
+#    a narrowed pytest invocation can't silently drop it).
+# 3. serve smoke: multi-device (8 fake) end-to-end serve through the
+#    sharded range-adaptive hybrid engine, both distribution modes.
+# 4. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
 #    CPU — Pallas kernels validate through the test suite; the smoke catches
 #    perf-path regressions like import errors, shape breaks, or a suite that
 #    stopped emitting rows).
+#
+# Perf baseline: BENCH_PR2.json (benchmarks/run.py --json); refresh per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,6 +22,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
+
+echo "== engine conformance sweep =="
+python -m pytest -q tests/test_conformance.py
+
+echo "== sharded-hybrid serve smoke (8 fake devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 300 \
+    python -m repro.launch.serve --engine sharded_hybrid \
+    --n 65536 --batch 2048 --batches 2 --block-size 128 --dist medium
+XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 300 \
+    python -m repro.launch.serve --engine sharded_hybrid --qshard \
+    --n 65536 --batch 2048 --batches 2 --block-size 128 --dist medium
 
 echo "== perf smoke (fig12, smoke sizes) =="
 out=$(timeout 300 python -m benchmarks.run --only fig12 --smoke)
@@ -24,4 +42,4 @@ if [ "$rows" -lt 4 ]; then
     echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
     exit 1
 fi
-echo "OK: tier-1 green, fig12 smoke emitted $rows rows"
+echo "OK: tier-1 green, conformance green, serve smoke green, fig12 smoke emitted $rows rows"
