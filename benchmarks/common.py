@@ -8,6 +8,8 @@ import time
 import jax
 import numpy as np
 
+from repro.serve.workload import make_queries  # one source for the §6.4 regimes
+
 __all__ = ["make_queries", "time_fn", "emit", "RESULTS", "SMOKE"]
 
 # Every emit() also lands here (name -> us_per_call) so the harness can dump
@@ -17,20 +19,6 @@ RESULTS: dict = {}
 # Set by `benchmarks.run --smoke`: suites shrink sizes/batches to finish in
 # seconds (CI smoke via tools/check.sh).
 SMOKE = False
-
-
-def make_queries(rng, n: int, batch: int, dist: str):
-    """Large: uniform range len in [1, n]; Medium: LogNormal(log n^0.6, .3);
-    Small: LogNormal(log n^0.3, .3) — exactly the paper's three regimes."""
-    if dist == "large":
-        length = rng.integers(1, n + 1, batch)
-    else:
-        exp = 0.6 if dist == "medium" else 0.3
-        length = np.exp(rng.normal(np.log(n**exp), 0.3, batch))
-        length = np.clip(length, 1, n).astype(np.int64)
-    l = rng.integers(0, np.maximum(n - length + 1, 1), batch)
-    r = np.minimum(l + length - 1, n - 1)
-    return l.astype(np.int64), r.astype(np.int64)
 
 
 def time_fn(fn, *args, repeats: int = 5, warmup: int = 2):

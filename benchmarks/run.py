@@ -18,7 +18,7 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: fig12,fig13,fig10,fig14,table2,roofline,crossover,"
-        "sharded_hybrid",
+        "sharded_hybrid,serve_latency",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -39,6 +39,7 @@ def main() -> None:
         memory_usage,
         mesh_scaling,
         roofline_report,
+        serve_latency,
         sharded_hybrid,
         time_per_rmq,
     )
@@ -54,6 +55,7 @@ def main() -> None:
         "roofline": roofline_report.run,
         "crossover": hybrid_crossover.run,
         "sharded_hybrid": sharded_hybrid.run,
+        "serve_latency": serve_latency.run,
     }
     if only:
         unknown = only - set(suites)

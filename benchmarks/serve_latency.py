@@ -1,0 +1,105 @@
+"""Serve-latency suite: p50/p99 + sustained throughput vs load and deadline.
+
+Open-loop Poisson clients drive `repro.serve.RMQServer` over the hybrid
+engine at a sweep of offered loads (requests/s) and micro-batch deadlines.
+Open-loop means arrival times are fixed in advance — a slow server cannot
+slow the clients down — so the measured latency honestly includes queueing
+under overload, and throughput saturates instead of tracking the offer.
+
+Rows: ``serve_latency/deadline=<ms>/load=<rps>`` with the p50 total latency
+as the metric and p99 + achieved throughput in the derived column. Larger
+deadlines trade per-request latency for bigger coalesced batches (fewer,
+fuller engine launches); the sweep makes that trade measurable.
+
+Standalone (the harness also runs it via ``benchmarks.run``):
+
+    PYTHONPATH=src python benchmarks/serve_latency.py --smoke
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+if __package__ in (None, ""):  # executed as a script: make repo-root imports work
+    _ROOT = pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(_ROOT))
+    sys.path.insert(0, str(_ROOT / "src"))
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit
+
+_ENGINE = "hybrid"
+_REQ_BATCH = 16  # queries per client request
+_CLIENTS = 4
+
+
+def _drive(srv, n: int, dist: str, rate_hz: float, requests: int, seed: int):
+    """Open-loop Poisson client fleet; returns (futures, dropped)."""
+    from repro.serve.workload import make_queries, run_poisson_clients
+
+    per_client = run_poisson_clients(
+        _CLIENTS,
+        requests // _CLIENTS,
+        rate_hz / _CLIENTS,
+        lambda rng, c: make_queries(rng, n, _REQ_BATCH, dist),
+        srv.submit,
+        seed=seed,
+    )
+    flat = [fut for out in per_client for _, fut in out]
+    return [f for f in flat if f is not None], sum(f is None for f in flat)
+
+
+def run() -> None:
+    import jax.numpy as jnp
+
+    from repro.core import registry
+    from repro.serve import RMQServer, ServeConfig
+
+    smoke = common.SMOKE
+    n = 1 << 16 if smoke else 1 << 20
+    requests = 80 if smoke else 400  # total, split across clients
+    deadlines_ms = (0.5, 2.0) if smoke else (0.5, 2.0, 8.0)
+    loads_rps = (200.0, 800.0) if smoke else (200.0, 800.0, 3200.0)
+
+    rng = np.random.default_rng(0)
+    x = rng.random(n, dtype=np.float32)
+    spec = registry.get(_ENGINE)
+    state = registry.build_for_serving(_ENGINE, jnp.asarray(x))
+    qfn = lambda l, r: spec.query(state, l, r)
+
+    for deadline_ms in deadlines_ms:
+        for load in loads_rps:
+            srv = RMQServer(
+                qfn,
+                ServeConfig(
+                    deadline_s=deadline_ms * 1e-3,
+                    max_batch=4096,
+                    max_pending=requests,
+                    n=n,
+                ),
+            )
+            srv.warmup()
+            with srv:
+                futs, dropped = _drive(srv, n, "medium", load, requests, seed=17)
+                for f in futs:
+                    f.result(timeout=600)
+            st = srv.stats()
+            emit(
+                f"serve_latency/deadline={deadline_ms:g}ms/load={load:g}rps",
+                st.p50_total_s,
+                f"p50={st.p50_total_s*1e3:.2f}ms,p99={st.p99_total_s*1e3:.2f}ms,"
+                f"thr={st.throughput_qps:.0f}rmq_s,batches={st.n_batches},"
+                f"mean_batch={st.mean_batch_queries:.1f}q,dropped={dropped}",
+            )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
+    common.SMOKE = ap.parse_args().smoke
+    run()

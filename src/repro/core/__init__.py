@@ -18,8 +18,11 @@ Engines:
   * ``calib_cache`` — persistent JSON cache of calibrated crossover
     thresholds, keyed by (n, block_size, backend, n_devices).
 
-``registry`` exposes all single-host engines behind one uniform
-``(build, query) -> (idx, val)`` interface for tests and benchmarks.
+``registry`` exposes every engine behind one uniform
+``(build, query) -> (idx, val)`` interface for tests and benchmarks, plus
+declared serving capabilities (``EngineSpec``) that the async serving
+stack (``repro.serve``, ``repro.launch.serve``) derives its engine choices
+and flag validation from.
 """
 
 from . import (

@@ -45,6 +45,8 @@ __all__ = [
 # sqrt(n) touch only a couple of blocks and favor the blocked path.
 DEFAULT_THRESHOLD_FRAC = 0.5  # threshold = n ** DEFAULT_THRESHOLD_FRAC
 
+_INT32_MAX = np.iinfo(np.int32).max
+
 
 class HybridRMQ(NamedTuple):
     """Both constituent structures, routing threshold, jitted path closures."""
@@ -121,11 +123,25 @@ def dispatch_by_length(l, r, threshold: int, short_fn, long_fn, out_dtype):
     per-regime launches through ``short_fn`` / ``long_fn`` (each
     ``(l_jnp, r_jnp) -> (idx, val)``), ordered exact-leftmost scatter-back.
     Empty batches return empty ``(idx, val)`` without launching anything.
+
+    Bounds must be integer arrays inside the int32 index range: every
+    constituent engine computes int32 indices, so an out-of-range bound
+    would wrap silently instead of failing loudly — checked here, the one
+    query path both hybrids share.
     """
-    l = np.asarray(l).astype(np.int64)
-    r = np.asarray(r).astype(np.int64)
+    l = np.asarray(l)
+    r = np.asarray(r)
+    if not (np.issubdtype(l.dtype, np.integer) and np.issubdtype(r.dtype, np.integer)):
+        raise TypeError(f"query bounds must be integer arrays, got {l.dtype} / {r.dtype}")
+    l = l.astype(np.int64)
+    r = r.astype(np.int64)
     if l.size == 0:  # nothing to do: no phantom padded query, no launch
         return jnp.zeros(0, jnp.int32), jnp.zeros(0, out_dtype)
+    if int(l.min()) < 0 or int(r.max()) > _INT32_MAX:
+        raise ValueError(
+            f"query bounds [{int(l.min())}, {int(r.max())}] outside the engines' "
+            "int32 index range"
+        )
     short = (r - l + 1) <= threshold
 
     # Every launch pads its batch to a power of two so the jit cache stays

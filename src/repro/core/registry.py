@@ -1,33 +1,82 @@
-"""First-class engine registry: one uniform (build, query) interface.
+"""Capability-aware engine registry: one uniform ``EngineSpec`` per engine.
 
 Tests and benchmarks enumerate engines from here instead of hard-coding
-module calls, so adding an engine (e.g. ``hybrid``) automatically enrolls it
-in the oracle sweeps and the crossover benchmark.
+module calls, so adding an engine automatically enrolls it in the oracle
+sweeps and the crossover benchmark. The serving layer (``repro.serve``,
+``repro.launch.serve``) additionally derives its ``--engine`` choices and
+flag validation from the declared capabilities instead of hard-coded engine
+name lists.
 
-Contract: ``build(x_jnp) -> state``; ``query(state, l, r) -> (idx, val)``
-with exact leftmost-tie argmin indices (int32) and the corresponding values.
+Conformance contract (unchanged from the bare ``Engine(build, query)``
+era): ``build(x_jnp) -> state``; ``query(state, l, r) -> (idx, val)`` with
+exact leftmost-tie argmin indices (int32) and the corresponding values.
 Engines whose native query returns only indices are wrapped with a value
 gather so the interface stays uniform.
+
+Serving contract: ``serve_build(x, mesh, axis_names, **kwargs) -> state``
+with ``kwargs`` restricted to the spec's declared ``build_kwargs``;
+``needs_mesh`` marks engines that build over a device mesh; ``modes`` names
+the supported distribution modes (``--qshard`` requires ``"shard_batch"``
+here). ``build_for_serving`` validates and dispatches.
 """
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from . import block_rmq, exhaustive, hybrid, lane_rmq, lca, sharded_hybrid, sparse_table
+from . import (
+    block_rmq,
+    distributed,
+    exhaustive,
+    hybrid,
+    lane_rmq,
+    lca,
+    sharded_hybrid,
+    sparse_table,
+)
 
-__all__ = ["Engine", "ENGINES", "get", "names"]
+__all__ = [
+    "Engine",
+    "EngineSpec",
+    "ENGINES",
+    "build_for_serving",
+    "default_mesh",
+    "get",
+    "names",
+    "serveable_names",
+]
 
 
-class Engine(NamedTuple):
+class EngineSpec(NamedTuple):
+    """An engine plus its declared serving capabilities.
+
+    ``build``/``query`` are the conformance contract every oracle sweep
+    uses. ``serveable`` gates enrollment as a serving engine (``exhaustive``
+    is a test oracle, not a server). ``build_kwargs`` is the vocabulary of
+    serving build options the engine understands — the CLI validates flags
+    against it rather than keeping per-engine name lists. ``modes`` are the
+    distribution modes a mesh engine supports. ``doc`` is one line for CLI
+    help and error messages.
+    """
+
     build: Callable  # (x: jax.Array) -> state
     query: Callable  # (state, l, r) -> (idx int32, val)
+    serveable: bool = True
+    needs_mesh: bool = False
+    build_kwargs: frozenset = frozenset()
+    modes: Tuple[str, ...] = ()
+    serve_build: Optional[Callable] = None  # (x, mesh, axis_names, **kw) -> state
+    doc: str = ""
 
 
-def _with_values(build_fn, query_fn):
+# The former bare (build, query) tuple; positional construction still works.
+Engine = EngineSpec
+
+
+def _with_values(build_fn, query_fn, **spec_kw) -> EngineSpec:
     """Adapt an index-only engine to the uniform (idx, val) contract."""
 
     def build(x):
@@ -38,10 +87,10 @@ def _with_values(build_fn, query_fn):
         idx = query_fn(s, l, r)
         return idx, x[idx]
 
-    return Engine(build, query)
+    return EngineSpec(build, query, **spec_kw)
 
 
-def _kernels_engine(block_size: int) -> Engine:
+def _kernels_engine(block_size: int) -> EngineSpec:
     def build(x):
         from repro import kernels
 
@@ -52,26 +101,110 @@ def _kernels_engine(block_size: int) -> Engine:
 
         return kernels.ops.query(s, l, r)
 
-    return Engine(build, query)
+    def serve_build(x, mesh, axis_names, block_size=block_size):
+        from repro import kernels
+
+        return kernels.ops.build(jnp.asarray(x), block_size)
+
+    return EngineSpec(
+        build,
+        query,
+        build_kwargs=frozenset({"block_size"}),
+        serve_build=serve_build,
+        doc="fused tiled Pallas megakernel (interpret mode off-TPU)",
+    )
+
+
+def default_mesh():
+    """The all-devices 1-D serving mesh: (mesh, axis_names).
+
+    The one definition of "no mesh was passed" — ``build_for_serving`` and
+    the serve CLI both use it, so they can never silently disagree.
+    """
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((len(jax.devices()),), ("shard",)), ("shard",)
+
+
+# --- mesh engines ----------------------------------------------------------
+
+
+def _distributed_serve_build(x, mesh, axis_names, block_size=1024):
+    s = distributed.build_sharded(jnp.asarray(x), mesh, axis_names, block_size)
+    qfn = distributed.make_query_fn(mesh, tuple(axis_names))
+    return (s, qfn)
+
+
+def _distributed_build(x):
+    mesh, axes = default_mesh()
+    return _distributed_serve_build(x, mesh, axes, block_size=128)
+
+
+def _distributed_query(state, l, r):
+    s, qfn = state
+    return qfn(s, jnp.asarray(l), jnp.asarray(r))
+
+
+def _sharded_hybrid_serve_build(
+    x, mesh, axis_names, block_size=128, threshold="cached", mode="shard_structure"
+):
+    return sharded_hybrid.build(
+        jnp.asarray(x), mesh, axis_names, block_size, threshold=threshold, mode=mode
+    )
+
+
+def _hybrid_serve_build(x, mesh, axis_names, block_size=128, threshold="cached"):
+    return hybrid.build(jnp.asarray(x), block_size, threshold=threshold)
 
 
 ENGINES: dict = {
-    "sparse_table": _with_values(sparse_table.build, sparse_table.query),
-    "block128": Engine(lambda x: block_rmq.build(x, 128), block_rmq.query),
-    "block256": Engine(lambda x: block_rmq.build(x, 256), block_rmq.query),
-    "lane": Engine(lane_rmq.build, lane_rmq.query),
-    "lca": _with_values(lca.build, lca.query),
+    "sparse_table": _with_values(
+        sparse_table.build, sparse_table.query, doc="O(1) doubling-table lookups"
+    ),
+    "block128": EngineSpec(
+        lambda x: block_rmq.build(x, 128), block_rmq.query, doc="pure-jnp blocked, bs=128"
+    ),
+    "block256": EngineSpec(
+        lambda x: block_rmq.build(x, 256), block_rmq.query, doc="pure-jnp blocked, bs=256"
+    ),
+    "lane": EngineSpec(lane_rmq.build, lane_rmq.query, doc="beyond-paper lane-RMQ"),
+    "lca": _with_values(lca.build, lca.query, doc="LCA/Euler-tour O(1) engine"),
+    # Test oracle, not a server: O(n) scan per query chunk.
     "exhaustive": _with_values(
-        lambda x: x, lambda x, l, r: exhaustive.rmq_exhaustive(x, l, r, query_chunk=64)
+        lambda x: x,
+        lambda x, l, r: exhaustive.rmq_exhaustive(x, l, r, query_chunk=64),
+        serveable=False,
+        doc="O(n)-per-query scan oracle",
     ),
     # Fused tiled Pallas megakernel (interpret mode off-TPU).
     "fused128": _kernels_engine(128),
     # Range-adaptive dispatcher over blocked + sparse-table paths.
-    "hybrid": Engine(lambda x: hybrid.build(x, 128), hybrid.query),
+    "hybrid": EngineSpec(
+        lambda x: hybrid.build(x, 128),
+        hybrid.query,
+        build_kwargs=frozenset({"block_size", "threshold"}),
+        serve_build=_hybrid_serve_build,
+        doc="range-adaptive blocked/sparse-table crossover dispatcher",
+    ),
+    # Mesh-sharded blocked engine (structure sharded, queries replicated).
+    "distributed": EngineSpec(
+        _distributed_build,
+        _distributed_query,
+        needs_mesh=True,
+        build_kwargs=frozenset({"block_size"}),
+        serve_build=_distributed_serve_build,
+        doc="mesh-sharded blocked engine, two-pmin merge",
+    ),
     # Mesh-sharded range-adaptive dispatcher (builds over all visible
     # devices; 1-device meshes degenerate to the single-host hybrid).
-    "sharded_hybrid": Engine(
-        lambda x: sharded_hybrid.build(x, block_size=128), sharded_hybrid.query
+    "sharded_hybrid": EngineSpec(
+        lambda x: sharded_hybrid.build(x, block_size=128),
+        sharded_hybrid.query,
+        needs_mesh=True,
+        build_kwargs=frozenset({"block_size", "threshold", "mode"}),
+        modes=sharded_hybrid.MODES,
+        serve_build=_sharded_hybrid_serve_build,
+        doc="sharded range-adaptive hybrid (shard_structure | shard_batch)",
     ),
 }
 
@@ -80,8 +213,40 @@ def names() -> Tuple[str, ...]:
     return tuple(ENGINES)
 
 
-def get(name: str) -> Engine:
+def serveable_names() -> Tuple[str, ...]:
+    return tuple(n for n, s in ENGINES.items() if s.serveable)
+
+
+def get(name: str) -> EngineSpec:
     try:
         return ENGINES[name]
     except KeyError:
         raise ValueError(f"unknown engine {name!r}; have {sorted(ENGINES)}") from None
+
+
+def build_for_serving(name: str, x, mesh=None, axis_names=None, **kwargs):
+    """Build engine ``name`` for serving, validating kwargs against its spec.
+
+    Unknown kwargs and unsupported modes raise ``ValueError`` naming the
+    engine's declared capabilities — the single enforcement point behind
+    CLI flag validation. Mesh engines get a default all-devices 1-D mesh
+    when none is passed.
+    """
+    spec = get(name)
+    if not spec.serveable:
+        raise ValueError(f"engine {name!r} is not serveable ({spec.doc})")
+    unknown = set(kwargs) - set(spec.build_kwargs)
+    if unknown:
+        raise ValueError(
+            f"engine {name!r} does not accept {sorted(unknown)}; "
+            f"declared build kwargs: {sorted(spec.build_kwargs)}"
+        )
+    if "mode" in kwargs and kwargs["mode"] not in spec.modes:
+        raise ValueError(
+            f"engine {name!r} does not support mode {kwargs['mode']!r}; have {spec.modes}"
+        )
+    if spec.needs_mesh and mesh is None:
+        mesh, axis_names = default_mesh()
+    if spec.serve_build is None:
+        return spec.build(jnp.asarray(x))
+    return spec.serve_build(jnp.asarray(x), mesh, axis_names, **kwargs)

@@ -1,122 +1,241 @@
-"""RMQ serving launcher — the paper's workload as a service (end-to-end driver).
+"""RMQ serving launcher — thin CLI over the serve subsystem + engine registry.
 
-Builds a distributed RMQ engine over the mesh, then serves batches of
-RMQ(l, r) queries (uniform / lognormal range distributions, the paper's §6.4
-workloads) and verifies a sample against the numpy oracle.
+Two modes:
 
-Engines (``--engine``):
-  * ``distributed``    — the mesh-sharded blocked engine (structure sharded,
-    queries replicated, two-pmin merge).
-  * ``sharded_hybrid`` — the range-adaptive sharded engine: short ranges via
-    the sharded blocked path, long ranges via the sharded sparse table, with
-    ``--qshard`` switching to the batch-sharded mode (replicated structure,
-    sharded queries) and ``--calibrate`` taking the routing threshold from
-    the persistent calibration cache (measured once per configuration).
+* ``--mode oneshot`` (default): the benchmark-parity driver — build once,
+  dispatch pre-formed query batches synchronously, verify a sample against
+  the numpy oracle.
+* ``--mode async``: concurrent simulated clients submit variable-size
+  requests through ``repro.serve.RMQServer`` (open-loop Poisson arrivals);
+  the deadline micro-batcher coalesces them into power-of-two padded engine
+  launches, scatters per-request results back, and EVERY request is
+  verified bit-identical against the oracle. Prints p50/p99 latency,
+  sustained throughput, and the microbatch/coalescing profile.
+
+Engine choices and flag validation derive from the registry's capability
+metadata (``core.registry.EngineSpec``) — no hard-coded engine name lists:
+``--qshard`` needs an engine with a ``"shard_batch"`` mode, ``--calibrate``
+needs a ``"threshold"`` build kwarg, ``--block-size`` needs a
+``"block_size"`` build kwarg.
 
   PYTHONPATH=src python -m repro.launch.serve --n 1048576 --batch 4096 \
       --batches 8 --dist small --engine sharded_hybrid
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --mode async --engine sharded_hybrid \
+      --n 65536 --dist medium --clients 4 --requests 32
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distributed, ref, sharded_hybrid
-from repro.launch.mesh import make_mesh, set_mesh
+from repro.core import ref, registry
+from repro.launch.mesh import set_mesh
+from repro.serve import RMQServer, ServeConfig
+from repro.serve.workload import make_queries, run_poisson_clients
+
+__all__ = ["main"]
 
 
-def make_queries(rng, n: int, batch: int, dist: str):
-    """Paper §6.4 range distributions (large / medium / small)."""
-    if dist == "large":
-        length = rng.integers(1, n + 1, batch)
-    else:
-        exp = 0.6 if dist == "medium" else 0.3
-        length = np.exp(rng.normal(np.log(n**exp), 0.3, batch))
-        length = np.clip(length, 1, n).astype(np.int64)
-    l = rng.integers(0, np.maximum(n - length + 1, 1), batch)
-    r = np.minimum(l + length - 1, n - 1)
-    return l.astype(np.int64), r.astype(np.int64)
-
-
-def main():
-    ap = argparse.ArgumentParser()
+def _parser() -> argparse.ArgumentParser:
+    engines = registry.serveable_names()
+    ap = argparse.ArgumentParser(
+        description="Serve batched RMQs through any registry engine.",
+        epilog="engines: "
+        + "; ".join(f"{n} — {registry.get(n).doc}" for n in engines),
+    )
+    ap.add_argument("--mode", choices=["oneshot", "async"], default="oneshot")
     ap.add_argument("--n", type=int, default=1 << 20)
-    ap.add_argument("--batch", type=int, default=4096)
-    ap.add_argument("--batches", type=int, default=8)
-    ap.add_argument("--block-size", type=int, default=1024)
     ap.add_argument("--dist", choices=["large", "medium", "small"], default="small")
-    ap.add_argument("--verify", type=int, default=64)
+    ap.add_argument("--engine", choices=engines, default="sharded_hybrid")
     ap.add_argument(
-        "--engine", choices=["distributed", "sharded_hybrid"], default="distributed"
+        "--block-size",
+        type=int,
+        default=None,
+        help="engine block size (engines declaring a 'block_size' build kwarg; "
+        "default: the engine's own)",
     )
     ap.add_argument(
         "--qshard",
         action="store_true",
-        help="sharded_hybrid: shard the query batch (replicated structure) "
-        "instead of the structure",
+        help="batch-sharded mode: replicated structure, sharded queries "
+        "(engines declaring a 'shard_batch' mode)",
     )
     ap.add_argument(
         "--calibrate",
         action="store_true",
-        help="sharded_hybrid: routing threshold from the calibration cache "
-        "(measures once per (n, bs, backend, ndev) configuration)",
+        help="routing threshold from the calibration cache, measuring once per "
+        "configuration (engines declaring a 'threshold' build kwarg)",
     )
-    args = ap.parse_args()
-    if args.engine != "sharded_hybrid" and (args.qshard or args.calibrate):
-        ap.error("--qshard/--calibrate only apply to --engine sharded_hybrid")
+    one = ap.add_argument_group("oneshot")
+    one.add_argument("--batch", type=int, default=4096, help="queries per batch")
+    one.add_argument("--batches", type=int, default=8, help="batches to serve")
+    one.add_argument("--verify", type=int, default=64, help="oracle sample size")
+    asy = ap.add_argument_group("async")
+    asy.add_argument("--clients", type=int, default=4, help="concurrent simulated clients")
+    asy.add_argument("--requests", type=int, default=32, help="requests per client")
+    asy.add_argument("--req-batch", type=int, default=16, help="queries per request")
+    asy.add_argument(
+        "--rate",
+        type=float,
+        default=200.0,
+        help="per-client offered load, Poisson requests/s (0 = no pacing)",
+    )
+    asy.add_argument("--deadline-ms", type=float, default=2.0, help="micro-batch deadline")
+    asy.add_argument("--max-batch", type=int, default=4096, help="queries per engine launch")
+    asy.add_argument("--workers", type=int, default=1, help="engine-pool threads")
+    asy.add_argument("--max-pending", type=int, default=4096, help="admission-control bound")
+    return ap
 
-    n_dev = len(jax.devices())
-    mesh = make_mesh((n_dev,), ("shard",))
-    rng = np.random.default_rng(0)
-    x = rng.random(args.n, dtype=np.float32)
 
-    with set_mesh(mesh):
-        t0 = time.perf_counter()
-        if args.engine == "sharded_hybrid":
-            s = sharded_hybrid.build(
-                jnp.asarray(x),
-                mesh,
-                ("shard",),
-                args.block_size,
-                threshold="calibrated" if args.calibrate else "cached",
-                mode="shard_batch" if args.qshard else "shard_structure",
-            )
-            jax.block_until_ready(s.blocked.x_blocks)
-            qfn = sharded_hybrid.query
-        else:
-            s = distributed.build_sharded(jnp.asarray(x), mesh, ("shard",), args.block_size)
-            jax.block_until_ready(s.x_blocks)
-            dist_q = distributed.make_query_fn(mesh, ("shard",))
-            qfn = lambda st, l, r: dist_q(st, jnp.asarray(l), jnp.asarray(r))
-        t_build = time.perf_counter() - t0
+def _validate(ap: argparse.ArgumentParser, args, spec: registry.EngineSpec) -> None:
+    """Flag validation straight off the EngineSpec capability metadata."""
+    if args.qshard and "shard_batch" not in spec.modes:
+        ap.error(
+            f"--qshard requires an engine with a 'shard_batch' mode; "
+            f"{args.engine} declares modes {spec.modes or '()'}"
+        )
+    if args.calibrate and "threshold" not in spec.build_kwargs:
+        ap.error(
+            f"--calibrate requires an engine with a 'threshold' build kwarg; "
+            f"{args.engine} declares {sorted(spec.build_kwargs) or '()'}"
+        )
+    if args.block_size is not None and "block_size" not in spec.build_kwargs:
+        ap.error(
+            f"--block-size requires an engine with a 'block_size' build kwarg; "
+            f"{args.engine} declares {sorted(spec.build_kwargs) or '()'}"
+        )
 
-        total_q = 0
-        t0 = time.perf_counter()
-        last = None
-        for b in range(args.batches):
-            l, r = make_queries(rng, args.n, args.batch, args.dist)
-            idx, val = qfn(s, l, r)
-            last = (l, r, idx, val)
-            total_q += args.batch
-        jax.block_until_ready(last[2])
-        t_serve = time.perf_counter() - t0
+
+def _build_kwargs(args, spec: registry.EngineSpec) -> dict:
+    kw = {}
+    if args.block_size is not None:
+        kw["block_size"] = args.block_size
+    if "threshold" in spec.build_kwargs:
+        kw["threshold"] = "calibrated" if args.calibrate else "cached"
+    if args.qshard:
+        kw["mode"] = "shard_batch"
+    return kw
+
+
+def _block_on_state(state) -> None:
+    for leaf in jax.tree_util.tree_leaves(state):
+        if isinstance(leaf, jax.Array):
+            leaf.block_until_ready()
+
+
+def _run_oneshot(args, spec, state, x, rng) -> bool:
+    total_q = 0
+    last = None
+    t0 = time.perf_counter()
+    for _ in range(args.batches):
+        l, r = make_queries(rng, args.n, args.batch, args.dist)
+        idx, val = spec.query(state, l, r)
+        last = (l, r, idx, val)
+        total_q += args.batch
+    jax.block_until_ready(last[2])
+    t_serve = time.perf_counter() - t0
 
     l, r, idx, val = last
     k = min(args.verify, args.batch)
     gold = ref.rmq_ref(x, l[:k], r[:k])
     ok = (np.asarray(idx[:k]) == gold).all()
-    mode = " qshard" if (args.engine == "sharded_hybrid" and args.qshard) else ""
+    mode = " qshard" if args.qshard else ""
     print(
         f"[{args.engine}{mode}] served {total_q} RMQs over n={args.n} "
-        f"({args.dist} ranges) on {n_dev} shard(s): "
-        f"build {t_build*1e3:.1f} ms, serve {t_serve*1e3:.1f} ms "
-        f"({t_serve/total_q*1e9:.1f} ns/RMQ), verify[{k}] {'OK' if ok else 'MISMATCH'}"
+        f"({args.dist} ranges) on {len(jax.devices())} device(s): "
+        f"serve {t_serve*1e3:.1f} ms ({t_serve/total_q*1e9:.1f} ns/RMQ), "
+        f"verify[{k}] {'OK' if ok else 'MISMATCH'}"
     )
+    return bool(ok)
+
+
+def _run_async(args, spec, state, x) -> bool:
+    qfn = lambda l, r: spec.query(state, l, r)
+    cfg = ServeConfig(
+        deadline_s=args.deadline_ms * 1e-3,
+        max_batch=args.max_batch,
+        max_pending=args.max_pending,
+        workers=args.workers,
+        n=args.n,
+    )
+    srv = RMQServer(qfn, cfg)
+    srv.warmup()  # compile every padded launch shape before traffic
+
+    with srv:
+        t0 = time.perf_counter()
+        per_client = run_poisson_clients(
+            args.clients,
+            args.requests,
+            args.rate,
+            lambda rng, c: make_queries(rng, args.n, args.req_batch, args.dist),
+            srv.submit,
+            seed=10_000,
+        )
+        done = []
+        dropped = 0
+        for out in per_client:
+            for (l, r), fut in out:
+                if fut is None:
+                    dropped += 1
+                else:
+                    done.append((l, r, fut.result(timeout=300)))
+        wall = time.perf_counter() - t0  # serving only: verification is below
+    st = srv.stats()
+
+    served = len(done)
+    mismatches = 0
+    for l, r, res in done:
+        gold = ref.rmq_ref(x, l, r)
+        if not (np.array_equal(res.idx, gold) and np.array_equal(res.val, x[gold])):
+            mismatches += 1
+
+    mode = " qshard" if args.qshard else ""
+    print(
+        f"[async {args.engine}{mode}] {args.clients} clients x {args.requests} reqs "
+        f"x {args.req_batch} RMQs ({args.dist} ranges, {args.rate:g} req/s/client, "
+        f"deadline {args.deadline_ms:g} ms) on {len(jax.devices())} device(s), "
+        f"{wall*1e3:.0f} ms wall"
+    )
+    print(f"  {st.summary()}")
+    print(
+        f"  verify: {served - mismatches}/{served} requests bit-identical to the "
+        f"oracle; dropped {dropped}"
+    )
+    return mismatches == 0 and served > 0
+
+
+def main(argv=None) -> None:
+    ap = _parser()
+    args = ap.parse_args(argv)
+    spec = registry.get(args.engine)
+    _validate(ap, args, spec)
+
+    rng = np.random.default_rng(0)
+    x = rng.random(args.n, dtype=np.float32)
+
+    mesh = axes = None
+    if spec.needs_mesh:
+        mesh, axes = registry.default_mesh()
+    ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        t0 = time.perf_counter()
+        state = registry.build_for_serving(
+            args.engine, jnp.asarray(x), mesh, axes, **_build_kwargs(args, spec)
+        )
+        _block_on_state(state)
+        print(f"[{args.engine}] build {((time.perf_counter() - t0))*1e3:.1f} ms (n={args.n})")
+
+        if args.mode == "oneshot":
+            ok = _run_oneshot(args, spec, state, x, rng)
+        else:
+            ok = _run_async(args, spec, state, x)
     if not ok:
         raise SystemExit(1)
 

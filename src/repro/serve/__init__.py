@@ -1,0 +1,46 @@
+"""Async micro-batching serve subsystem (DESIGN.md §7).
+
+The paper's headline workload is *batches* of RMQs; concurrent client
+traffic arrives as many small, variable-size requests. This package turns
+one into the other:
+
+    submit(l, r) ─► admission control ─► request queue
+        └─► deadline micro-batcher (coalesce + power-of-two pad)
+              └─► engine-pool workers (any ``(l, r) -> (idx, val)`` engine)
+                    └─► exact per-request scatter-back + latency stamps
+
+``batcher`` is the pure coalescing/padding/scatter core (no threads, no
+clocks — unit-testable against the numpy oracle); ``server.RMQServer``
+wires it to a bounded request queue, a deadline flush loop, and a worker
+pool; ``workload`` provides the paper's §6.4 range distributions (int32 at
+the boundary) and open-loop Poisson arrival processes for clients.
+"""
+
+from .batcher import MicroBatch, bucket, coalesce, scatter_back
+from .server import (
+    RMQServer,
+    RequestResult,
+    RequestTiming,
+    ServeConfig,
+    ServeStats,
+    ServerClosed,
+    ServerOverloaded,
+)
+from .workload import make_queries, poisson_interarrivals, run_poisson_clients
+
+__all__ = [
+    "MicroBatch",
+    "RMQServer",
+    "RequestResult",
+    "RequestTiming",
+    "ServeConfig",
+    "ServeStats",
+    "ServerClosed",
+    "ServerOverloaded",
+    "bucket",
+    "coalesce",
+    "make_queries",
+    "poisson_interarrivals",
+    "run_poisson_clients",
+    "scatter_back",
+]

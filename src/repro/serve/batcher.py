@@ -1,0 +1,71 @@
+"""Pure micro-batching core: coalesce, power-of-two pad, scatter back.
+
+Concurrent client requests are concatenated *in arrival order* into one
+engine batch, the batch is padded to the next power of two, and after the
+engine answers, each request gets back exactly its slice. Order-preserving
+concatenation is what makes the scatter-back trivially exact: the engines
+already implement exact leftmost-tie semantics per query, and no
+re-ordering ever happens across the coalesce/scatter round-trip.
+
+Padding every launch to a power-of-two bucket bounds the engine's jit
+cache: however client batch sizes vary, a server with ``max_batch`` queries
+per launch compiles at most ``log2(bucket(max_batch)) + 1`` shapes per
+engine path. Pad queries are the trivial ``(0, 0)`` range (cheap, always
+valid) and are sliced off before the scatter-back.
+
+This module is deliberately free of threads and clocks so the exact
+coalescing/padding/scatter logic unit-tests against the numpy oracle;
+``server.RMQServer`` supplies the queue, deadline loop, and worker pool.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["MicroBatch", "bucket", "coalesce", "scatter_back"]
+
+
+def bucket(b: int) -> int:
+    """Smallest power of two >= b: the padded launch shape for a b-query batch."""
+    if b < 1:
+        raise ValueError(f"batch size must be >= 1, got {b}")
+    return 1 << (b - 1).bit_length()
+
+
+class MicroBatch(NamedTuple):
+    """One coalesced engine launch assembled from whole client requests."""
+
+    l: np.ndarray  # (bucket(n_queries),) int32; tail padded with 0
+    r: np.ndarray  # (bucket(n_queries),) int32; tail padded with 0
+    n_queries: int  # valid prefix length (pre-padding)
+    spans: Tuple[Tuple[int, int], ...]  # per-request (offset, length), arrival order
+
+
+def coalesce(ls: Sequence[np.ndarray], rs: Sequence[np.ndarray]) -> MicroBatch:
+    """Concatenate per-request (l, r) in arrival order and pad to the bucket."""
+    sizes = [np.asarray(a).shape[0] for a in ls]
+    b = int(sum(sizes))
+    bp = bucket(b)
+    l = np.zeros(bp, np.int32)
+    r = np.zeros(bp, np.int32)
+    spans: List[Tuple[int, int]] = []
+    off = 0
+    for la, ra in zip(ls, rs):
+        k = la.shape[0]
+        l[off : off + k] = la
+        r[off : off + k] = ra
+        spans.append((off, k))
+        off += k
+    return MicroBatch(l=l, r=r, n_queries=b, spans=tuple(spans))
+
+
+def scatter_back(mb: MicroBatch, idx, val) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Slice batch results back per request (arrival order, pads dropped).
+
+    Copies so a request's result never pins the whole batch's buffers.
+    """
+    idx = np.asarray(idx)
+    val = np.asarray(val)
+    return [(idx[o : o + k].copy(), val[o : o + k].copy()) for o, k in mb.spans]

@@ -1,0 +1,371 @@
+"""Async RMQ server: request queue -> deadline micro-batcher -> engine pool.
+
+``RMQServer`` accepts variable-size query batches from concurrent clients
+and coalesces them into power-of-two padded engine launches:
+
+    submit(l, r) ─► admission control (bounded in-flight requests)
+        └─► request queue ─► batcher thread
+              │   flush when the coalesced batch reaches ``max_batch``
+              │   queries OR the oldest pending request ages past
+              │   ``deadline_s`` — latency is bounded by the deadline even
+              │   at low offered load
+              └─► microbatch queue ─► engine-pool worker threads
+                    └─► scatter-back, per-request futures + latency stamps
+
+Admission control bounds *in-flight* requests (queued + batching +
+executing): past ``max_pending``, ``submit`` raises ``ServerOverloaded`` —
+the backpressure signal open-loop clients drop on and closed-loop clients
+retry on — so a stalled engine degrades into rejections instead of an
+unbounded queue. Per-request latency decomposes as queue (submit -> flush)
+plus service (flush -> done); ``stats()`` aggregates p50/p99 and sustained
+throughput over the serving interval.
+
+The engine is any ``(l, r) -> (idx, val)`` callable — typically a registry
+``EngineSpec.query`` closed over its built state (``launch.serve`` wires
+exactly that). jax dispatch is thread-safe; ``workers > 1`` overlaps one
+batch's host-side partition/scatter work with another's device execution.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Callable, List, NamedTuple, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .batcher import MicroBatch, bucket, coalesce, scatter_back
+
+__all__ = [
+    "RMQServer",
+    "RequestResult",
+    "RequestTiming",
+    "ServeConfig",
+    "ServeStats",
+    "ServerClosed",
+    "ServerOverloaded",
+]
+
+_INT32_MAX = np.iinfo(np.int32).max
+_STOP = object()
+
+
+class ServerClosed(RuntimeError):
+    """submit() after close()."""
+
+
+class ServerOverloaded(RuntimeError):
+    """Admission control rejected the request: too many in flight."""
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    deadline_s: float = 2e-3  # max coalescing wait for the oldest request
+    max_batch: int = 4096  # flush once the coalesced batch reaches this
+    max_pending: int = 4096  # in-flight request bound (admission control)
+    workers: int = 1  # engine-pool threads
+    n: Optional[int] = None  # if set, submit validates r < n
+    val_dtype: object = np.float32  # engine value dtype (empty-request results)
+
+    def __post_init__(self):
+        if self.deadline_s < 0 or self.max_batch < 1 or self.max_pending < 1 or self.workers < 1:
+            raise ValueError(f"invalid ServeConfig: {self}")
+
+
+class RequestTiming(NamedTuple):
+    queue_s: float  # submit -> batch flush (coalescing wait)
+    service_s: float  # flush -> engine done
+    total_s: float
+
+
+class RequestResult(NamedTuple):
+    idx: np.ndarray  # (B,) int32 leftmost argmin per query
+    val: np.ndarray  # (B,) corresponding values
+    timing: RequestTiming
+
+
+class _Request:
+    __slots__ = ("l", "r", "future", "t_submit", "t_flush")
+
+    def __init__(self, l, r, t_submit):
+        self.l = l
+        self.r = r
+        self.future: Future = Future()
+        self.t_submit = t_submit
+        self.t_flush = 0.0
+
+
+class ServeStats(NamedTuple):
+    served_requests: int
+    served_queries: int
+    rejected_requests: int
+    n_batches: int
+    mean_batch_requests: float
+    mean_batch_queries: float
+    padded_sizes: Tuple[int, ...]  # distinct launch shapes (jit-cache bound)
+    p50_queue_s: float
+    p99_queue_s: float
+    p50_total_s: float
+    p99_total_s: float
+    throughput_qps: float  # served queries / (first submit -> last done)
+
+    def summary(self) -> str:
+        return (
+            f"{self.served_requests} reqs / {self.served_queries} RMQs in "
+            f"{self.n_batches} microbatches (mean {self.mean_batch_requests:.1f} "
+            f"reqs, {self.mean_batch_queries:.1f} RMQs; padded shapes "
+            f"{list(self.padded_sizes)}); latency p50 {self.p50_total_s*1e3:.2f} ms "
+            f"p99 {self.p99_total_s*1e3:.2f} ms (queue p50 "
+            f"{self.p50_queue_s*1e3:.2f} ms); {self.throughput_qps:,.0f} RMQ/s; "
+            f"rejected {self.rejected_requests}"
+        )
+
+
+class RMQServer:
+    """Deadline micro-batching server over one built RMQ engine."""
+
+    def __init__(self, query_fn: Callable, config: Optional[ServeConfig] = None, **overrides):
+        self._query_fn = query_fn
+        self._cfg = config if config is not None else ServeConfig(**overrides)
+        self._inq: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._mbq: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._inflight = 0
+        self._closed = False
+        self._started = False
+        self._threads: List[threading.Thread] = []
+        # Stats accumulators (under _lock).
+        self._queue_lat: List[float] = []
+        self._total_lat: List[float] = []
+        self._batch_requests: List[int] = []
+        self._batch_queries: List[int] = []
+        self._padded: Set[int] = set()
+        self._rejected = 0
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+
+    @property
+    def config(self) -> ServeConfig:
+        return self._cfg
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "RMQServer":
+        if self._started:
+            return self
+        self._started = True
+        self._threads = [threading.Thread(target=self._batch_loop, daemon=True, name="rmq-batcher")]
+        for i in range(self._cfg.workers):
+            self._threads.append(
+                threading.Thread(target=self._worker_loop, daemon=True, name=f"rmq-worker-{i}")
+            )
+        for t in self._threads:
+            t.start()
+        return self
+
+    def __enter__(self) -> "RMQServer":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def close(self, timeout: Optional[float] = None):
+        """Stop accepting, drain everything already admitted, join threads."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            if self._started:
+                self._inq.put(_STOP)  # under _lock: serialized against submit
+        for t in self._threads:
+            t.join(timeout)
+
+    def warmup(self, sizes: Optional[Sequence[int]] = None):
+        """Compile every padded launch shape before traffic hits.
+
+        Client-visible tail latency must not include jit compiles; by default
+        this runs the engine once per power-of-two bucket up to ``max_batch``
+        — exactly the shapes the batcher can emit. When ``config.n`` is known
+        each shape runs twice, on all-(0, 0) and all-(0, n-1) batches, so a
+        range-adaptive engine compiles both its short and long regime at
+        every shape instead of deferring the long path to the first client.
+        """
+        if sizes is None:
+            top = bucket(self._cfg.max_batch)
+            sizes, s = [], 1
+            while s <= top:
+                sizes.append(s)
+                s *= 2
+        n = self._cfg.n
+        for s in sizes:
+            zeros = np.zeros(s, np.int32)
+            self._query_fn(zeros, zeros)
+            if n is not None and n > 1:
+                self._query_fn(zeros, np.full(s, n - 1, np.int32))
+
+    # -- client API ---------------------------------------------------------
+
+    def submit(self, l, r) -> Future:
+        """Enqueue one client request of (l, r) query bounds -> Future.
+
+        The future resolves to a ``RequestResult`` whose idx/val line up
+        elementwise with the submitted bounds. Raises ``ServerOverloaded``
+        when admission control rejects (backpressure), ``ServerClosed`` after
+        ``close()``, and ``ValueError``/``TypeError`` on malformed bounds.
+        """
+        if self._closed:
+            raise ServerClosed("submit() on a closed server")
+        if not self._started:
+            raise ServerClosed("submit() before start()")
+        l = np.asarray(l)
+        r = np.asarray(r)
+        if l.shape != r.shape or l.ndim != 1:
+            raise ValueError(f"l/r must be equal-shape 1-D arrays, got {l.shape} / {r.shape}")
+        if not (np.issubdtype(l.dtype, np.integer) and np.issubdtype(r.dtype, np.integer)):
+            raise TypeError(f"query bounds must be integer arrays, got {l.dtype} / {r.dtype}")
+        if l.size == 0:
+            fut: Future = Future()
+            fut.set_result(
+                RequestResult(
+                    np.zeros(0, np.int32),
+                    np.zeros(0, np.dtype(self._cfg.val_dtype)),
+                    RequestTiming(0.0, 0.0, 0.0),
+                )
+            )
+            return fut
+        if l.size > self._cfg.max_batch:
+            raise ValueError(
+                f"request of {l.size} queries exceeds max_batch={self._cfg.max_batch}; split it"
+            )
+        lo, hi = int(l.min()), int(np.asarray(r, np.int64).max())
+        if lo < 0 or np.any(r < l):
+            raise ValueError("query bounds must satisfy 0 <= l <= r")
+        if hi > _INT32_MAX or (self._cfg.n is not None and hi >= self._cfg.n):
+            bound = self._cfg.n if self._cfg.n is not None else _INT32_MAX + 1
+            raise ValueError(f"query upper bound {hi} outside [0, {bound})")
+
+        now = time.perf_counter()
+        req = _Request(l.astype(np.int32), r.astype(np.int32), now)
+        with self._lock:
+            if self._closed:
+                raise ServerClosed("submit() on a closed server")
+            if self._inflight >= self._cfg.max_pending:
+                self._rejected += 1
+                raise ServerOverloaded(
+                    f"{self._inflight} requests in flight (max_pending={self._cfg.max_pending})"
+                )
+            self._inflight += 1
+            if self._t_first_submit is None:
+                self._t_first_submit = now
+            self._inq.put(req)  # under _lock: never lands after close()'s _STOP
+        return req.future
+
+    # -- internals ----------------------------------------------------------
+
+    def _batch_loop(self):
+        cfg = self._cfg
+        pending: List[_Request] = []
+        pend_q = 0
+
+        def flush():
+            nonlocal pending, pend_q
+            mb = coalesce([q.l for q in pending], [q.r for q in pending])
+            t = time.perf_counter()
+            for q in pending:
+                q.t_flush = t
+            self._mbq.put((mb, pending))
+            pending, pend_q = [], 0
+
+        while True:
+            if pending:
+                left = cfg.deadline_s - (time.perf_counter() - pending[0].t_submit)
+                if left <= 0:
+                    item = None
+                else:
+                    try:
+                        item = self._inq.get(timeout=left)
+                    except queue.Empty:
+                        item = None
+            else:
+                item = self._inq.get()
+            if item is _STOP:
+                if pending:
+                    flush()
+                for _ in range(cfg.workers):
+                    self._mbq.put(_STOP)
+                return
+            if item is not None:
+                # A request that would overflow the launch flushes what's
+                # pending first, so a batch never exceeds max_batch queries.
+                if pend_q and pend_q + item.l.size > cfg.max_batch:
+                    flush()
+                pending.append(item)
+                pend_q += item.l.size
+            if pending and (
+                pend_q >= cfg.max_batch
+                or time.perf_counter() - pending[0].t_submit >= cfg.deadline_s
+            ):
+                flush()
+
+    def _worker_loop(self):
+        while True:
+            item = self._mbq.get()
+            if item is _STOP:
+                return
+            mb, reqs = item
+            try:
+                idx, val = self._query_fn(mb.l, mb.r)
+                parts = scatter_back(mb, idx, val)
+            except BaseException as e:  # engine failure: fail the batch, keep serving
+                with self._lock:
+                    self._inflight -= len(reqs)
+                for q in reqs:
+                    q.future.set_exception(e)
+                continue
+            t_done = time.perf_counter()
+            with self._lock:
+                self._inflight -= len(reqs)
+                self._batch_requests.append(len(reqs))
+                self._batch_queries.append(mb.n_queries)
+                self._padded.add(mb.l.size)
+                for q in reqs:
+                    self._queue_lat.append(q.t_flush - q.t_submit)
+                    self._total_lat.append(t_done - q.t_submit)
+                self._t_last_done = t_done
+            for q, (qi, qv) in zip(reqs, parts):
+                q.future.set_result(
+                    RequestResult(
+                        qi, qv, RequestTiming(q.t_flush - q.t_submit, t_done - q.t_flush, t_done - q.t_submit)
+                    )
+                )
+
+    def stats(self) -> ServeStats:
+        with self._lock:
+            tlat = np.asarray(self._total_lat)
+            qlat = np.asarray(self._queue_lat)
+            nreq = int(tlat.size)
+            nq = int(sum(self._batch_queries))
+            nb = len(self._batch_queries)
+            span = (
+                self._t_last_done - self._t_first_submit
+                if nreq and self._t_first_submit is not None and self._t_last_done is not None
+                else 0.0
+            )
+            pct = lambda a, p: float(np.percentile(a, p)) if a.size else 0.0
+            return ServeStats(
+                served_requests=nreq,
+                served_queries=nq,
+                rejected_requests=self._rejected,
+                n_batches=nb,
+                mean_batch_requests=nreq / nb if nb else 0.0,
+                mean_batch_queries=nq / nb if nb else 0.0,
+                padded_sizes=tuple(sorted(self._padded)),
+                p50_queue_s=pct(qlat, 50),
+                p99_queue_s=pct(qlat, 99),
+                p50_total_s=pct(tlat, 50),
+                p99_total_s=pct(tlat, 99),
+                throughput_qps=nq / span if span > 0 else 0.0,
+            )

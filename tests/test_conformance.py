@@ -22,7 +22,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import ref, registry
-from repro.launch.serve import make_queries
+from repro.serve.workload import make_queries
 
 
 def _bounded(rng, n, b):

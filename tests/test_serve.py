@@ -1,0 +1,348 @@
+"""Serve-subsystem tests: micro-batcher, server loop, registry capabilities.
+
+The pure coalesce/pad/scatter core is tested directly against the numpy
+oracle; the threaded server is tested with generous deadlines (no timing
+races) and with a numpy-only fake engine where device execution would only
+add noise. End-to-end scatter-back under mixed range distributions runs
+through the real registry ``hybrid`` engine.
+"""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid, ref, registry
+from repro.serve import (
+    RMQServer,
+    ServeConfig,
+    ServerClosed,
+    ServerOverloaded,
+    batcher,
+)
+from repro.serve.workload import make_queries
+
+
+def _oracle_engine(x):
+    """A (l, r) -> (idx, val) engine that is literally the oracle."""
+
+    def qfn(l, r):
+        idx = ref.rmq_ref(x, l, r).astype(np.int32)
+        return idx, x[idx]
+
+    return qfn
+
+
+def _bounded(rng, n, b):
+    a = rng.integers(0, n, b)
+    c = rng.integers(0, n, b)
+    return np.minimum(a, c).astype(np.int32), np.maximum(a, c).astype(np.int32)
+
+
+# --- pure batcher core ------------------------------------------------------
+
+
+def test_bucket_powers_of_two():
+    assert [batcher.bucket(b) for b in (1, 2, 3, 4, 5, 127, 128, 129)] == [
+        1, 2, 4, 4, 8, 128, 128, 256,
+    ]
+    with pytest.raises(ValueError):
+        batcher.bucket(0)
+
+
+def test_coalesce_pads_to_bucket_and_preserves_order():
+    ls = [np.array([1, 2, 3], np.int32), np.array([7], np.int32), np.array([4, 5], np.int32)]
+    rs = [np.array([9, 9, 9], np.int32), np.array([8], np.int32), np.array([6, 7], np.int32)]
+    mb = batcher.coalesce(ls, rs)
+    assert mb.n_queries == 6
+    assert mb.l.shape == (8,)  # bucket(6)
+    assert mb.spans == ((0, 3), (3, 1), (4, 2))
+    np.testing.assert_array_equal(mb.l[:6], [1, 2, 3, 7, 4, 5])
+    np.testing.assert_array_equal(mb.r[:6], [9, 9, 9, 8, 6, 7])
+    np.testing.assert_array_equal(mb.l[6:], 0)  # trivial (0, 0) pad queries
+    np.testing.assert_array_equal(mb.r[6:], 0)
+
+
+def test_scatter_back_roundtrip_vs_oracle():
+    rng = np.random.default_rng(0)
+    n = 512
+    x = rng.integers(0, 4, n).astype(np.float32)  # tie-heavy
+    ls, rs = zip(*[_bounded(rng, n, b) for b in (3, 8, 1, 5)])
+    mb = batcher.coalesce(ls, rs)
+    idx = ref.rmq_ref(x, mb.l, mb.r)
+    parts = batcher.scatter_back(mb, idx, x[idx])
+    assert len(parts) == 4
+    for (l, r), (pi, pv) in zip(zip(ls, rs), parts):
+        gold = ref.rmq_ref(x, l, r)
+        np.testing.assert_array_equal(pi, gold)
+        np.testing.assert_array_equal(pv, x[gold])
+
+
+# --- server: coalescing, deadline, padding buckets --------------------------
+
+
+def test_microbatcher_coalesces_across_clients():
+    rng = np.random.default_rng(1)
+    n = 256
+    x = rng.random(n).astype(np.float32)
+    # Generous deadline: all requests submitted well inside it -> ONE batch.
+    with RMQServer(_oracle_engine(x), ServeConfig(deadline_s=0.5, max_batch=1024, n=n)) as srv:
+        subs = [(*_bounded(rng, n, 4 + c), c) for c in range(3)]
+        futs = [(l, r, srv.submit(l, r)) for l, r, _ in subs]
+        results = [(l, r, f.result(timeout=30)) for l, r, f in futs]
+    st = srv.stats()
+    assert st.n_batches == 1, st
+    assert st.served_requests == 3
+    assert st.served_queries == 4 + 5 + 6
+    assert st.padded_sizes == (16,)  # bucket(15)
+    for l, r, res in results:
+        np.testing.assert_array_equal(res.idx, ref.rmq_ref(x, l, r))
+
+
+def test_deadline_flush_without_filling_batch():
+    x = np.arange(64, 0, -1).astype(np.float32)
+    cfg = ServeConfig(deadline_s=0.05, max_batch=4096, n=64)
+    with RMQServer(_oracle_engine(x), cfg) as srv:
+        t0 = time.perf_counter()
+        res = srv.submit(np.array([3], np.int32), np.array([60], np.int32)).result(timeout=30)
+        wall = time.perf_counter() - t0
+    # Flushed by the deadline (batch nowhere near max_batch), not stuck.
+    assert srv.stats().n_batches == 1
+    assert res.timing.queue_s >= 0.04  # held for coalescing ~the full deadline
+    assert wall < 10
+    np.testing.assert_array_equal(res.idx, [60])  # min of descending array
+
+
+def test_padding_bucket_selection_and_bounded_shapes():
+    rng = np.random.default_rng(2)
+    n = 128
+    x = rng.random(n).astype(np.float32)
+    # deadline=0: every request flushes alone -> padded shape == bucket(size).
+    with RMQServer(_oracle_engine(x), ServeConfig(deadline_s=0.0, max_batch=64, n=n)) as srv:
+        for size in (1, 3, 5, 9, 33):
+            l, r = _bounded(rng, n, size)
+            srv.submit(l, r).result(timeout=30)
+    st = srv.stats()
+    assert st.padded_sizes == (1, 4, 8, 16, 64)
+    # The jit-cache bound: every shape a power of two, at most log2(max)+1 of them.
+    assert all(s & (s - 1) == 0 for s in st.padded_sizes)
+    assert len(st.padded_sizes) <= int(np.log2(batcher.bucket(64))) + 1
+
+
+def test_max_batch_splits_flushes():
+    rng = np.random.default_rng(3)
+    n = 64
+    x = rng.random(n).astype(np.float32)
+    # 3 requests of 4 queries against max_batch=8: the third overflows -> 2 batches.
+    with RMQServer(_oracle_engine(x), ServeConfig(deadline_s=0.5, max_batch=8, n=n)) as srv:
+        futs = []
+        for _ in range(3):
+            l, r = _bounded(rng, n, 4)
+            futs.append(srv.submit(l, r))
+        for f in futs:
+            f.result(timeout=30)
+    st = srv.stats()
+    assert st.n_batches == 2
+    assert max(st.padded_sizes) <= 8
+
+
+def test_scatter_back_mixed_dists_through_hybrid_engine():
+    """End-to-end through the real registry engine under all three §6.4 regimes."""
+    rng = np.random.default_rng(4)
+    n = 4096
+    x = rng.integers(0, 9, n).astype(np.float32)  # dense ties
+    spec = registry.get("hybrid")
+    state = registry.build_for_serving("hybrid", jnp.asarray(x))
+    qfn = lambda l, r: spec.query(state, l, r)
+
+    results = []
+    lock = threading.Lock()
+
+    def client(c, dist):
+        crng = np.random.default_rng(100 + c)
+        for _ in range(5):
+            l, r = make_queries(crng, n, 1 + crng.integers(1, 12), dist)
+            with lock:
+                results.append((l, r, srv.submit(l, r)))
+
+    with RMQServer(qfn, ServeConfig(deadline_s=0.02, max_batch=256, n=n)) as srv:
+        threads = [
+            threading.Thread(target=client, args=(c, d))
+            for c, d in enumerate(("small", "medium", "large"))
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        done = [(l, r, f.result(timeout=120)) for l, r, f in results]
+    assert len(done) == 15
+    for l, r, res in done:
+        gold = ref.rmq_ref(x, l, r)
+        np.testing.assert_array_equal(res.idx, gold)
+        np.testing.assert_array_equal(res.val, x[gold])
+    assert srv.stats().n_batches < 15  # actually coalesced across clients
+
+
+# --- server: edges, admission control, validation ---------------------------
+
+
+def test_empty_request_resolves_immediately():
+    x = np.ones(8, np.float32)
+    with RMQServer(_oracle_engine(x), ServeConfig(n=8)) as srv:
+        res = srv.submit(np.zeros(0, np.int64), np.zeros(0, np.int64)).result(timeout=5)
+        assert res.idx.shape == (0,) and res.val.shape == (0,)
+    assert srv.stats().n_batches == 0  # never reached the engine
+
+
+def test_admission_control_backpressure():
+    x = np.ones(8, np.float32)
+    release = threading.Event()
+
+    def slow_engine(l, r):
+        release.wait(30)
+        idx = ref.rmq_ref(x, l, r).astype(np.int32)
+        return idx, x[idx]
+
+    cfg = ServeConfig(deadline_s=0.0, max_batch=4, max_pending=2, n=8)
+    with RMQServer(slow_engine, cfg) as srv:
+        one = np.zeros(1, np.int32)
+        f1 = srv.submit(one, one)
+        f2 = srv.submit(one, one)
+        with pytest.raises(ServerOverloaded):
+            srv.submit(one, one)  # 2 in flight >= max_pending
+        release.set()
+        f1.result(timeout=30)
+        f2.result(timeout=30)
+        # Completion drains in-flight: admission opens again.
+        srv.submit(one, one).result(timeout=30)
+    st = srv.stats()
+    assert st.rejected_requests == 1
+    assert st.served_requests == 3
+
+
+def test_submit_validation():
+    x = np.ones(16, np.float32)
+    with RMQServer(_oracle_engine(x), ServeConfig(max_batch=8, n=16)) as srv:
+        one = np.zeros(1, np.int32)
+        with pytest.raises(ValueError):  # l > r
+            srv.submit(np.array([5], np.int32), np.array([2], np.int32))
+        with pytest.raises(ValueError):  # negative
+            srv.submit(np.array([-1], np.int32), one)
+        with pytest.raises(ValueError):  # r >= n
+            srv.submit(one, np.array([16], np.int32))
+        with pytest.raises(TypeError):  # float bounds
+            srv.submit(np.array([0.5]), np.array([1.5]))
+        with pytest.raises(ValueError):  # oversized vs max_batch
+            srv.submit(np.zeros(9, np.int32), np.zeros(9, np.int32))
+        with pytest.raises(ValueError):  # shape mismatch
+            srv.submit(np.zeros(2, np.int32), np.zeros(3, np.int32))
+    # Without a configured n, the int32 index range is still enforced.
+    with RMQServer(_oracle_engine(x), ServeConfig()) as unbounded:
+        with pytest.raises(ValueError):
+            unbounded.submit(np.zeros(1, np.int32), np.array([2**31], np.int64))
+
+
+def test_submit_after_close_raises():
+    x = np.ones(8, np.float32)
+    srv = RMQServer(_oracle_engine(x), ServeConfig(n=8)).start()
+    srv.close()
+    with pytest.raises(ServerClosed):
+        srv.submit(np.zeros(1, np.int32), np.zeros(1, np.int32))
+
+
+def test_engine_failure_fails_batch_but_server_survives():
+    calls = []
+
+    def flaky(l, r):
+        calls.append(len(l))
+        if len(calls) == 1:
+            raise RuntimeError("engine down")
+        idx = np.zeros(len(l), np.int32)
+        return idx, np.zeros(len(l), np.float32)
+
+    with RMQServer(flaky, ServeConfig(deadline_s=0.0, max_batch=8, n=8)) as srv:
+        one = np.zeros(1, np.int32)
+        bad = srv.submit(one, one)
+        with pytest.raises(RuntimeError):
+            bad.result(timeout=30)
+        ok = srv.submit(one, one).result(timeout=30)  # still serving
+        assert ok.idx.shape == (1,)
+
+
+# --- query-path dtype guard (hybrid dispatch boundary) ----------------------
+
+
+def test_dispatch_rejects_float_bounds():
+    with pytest.raises(TypeError):
+        hybrid.dispatch_by_length(
+            np.array([0.0]), np.array([1.0]), 4, None, None, np.float32
+        )
+
+
+def test_dispatch_rejects_out_of_int32_bounds():
+    with pytest.raises(ValueError):
+        hybrid.dispatch_by_length(
+            np.array([0], np.int64), np.array([2**31], np.int64), 4, None, None, np.float32
+        )
+    with pytest.raises(ValueError):
+        hybrid.dispatch_by_length(
+            np.array([-1], np.int64), np.array([3], np.int64), 4, None, None, np.float32
+        )
+
+
+def test_make_queries_int32_boundary():
+    rng = np.random.default_rng(0)
+    for dist in ("small", "medium", "large"):
+        l, r = make_queries(rng, 1 << 16, 64, dist)
+        assert l.dtype == np.int32 and r.dtype == np.int32
+        assert (l >= 0).all() and (l <= r).all() and (r < (1 << 16)).all()
+    with pytest.raises(ValueError):
+        make_queries(rng, 2**31 + 5, 4, "small")
+
+
+# --- registry capability metadata -------------------------------------------
+
+
+def test_serveable_names_excludes_oracles():
+    names = registry.serveable_names()
+    assert "exhaustive" not in names
+    assert set(names) <= set(registry.names())
+    for flagship in ("hybrid", "sharded_hybrid", "fused128", "distributed"):
+        assert flagship in names
+
+
+def test_capability_metadata_drives_flags():
+    sh = registry.get("sharded_hybrid")
+    assert "shard_batch" in sh.modes and sh.needs_mesh
+    assert {"block_size", "threshold", "mode"} <= set(sh.build_kwargs)
+    hy = registry.get("hybrid")
+    assert "threshold" in hy.build_kwargs and not hy.needs_mesh and hy.modes == ()
+    assert registry.get("distributed").needs_mesh
+    assert "block_size" in registry.get("fused128").build_kwargs
+
+
+def test_build_for_serving_validates_kwargs():
+    x = jnp.arange(256.0)
+    with pytest.raises(ValueError):
+        registry.build_for_serving("lca", x, threshold=7)  # undeclared kwarg
+    with pytest.raises(ValueError):
+        registry.build_for_serving("sharded_hybrid", x, mode="shard_everything")
+    with pytest.raises(ValueError):
+        registry.build_for_serving("exhaustive", x)  # not serveable
+    state = registry.build_for_serving("hybrid", x, threshold=32)
+    assert state.threshold == 32
+
+
+def test_distributed_registry_engine_matches_oracle():
+    rng = np.random.default_rng(6)
+    n = 777
+    x = rng.integers(0, 5, n).astype(np.float32)
+    spec = registry.get("distributed")
+    s = spec.build(jnp.asarray(x))
+    l, r = _bounded(rng, n, 50)
+    idx, val = spec.query(s, l, r)
+    gold = ref.rmq_ref(x, l, r)
+    np.testing.assert_array_equal(np.asarray(idx), gold)
+    np.testing.assert_array_equal(np.asarray(val), x[gold])

@@ -9,12 +9,17 @@
 #    a narrowed pytest invocation can't silently drop it).
 # 3. serve smoke: multi-device (8 fake) end-to-end serve through the
 #    sharded range-adaptive hybrid engine, both distribution modes.
-# 4. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+# 4. async-serve smoke: multi-device (8 fake) serve through the async
+#    micro-batching subsystem (repro.serve) — concurrent Poisson clients,
+#    mixed (medium) ranges, every request verified bit-identical against
+#    the numpy oracle (serve.py exits 1 on any mismatch).
+# 5. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
 #    CPU — Pallas kernels validate through the test suite; the smoke catches
 #    perf-path regressions like import errors, shape breaks, or a suite that
 #    stopped emitting rows).
 #
-# Perf baseline: BENCH_PR2.json (benchmarks/run.py --json); refresh per PR.
+# Perf baseline: BENCH_PR3.json (benchmarks/run.py --json; includes the
+# serve_latency suite); refresh per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -34,6 +39,12 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 300 \
     python -m repro.launch.serve --engine sharded_hybrid --qshard \
     --n 65536 --batch 2048 --batches 2 --block-size 128 --dist medium
 
+echo "== async micro-batching serve smoke (8 fake devices, oracle-verified) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 600 \
+    python -m repro.launch.serve --mode async --engine sharded_hybrid \
+    --n 65536 --block-size 128 --dist medium --clients 4 --requests 12 \
+    --rate 300 --req-batch 16 --max-batch 128
+
 echo "== perf smoke (fig12, smoke sizes) =="
 out=$(timeout 300 python -m benchmarks.run --only fig12 --smoke)
 echo "$out"
@@ -42,4 +53,4 @@ if [ "$rows" -lt 4 ]; then
     echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
     exit 1
 fi
-echo "OK: tier-1 green, conformance green, serve smoke green, fig12 smoke emitted $rows rows"
+echo "OK: tier-1 green, conformance green, serve smokes green, fig12 smoke emitted $rows rows"
