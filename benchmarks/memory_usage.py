@@ -1,11 +1,31 @@
-"""Paper Table 2: memory of each approach's data structure (MB).
+"""Paper Table 2: memory of each approach's data structure (MB) — plus the
+``build_mem`` sweep: *peak per-device build memory* of the doubling-table
+family across device counts.
 
 Reproduced claim ordering: geometric/blocked structure uses the most memory
 (the paper's BVH is ~9n+ the input; our blocked structure is ~(1+1/BS)n +
 tables), LCA/Euler is mid, the O(1)-table structures trade memory for time.
+
+``build_mem`` (``run_build_mem``) compares, per fake-device count:
+
+* ``replicated`` — ``build_replicated_st``: every device holds the full
+  (K, n) table (batch-sharded mode's structure);
+* ``sharded_steady`` — the column-sharded ``ShardedSparseTable`` steady
+  state: (K, n/D) idx+val per device;
+* ``distributed_build_peak`` — the max per-device bytes live at ANY stage of
+  the staged BuildPlan build (observer over shard layout -> local build ->
+  halo exchange), demonstrating the build transient is bounded by the shard
+  too — the old single-device materialization would show up here as a full
+  (K, n) spike.
+
+Subprocess per device count (XLA fixes the device count at first jax import).
 """
 
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -40,5 +60,72 @@ def run():
             emit(f"table2/{name}/n={n}", 0.0, f"{mb:.3f}MB_vs_input_{input_mb:.3f}MB")
 
 
+_BUILD_MEM_CHILD = r"""
+import os, numpy as np, jax, jax.numpy as jnp
+from collections import defaultdict
+from repro.core import build as build_mod, distributed
+from repro.launch.mesh import make_mesh
+
+n = int(os.environ["RMQ_BUILDMEM_N"])
+n_dev = len(jax.devices())
+mesh = make_mesh((n_dev,), ("shard",))
+x = jnp.asarray(np.random.default_rng(0).random(n, dtype=np.float32))
+
+def max_device_bytes(tree):
+    by_dev = defaultdict(int)
+    seen = set()  # the finalize stage aliases arrays (state -> result):
+    for arr in jax.tree_util.tree_leaves(tree):  # count each buffer once
+        if isinstance(arr, jax.Array) and id(arr) not in seen:
+            seen.add(id(arr))
+            for sh in arr.addressable_shards:
+                by_dev[sh.device] += sh.data.nbytes
+    return max(by_dev.values()) if by_dev else 0
+
+rep = distributed.build_replicated_st(x, mesh)
+jax.block_until_ready(rep)
+print("replicated", max_device_bytes(rep))
+
+peak = 0
+def observe(stage, state):
+    global peak
+    live = [v for k, v in state.items() if k != "x"]
+    jax.block_until_ready(live)
+    peak = max(peak, max_device_bytes(live))
+
+sharded = build_mod.build(
+    "sharded_st", x, mesh=mesh, axis_names=("shard",), observer=observe
+)
+print("distributed_build_peak", peak)
+print("sharded_steady", max_device_bytes(sharded))
+"""
+
+
+def run_build_mem():
+    devices = [1, 2] if common.SMOKE else [1, 2, 4, 8]
+    n = 1 << 16 if common.SMOKE else 1 << 20
+    for n_dev in devices:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+        env["PYTHONPATH"] = "src:."
+        env["RMQ_BUILDMEM_N"] = str(n)
+        out = subprocess.run(
+            [sys.executable, "-c", _BUILD_MEM_CHILD],
+            env=env,
+            capture_output=True,
+            text=True,
+        )
+        if out.returncode != 0:
+            emit(f"build_mem/ndev={n_dev}", 0.0, "FAILED")
+            continue
+        for line in out.stdout.strip().splitlines():
+            kind, nbytes = line.split()
+            emit(
+                f"build_mem/ndev={n_dev}/{kind}/n={n}",
+                0.0,
+                f"{int(nbytes) / 2**20:.3f}MB_per_device_peak",
+            )
+
+
 if __name__ == "__main__":
     run()
+    run_build_mem()

@@ -17,8 +17,8 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default="",
-        help="comma list: fig12,fig13,fig10,fig14,table2,roofline,crossover,"
-        "sharded_hybrid,serve_latency",
+        help="comma list: fig12,fig13,fig10,fig14,table2,build_mem,roofline,"
+        "crossover,sharded_hybrid,serve_latency",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -51,6 +51,7 @@ def main() -> None:
         "fig13": batch_scaling.run,
         "fig10": heatmap.run,
         "table2": memory_usage.run,
+        "build_mem": memory_usage.run_build_mem,
         "fig14": mesh_scaling.run,
         "roofline": roofline_report.run,
         "crossover": hybrid_crossover.run,

@@ -6,7 +6,8 @@ through the range-adaptive sharded engine and report ns/RMQ. The small/large
 regimes exercise the single-constituent fast paths (sharded blocked / sharded
 sparse table); medium mixes regimes and exercises the partition+scatter-back.
 One batch-sharded-mode row per device count shows the replicated-structure /
-sharded-queries dual.
+sharded-queries dual; one 2D-mode row (structure x batch mesh, squarest
+factoring) shows the product.
 
 Subprocess per device count (XLA fixes the device count at first jax import).
 """
@@ -25,16 +26,18 @@ _BATCH = 8192
 _CHILD = r"""
 import os, time, numpy as np, jax, jax.numpy as jnp
 from repro.core import sharded_hybrid
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import factor_2d, make_mesh
 from benchmarks.common import make_queries
 n_dev = len(jax.devices())
 mesh = make_mesh((n_dev,), ("shard",))
+mesh2d = make_mesh(factor_2d(n_dev), ("struct", "qbatch"))
 rng = np.random.default_rng(0)
 n = int(os.environ["RMQ_SHYBRID_BENCH_N"])
 batch = int(os.environ["RMQ_SHYBRID_BENCH_B"])
 x = rng.random(n, dtype=np.float32)
-for mode in ("shard_structure", "shard_batch"):
-    s = sharded_hybrid.build(jnp.asarray(x), mesh, ("shard",), 1024, mode=mode)
+for mode in ("shard_structure", "shard_batch", "shard_2d"):
+    m, axes = (mesh2d, ("struct", "qbatch")) if mode == "shard_2d" else (mesh, ("shard",))
+    s = sharded_hybrid.build(jnp.asarray(x), m, axes, 1024, mode=mode)
     dists = ("small", "medium", "large") if mode == "shard_structure" else ("medium",)
     for dist in dists:
         l, r = make_queries(rng, n, batch, dist)
@@ -67,7 +70,7 @@ def run():
         for line in out.stdout.strip().splitlines():
             mode, dist, t = line.split(",")
             t = float(t)
-            tag = "qshard/" if mode == "shard_batch" else ""
+            tag = {"shard_batch": "qshard/", "shard_2d": "2d/"}.get(mode, "")
             emit(
                 f"sharded_hybrid/shards={n_dev}/{tag}dist={dist}",
                 t / batch,

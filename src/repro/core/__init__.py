@@ -17,6 +17,8 @@ Engines:
     global column-sharded doubling table), plus a batch-sharded mode.
   * ``calib_cache`` — persistent JSON cache of calibrated crossover
     thresholds, keyed by (n, block_size, backend, n_devices).
+  * ``build``      — the staged BuildPlan pipeline (shard layout -> local
+    build -> halo exchange -> finalize) every engine build lowers through.
 
 ``registry`` exposes every engine behind one uniform
 ``(build, query) -> (idx, val)`` interface for tests and benchmarks, plus
@@ -27,6 +29,7 @@ and flag validation from.
 
 from . import (
     block_rmq,
+    build,
     calib_cache,
     distributed,
     exhaustive,
@@ -41,6 +44,7 @@ from . import (
 
 __all__ = [
     "block_rmq",
+    "build",
     "calib_cache",
     "distributed",
     "exhaustive",

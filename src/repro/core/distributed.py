@@ -10,7 +10,7 @@ value-matching shards — exact leftmost semantics with only min collectives).
 Works on any mesh: the array is sharded over *all* given axes flattened, so
 the same code runs a 16x16 pod and a (pod=2, 16, 16) multi-pod mesh.
 
-Two orthogonal distribution strategies are provided (DESIGN.md §6):
+Three distribution strategies are provided (DESIGN.md §6, §8):
 
 * **Structure-sharded** (``build_sharded`` / ``build_sharded_st`` +
   ``make_query_fn`` / ``make_st_query_fn``): the *array* is sharded, the
@@ -24,11 +24,20 @@ Two orthogonal distribution strategies are provided (DESIGN.md §6):
   device count; each query is answered by exactly one device, so the merge
   degenerates from the two-pmin reduction to a collective-free concatenation
   along the sharded batch dim.
+* **2D (structure x batch)** (the same factories with ``batch_axes=...``):
+  the structure is sharded over the given ``axis_names`` and the query batch
+  over the disjoint ``batch_axes``, so memory AND throughput both scale —
+  each batch slice is answered by one structure-shard group, merged with
+  pmins over the structure axes only.
 
 The sharded sparse-table path (``ShardedSparseTable``) is the long-range
-constituent of ``core.sharded_hybrid``: the doubling table is built globally
-and column-sharded, each lookup column is owned by exactly one device, and
-the two window candidates merge with the same pmin trick.
+constituent of ``core.sharded_hybrid``: the doubling table is column-sharded,
+each lookup column is owned by exactly one device (per structure-shard
+group), and the two window candidates merge with the same pmin trick. Its
+build is *distributed* — per-shard doubling with a level-k halo exchange of
+boundary columns (``st_local_level0`` + ``st_halo_doubling``, sequenced by
+the ``core.build`` BuildPlan pipeline) — so build-time memory is bounded by
+the shard, never the full (K, n) table.
 """
 
 from __future__ import annotations
@@ -71,6 +80,9 @@ __all__ = [
     "make_st_query_fn",
     "num_shards",
     "pad_to_shards",
+    "st_halo_doubling",
+    "st_levels",
+    "st_local_level0",
 ]
 
 _INT_BIG = jnp.int32(2**31 - 1)
@@ -105,12 +117,8 @@ def pad_to_shards(x: jax.Array, num_shards: int, block_size: int) -> jax.Array:
     return jnp.pad(x, (0, n_pad - x.shape[0]), constant_values=maxval(x.dtype))
 
 
-def build_sharded(x: jax.Array, mesh: Mesh, axis_names: Sequence[str], block_size: int) -> BlockRMQ:
-    """Build per-shard blocked structures; leaves are sharded on the block dim."""
-    axis_names = tuple(axis_names)
-    num = num_shards(mesh, axis_names)
-    x = pad_to_shards(x, num, block_size)
-
+@functools.lru_cache(maxsize=None)
+def _sharded_build_fn(mesh: Mesh, axis_names: Tuple[str, ...], block_size: int):
     def local_build(x_local):
         return block_rmq.build(x_local[0], block_size)
 
@@ -120,16 +128,29 @@ def build_sharded(x: jax.Array, mesh: Mesh, axis_names: Sequence[str], block_siz
         bmin_gidx=P(axis_names),
         st=SparseTable(idx=P(None, axis_names), x=P(axis_names)),
     )
-    fn = shard_map(
-        local_build,
-        mesh=mesh,
-        in_specs=P(axis_names),
-        out_specs=out_specs,
-        check_vma=False,
+    return jax.jit(
+        shard_map(
+            local_build,
+            mesh=mesh,
+            in_specs=P(axis_names),
+            out_specs=out_specs,
+            check_vma=False,
+        )
     )
+
+
+def build_sharded(x: jax.Array, mesh: Mesh, axis_names: Sequence[str], block_size: int) -> BlockRMQ:
+    """Build per-shard blocked structures; leaves are sharded on the block dim.
+
+    The BuildPlan "local build" stage of the mesh engines: no communication,
+    one compiled (and cached) per-shard ``block_rmq.build`` over the mesh.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    x = pad_to_shards(x, num, block_size)
     # shard_map gives each shard x of shape (n/num,); wrap in a leading dim so
     # the local function sees a rank-1 chunk regardless of axis grouping.
-    return fn(x.reshape(num, -1))
+    return _sharded_build_fn(mesh, axis_names, block_size)(x.reshape(num, -1))
 
 
 def _block_rmq_specs(spec_blocks, spec_table):
@@ -149,7 +170,25 @@ def _pad_batch(l, r, num: int):
     return jnp.pad(l, (0, bp - b)), jnp.pad(r, (0, bp - b)), b
 
 
-def make_query_fn(mesh: Mesh, axis_names: Sequence[str], *, batch_sharded: bool = False):
+def _check_batch_axes(axis_names, batch_axes, batch_sharded):
+    """Normalize/validate the 2D-mode batch axes (disjoint from structure)."""
+    batch_axes = tuple(batch_axes or ())
+    if batch_axes and batch_sharded:
+        raise ValueError("batch_axes is the 2D mode; batch_sharded shards over "
+                         "ALL axes — pass one or the other")
+    overlap = set(batch_axes) & set(axis_names)
+    if overlap:
+        raise ValueError(f"batch_axes {sorted(overlap)} overlap the structure axes")
+    return batch_axes
+
+
+def make_query_fn(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    *,
+    batch_sharded: bool = False,
+    batch_axes: Sequence[str] | None = None,
+):
     """Jitted batched distributed query: (BlockRMQ, l, r) -> (idx, val).
 
     ``batch_sharded=False`` (default): the structure is sharded
@@ -161,8 +200,16 @@ def make_query_fn(mesh: Mesh, axis_names: Sequence[str], *, batch_sharded: bool 
     answers only its ``B / num_shards`` slice — work scales with device count
     and the outputs concatenate along the sharded batch dim with no
     collective. Batches are padded internally to a shard multiple.
+
+    ``batch_axes=...`` (2D mesh mode): the structure stays sharded over
+    ``axis_names`` while the query batch is sharded over the disjoint
+    ``batch_axes`` — each batch slice is answered by one structure-shard
+    group, so the pmin merge runs over the structure axes only and both
+    memory and throughput scale. Empty ``batch_axes`` degrades exactly to
+    the default structure-sharded path.
     """
     axis_names = tuple(axis_names)
+    batch_axes = _check_batch_axes(axis_names, batch_axes, batch_sharded)
 
     if batch_sharded:
         num = num_shards(mesh, axis_names)
@@ -200,18 +247,28 @@ def make_query_fn(mesh: Mesh, axis_names: Sequence[str], *, batch_sharded: bool 
         imin = jax.lax.pmin(cand, axis_names)
         return imin, vmin
 
+    spec_b = P(batch_axes) if batch_axes else P()
     in_specs = (
         _block_rmq_specs(P(axis_names), P(None, axis_names)),
-        P(),  # queries replicated
-        P(),
+        spec_b,  # queries replicated (default) or sharded over batch_axes (2D)
+        spec_b,
     )
-    fn = shard_map(
+    inner = shard_map(
         local_query,
         mesh=mesh,
         in_specs=in_specs,
-        out_specs=(P(), P()),
+        out_specs=(spec_b, spec_b),
         check_vma=False,
     )
+    if not batch_axes:
+        return jax.jit(inner)
+    nb = num_shards(mesh, batch_axes)
+
+    def fn(s: BlockRMQ, l, r):
+        lp, rp, b = _pad_batch(l, r, nb)
+        idx, val = inner(s, lp, rp)
+        return idx[:b], val[:b]
+
     return jax.jit(fn)
 
 
@@ -239,28 +296,169 @@ class ShardedSparseTable(NamedTuple):
     val: jax.Array  # (K, n_pad) the corresponding window-min values
 
 
-def build_sharded_st(x: jax.Array, mesh: Mesh, axis_names: Sequence[str]) -> ShardedSparseTable:
-    """Build the global doubling table and shard its columns over the mesh.
+def _flat_shift(x, mesh: Mesh, axis_names: Sequence[str], d: int):
+    """Value held by the shard ``d`` places to the right in flattened order.
 
-    The *steady-state* layout is sharded (K*n/D entries per device), but the
-    build itself materializes the full (K, n) table on the default device
-    before the device_put — the build-time memory ceiling is one device's
-    table, not one shard's. A distributed build (level-k halo exchange under
-    shard_map) lifts that ceiling; see ROADMAP.
+    The halo-exchange transport: each device receives the array held by the
+    device whose flattened index (over ``axis_names``) is its own plus ``d``;
+    devices whose source falls off the grid receive zeros (callers mask those
+    positions — they correspond to out-of-range global columns). A flat shift
+    over a multi-axis product decomposes into a minor-axis rotation plus a
+    carry-select between two recursive shifts of the remaining axes, so only
+    single-axis ``ppermute`` collectives are ever issued.
+    """
+    if d == 0:
+        return x
+    name = axis_names[-1]
+    size = mesh.shape[name]
+    if len(axis_names) == 1:
+        if d >= size:
+            return jnp.zeros_like(x)
+        return jax.lax.ppermute(x, name, [(i, i - d) for i in range(d, size)])
+    d_major, d_minor = divmod(d, size)
+    rot = (
+        jax.lax.ppermute(x, name, [(i, (i - d_minor) % size) for i in range(size)])
+        if d_minor
+        else x
+    )
+    lo = _flat_shift(rot, mesh, axis_names[:-1], d_major)
+    if d_minor == 0:
+        return lo
+    hi = _flat_shift(rot, mesh, axis_names[:-1], d_major + 1)
+    carry = jax.lax.axis_index(name) + d_minor >= size
+    return jnp.where(carry, hi, lo)
+
+
+def st_levels(n_pad: int) -> int:
+    """Doubling-table depth for a length-``n_pad`` array (matches
+    ``sparse_table.build`` exactly — bit-identity depends on it)."""
+    return max(1, (n_pad - 1).bit_length() + 1) if n_pad > 1 else 1
+
+
+@functools.lru_cache(maxsize=None)
+def _st_level0_fn(mesh: Mesh, axis_names: Tuple[str, ...], shard_len: int):
+    def local(x_local):
+        flat = _flat_axis_index(axis_names)
+        idx = flat * shard_len + jnp.arange(shard_len, dtype=jnp.int32)
+        return idx.astype(jnp.int32), x_local
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=P(axis_names),
+            out_specs=(P(axis_names), P(axis_names)),
+            check_vma=False,
+        )
+    )
+
+
+def st_local_level0(
+    xp: jax.Array, mesh: Mesh, axis_names: Sequence[str]
+) -> Tuple[jax.Array, jax.Array]:
+    """BuildPlan "local build" stage: per-shard level-0 (idx, val) rows.
+
+    ``xp`` is the shard-divisible padded array; each device computes the
+    trivial level-0 row for its own columns (global index + value) with no
+    communication. Outputs stay column-sharded over ``axis_names``.
     """
     axis_names = tuple(axis_names)
     num = num_shards(mesh, axis_names)
-    n = x.shape[0]
-    n_pad = -(-n // num) * num
-    # Pad columns with +inf values; queries never index past n-1 and every
-    # window [c, c + 2^k) they touch lies inside [l, r], so pads never win.
-    xp = jnp.pad(x, (0, n_pad - n), constant_values=maxval(x.dtype))
-    st = sparse_table.build(xp)
-    sh = jax.sharding.NamedSharding(mesh, P(None, axis_names))
-    return ShardedSparseTable(
-        idx=jax.device_put(st.idx, sh),
-        val=jax.device_put(xp[st.idx], sh),
+    return _st_level0_fn(mesh, axis_names, xp.shape[0] // num)(xp)
+
+
+@functools.lru_cache(maxsize=None)
+def _st_halo_fn(mesh: Mesh, axis_names: Tuple[str, ...], n_pad: int, num: int):
+    shard_len = n_pad // num
+    k_levels = st_levels(n_pad)
+
+    def local(idx, val):
+        flat = _flat_axis_index(axis_names)
+        cols = jnp.arange(shard_len, dtype=jnp.int32)
+        is_last = flat == num - 1
+        idx_rows, val_rows = [idx], [val]
+        for k in range(1, k_levels):
+            h = 1 << (k - 1)
+            if h >= n_pad:
+                # Window spans the whole array: rows repeat from here on
+                # (sparse_table.build appends cur unchanged).
+                idx_rows.append(idx)
+                val_rows.append(val)
+                continue
+            d, r = divmod(h, shard_len)
+            wi = _flat_shift(idx, mesh, axis_names, d)
+            wv = _flat_shift(val, mesh, axis_names, d)
+            if r:
+                bi = _flat_shift(idx, mesh, axis_names, d + 1)
+                bv = _flat_shift(val, mesh, axis_names, d + 1)
+                wi = jnp.concatenate([wi[r:], bi[:r]])
+                wv = jnp.concatenate([wv[r:], bv[:r]])
+            # Tail clamp: global column >= n_pad reads the previous row's
+            # last column. Only the last shard holds it; pmax over -1 filler
+            # (indices are non-negative) and a one-contributor psum broadcast
+            # the (idx, val) pair everywhere.
+            g = flat * shard_len + h + cols
+            last_i = jax.lax.pmax(jnp.where(is_last, idx[-1], -1), axis_names)
+            last_v = jax.lax.psum(
+                jnp.where(is_last, val[-1], jnp.zeros_like(val[-1])), axis_names
+            )
+            wi = jnp.where(g >= n_pad, last_i, wi)
+            wv = jnp.where(g >= n_pad, last_v, wv)
+            take = val <= wv  # leftmost-tie: prefer the unshifted (left) row
+            idx = jnp.where(take, idx, wi)
+            val = jnp.where(take, val, wv)
+            idx_rows.append(idx)
+            val_rows.append(val)
+        return jnp.stack(idx_rows), jnp.stack(val_rows)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axis_names), P(axis_names)),
+            out_specs=(P(None, axis_names), P(None, axis_names)),
+            check_vma=False,
+        )
     )
+
+
+def st_halo_doubling(
+    idx0: jax.Array, val0: jax.Array, mesh: Mesh, axis_names: Sequence[str]
+) -> Tuple[jax.Array, jax.Array]:
+    """BuildPlan "halo exchange" stage: the distributed doubling recurrence.
+
+    Level k merges the previous row with itself shifted left by
+    ``h = 2^(k-1)``: for a shard owning columns ``[s*C, (s+1)*C)`` the shifted
+    operand is the contiguous window ``[s*C + h, s*C + h + C)`` of the
+    previous row — exactly one shard-width, owned by shards ``s + h//C`` and
+    ``s + h//C + 1``. Two ``_flat_shift`` transports fetch it, global columns
+    past ``n_pad`` clamp to the previous row's last column (replicating the
+    replicated build's tail rule), and the leftmost-tie pick finishes the
+    level. (idx, val) pairs travel together so no level ever gathers from the
+    full array: per-device memory is O(K * C), never O(K * n).
+
+    Bit-identical to ``sparse_table.build`` on the same padded array. The
+    compiled doubling program is cached per (mesh, axes, geometry) so
+    repeated builds trace once.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    n_pad = idx0.shape[0]
+    return _st_halo_fn(mesh, axis_names, n_pad, num)(idx0, val0)
+
+
+def build_sharded_st(x: jax.Array, mesh: Mesh, axis_names: Sequence[str]) -> ShardedSparseTable:
+    """Distributed build of the column-sharded global doubling table.
+
+    Lowers through the staged ``core.build`` pipeline (shard layout ->
+    local build -> halo exchange -> finalize): per-shard doubling with a
+    level-k halo exchange of the boundary columns, bit-identical to
+    ``sparse_table.build`` on the padded array. Build-time memory per device
+    is O(K * n / D) — the full (K, n) table is never materialized anywhere.
+    """
+    from . import build as build_mod  # deferred: build sequences these stages
+
+    return build_mod.build("sharded_st", x, mesh=mesh, axis_names=axis_names)
 
 
 def build_replicated_st(x: jax.Array, mesh: Mesh) -> SparseTable:
@@ -269,7 +467,13 @@ def build_replicated_st(x: jax.Array, mesh: Mesh) -> SparseTable:
     return jax.device_put(st, jax.sharding.NamedSharding(mesh, P()))
 
 
-def make_st_query_fn(mesh: Mesh, axis_names: Sequence[str], *, batch_sharded: bool = False):
+def make_st_query_fn(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    *,
+    batch_sharded: bool = False,
+    batch_axes: Sequence[str] | None = None,
+):
     """Jitted distributed sparse-table query -> (idx, val).
 
     ``batch_sharded=False``: takes a ``ShardedSparseTable`` (column-sharded
@@ -282,8 +486,14 @@ def make_st_query_fn(mesh: Mesh, axis_names: Sequence[str], *, batch_sharded: bo
     ``batch_sharded=True``: takes a replicated ``SparseTable``
     (``build_replicated_st``), the query batch is sharded, and each device
     answers its slice with the plain O(1) lookup plus a local value gather.
+
+    ``batch_axes=...`` (2D mesh mode): the table stays column-sharded over
+    ``axis_names``, the query batch is sharded over the disjoint
+    ``batch_axes``, and the owner-column pmins run over the structure axes
+    only — one structure-shard group answers each batch slice.
     """
     axis_names = tuple(axis_names)
+    batch_axes = _check_batch_axes(axis_names, batch_axes, batch_sharded)
 
     if batch_sharded:
         num = num_shards(mesh, axis_names)
@@ -327,11 +537,25 @@ def make_st_query_fn(mesh: Mesh, axis_names: Sequence[str], *, batch_sharded: bo
         take_left = v[0] <= v[1]  # left window on ties -> exact leftmost
         return jnp.where(take_left, i[0], i[1]), jnp.where(take_left, v[0], v[1])
 
-    fn = shard_map(
+    spec_b = P(batch_axes) if batch_axes else P()
+    inner = shard_map(
         local_query,
         mesh=mesh,
-        in_specs=(ShardedSparseTable(idx=P(None, axis_names), val=P(None, axis_names)), P(), P()),
-        out_specs=(P(), P()),
+        in_specs=(
+            ShardedSparseTable(idx=P(None, axis_names), val=P(None, axis_names)),
+            spec_b,
+            spec_b,
+        ),
+        out_specs=(spec_b, spec_b),
         check_vma=False,
     )
+    if not batch_axes:
+        return jax.jit(inner)
+    nb = num_shards(mesh, batch_axes)
+
+    def fn(t: ShardedSparseTable, l, r):
+        lp, rp, b = _pad_batch(l, r, nb)
+        idx, val = inner(t, lp, rp)
+        return idx[:b], val[:b]
+
     return jax.jit(fn)

@@ -21,6 +21,8 @@ this engine removes. See DESIGN.md §5.
 
 from __future__ import annotations
 
+import contextlib
+import threading
 import time
 from typing import NamedTuple, Tuple
 
@@ -28,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import block_rmq, sparse_table
+from . import sparse_table
 from .block_rmq import BlockRMQ
 
 __all__ = [
@@ -37,6 +39,7 @@ __all__ = [
     "query",
     "calibrate",
     "dispatch_by_length",
+    "record_splits",
     "DEFAULT_THRESHOLD_FRAC",
 ]
 
@@ -67,7 +70,7 @@ def build(
     threshold: int | str | None = None,
     use_kernels: bool | None = None,
 ) -> HybridRMQ:
-    """Build both constituent engines.
+    """Build both constituent engines (via the staged ``core.build`` plan).
 
     ``threshold=None`` -> deterministic sqrt(n) default (never touches
     machine state); ``"cached"`` -> the persistent JSON cache
@@ -75,45 +78,28 @@ def build(
     ``"calibrated"`` -> the cache, measuring via ``calibrate`` only on a
     miss, so repeated builds of the same configuration never re-measure.
     """
-    if use_kernels is None:
-        use_kernels = jax.default_backend() == "tpu"
-    n = x.shape[0]
-    if threshold is None:
-        threshold = max(1, int(round(n**DEFAULT_THRESHOLD_FRAC)))
-    elif threshold == "cached":
-        from . import calib_cache
+    from . import build as build_mod  # deferred: build.py hosts the planner
 
-        hit = calib_cache.load(calib_cache.cache_key(n, block_size))
-        threshold = hit if hit is not None else max(
-            1, int(round(n**DEFAULT_THRESHOLD_FRAC))
-        )
-    elif threshold == "calibrated":
-        from . import calib_cache
-
-        threshold = calib_cache.get_threshold(n, block_size, use_kernels=use_kernels)
-    if use_kernels:
-        from repro import kernels
-
-        blocked = kernels.ops.build(x, block_size)
-        short_fn = lambda l, r: kernels.ops.query(blocked, l, r)  # jitted inside
-    else:
-        blocked = block_rmq.build(x, block_size)
-        short_fn = jax.jit(lambda l, r: block_rmq.query(blocked, l, r))
-    st = sparse_table.build(x)
-
-    def _long(l, r):
-        idx = sparse_table.query(st, l, r)
-        return idx, x[idx]
-
-    return HybridRMQ(
-        blocked=blocked,
-        st=st,
-        x=x,
-        threshold=int(threshold),
-        use_kernels=bool(use_kernels),
-        short_fn=short_fn,
-        long_fn=jax.jit(_long),
+    return build_mod.build(
+        "hybrid", x, block_size=block_size, threshold=threshold, use_kernels=use_kernels
     )
+
+
+# Per-thread sink for regime-split observations: the serving layer wraps each
+# engine launch in ``record_splits`` so its stats can report how dispatch
+# partitioned every coalesced batch without coupling the engines to the server.
+_split_sink = threading.local()
+
+
+@contextlib.contextmanager
+def record_splits(cb):
+    """Route this thread's ``dispatch_by_length`` splits to ``cb(n_short, n_long)``."""
+    prev = getattr(_split_sink, "cb", None)
+    _split_sink.cb = cb
+    try:
+        yield
+    finally:
+        _split_sink.cb = prev
 
 
 def dispatch_by_length(l, r, threshold: int, short_fn, long_fn, out_dtype):
@@ -143,6 +129,9 @@ def dispatch_by_length(l, r, threshold: int, short_fn, long_fn, out_dtype):
             "int32 index range"
         )
     short = (r - l + 1) <= threshold
+    cb = getattr(_split_sink, "cb", None)
+    if cb is not None:
+        cb(int(short.sum()), int(l.size - short.sum()))
 
     # Every launch pads its batch to a power of two so the jit cache stays
     # bounded (log2(B) shapes per path) however batch sizes and splits vary.
@@ -210,6 +199,9 @@ def calibrate(
     use_kernels: bool | None = None,
     seed: int = 0,
     repeats: int = 3,
+    mesh=None,
+    axis_names=None,
+    mode: str = "shard_structure",
 ) -> int:
     """Time both constituent paths across range lengths; return the crossover.
 
@@ -220,11 +212,28 @@ def calibrate(
     Degenerate measurements stay honest: ``n`` when the short path wins
     everywhere, ``0`` (route everything long) when the long path wins even
     at length 1.
+
+    With ``mesh`` (+ optional ``axis_names``/``mode``) the *sharded*
+    constituents are measured — the sharded blocked path and the
+    column-sharded doubling table in the given distribution mode — so the
+    threshold reflects collective costs on that mesh, not single-host
+    proxies. The cache key already carries ``ndev``; this makes the
+    measurement match it.
     """
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.random(n, dtype=np.float32))
-    s = build(x, block_size, use_kernels=use_kernels)
-    short_fn, long_fn = s.short_fn, s.long_fn  # both already jit-wrapped
+    if mesh is None:
+        s = build(x, block_size, use_kernels=use_kernels)
+        short_fn, long_fn = s.short_fn, s.long_fn  # both already jit-wrapped
+    else:
+        # Deferred import: sharded_hybrid builds on this module's dispatcher.
+        from . import sharded_hybrid
+
+        sh = sharded_hybrid.build(
+            x, mesh, axis_names, block_size, threshold=0, mode=mode
+        )
+        short_fn = lambda l, r: sh.short_fn(sh.blocked, l, r)
+        long_fn = lambda l, r: sh.long_fn(sh.st, l, r)
 
     lengths = np.unique(
         np.geomspace(1, n, num=8).astype(np.int64).clip(1, n)

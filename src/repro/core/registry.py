@@ -13,11 +13,13 @@ exact leftmost-tie argmin indices (int32) and the corresponding values.
 Engines whose native query returns only indices are wrapped with a value
 gather so the interface stays uniform.
 
-Serving contract: ``serve_build(x, mesh, axis_names, **kwargs) -> state``
-with ``kwargs`` restricted to the spec's declared ``build_kwargs``;
-``needs_mesh`` marks engines that build over a device mesh; ``modes`` names
-the supported distribution modes (``--qshard`` requires ``"shard_batch"``
-here). ``build_for_serving`` validates and dispatches.
+Every build — conformance and serving alike — lowers through the staged
+``core.build`` BuildPlan pipeline (shard layout -> local build -> halo
+exchange -> finalize): ``EngineSpec.build`` runs the engine's plan with its
+conformance defaults, and ``plan_for_serving``/``build_for_serving`` resolve
+the plan from the declared serving capabilities (``serve_plan``), validating
+kwargs/modes at one enforcement point. The serving layer keeps the plan —
+its metadata (threshold, mode, layout) drives engine warmup.
 """
 
 from __future__ import annotations
@@ -29,6 +31,7 @@ import jax.numpy as jnp
 
 from . import (
     block_rmq,
+    build as build_mod,
     distributed,
     exhaustive,
     hybrid,
@@ -46,6 +49,7 @@ __all__ = [
     "default_mesh",
     "get",
     "names",
+    "plan_for_serving",
     "serveable_names",
 ]
 
@@ -58,8 +62,9 @@ class EngineSpec(NamedTuple):
     is a test oracle, not a server). ``build_kwargs`` is the vocabulary of
     serving build options the engine understands — the CLI validates flags
     against it rather than keeping per-engine name lists. ``modes`` are the
-    distribution modes a mesh engine supports. ``doc`` is one line for CLI
-    help and error messages.
+    distribution modes a mesh engine supports. ``serve_plan`` resolves the
+    engine's serving BuildPlan: ``(n, mesh, axis_names, **kw) -> BuildPlan``.
+    ``doc`` is one line for CLI help and error messages.
     """
 
     build: Callable  # (x: jax.Array) -> state
@@ -68,7 +73,7 @@ class EngineSpec(NamedTuple):
     needs_mesh: bool = False
     build_kwargs: frozenset = frozenset()
     modes: Tuple[str, ...] = ()
-    serve_build: Optional[Callable] = None  # (x, mesh, axis_names, **kw) -> state
+    serve_plan: Optional[Callable] = None  # (n, mesh, axis_names, **kw) -> BuildPlan
     doc: str = ""
 
 
@@ -76,11 +81,15 @@ class EngineSpec(NamedTuple):
 Engine = EngineSpec
 
 
-def _with_values(build_fn, query_fn, **spec_kw) -> EngineSpec:
-    """Adapt an index-only engine to the uniform (idx, val) contract."""
+def _with_values(planner: str, query_fn, **spec_kw) -> EngineSpec:
+    """Adapt an index-only engine to the uniform (idx, val) contract.
+
+    The planner's finalize stage already pairs the built state with ``x``
+    (``with_x``); the query wrapper gathers values from it.
+    """
 
     def build(x):
-        return (build_fn(x), x)
+        return build_mod.build(planner, x)
 
     def query(state, l, r):
         s, x = state
@@ -90,27 +99,26 @@ def _with_values(build_fn, query_fn, **spec_kw) -> EngineSpec:
     return EngineSpec(build, query, **spec_kw)
 
 
+def _simple_serve_plan(planner: str, **fixed):
+    def serve_plan(n, mesh, axis_names, **kw):
+        return build_mod.plan_for(
+            planner, n, mesh=mesh, axis_names=axis_names, **{**fixed, **kw}
+        )
+
+    return serve_plan
+
+
 def _kernels_engine(block_size: int) -> EngineSpec:
-    def build(x):
-        from repro import kernels
-
-        return kernels.ops.build(x, block_size)
-
     def query(s, l, r):
         from repro import kernels
 
         return kernels.ops.query(s, l, r)
 
-    def serve_build(x, mesh, axis_names, block_size=block_size):
-        from repro import kernels
-
-        return kernels.ops.build(jnp.asarray(x), block_size)
-
     return EngineSpec(
-        build,
+        lambda x: build_mod.build("fused", x, block_size=block_size),
         query,
         build_kwargs=frozenset({"block_size"}),
-        serve_build=serve_build,
+        serve_plan=_simple_serve_plan("fused", block_size=block_size),
         doc="fused tiled Pallas megakernel (interpret mode off-TPU)",
     )
 
@@ -118,26 +126,14 @@ def _kernels_engine(block_size: int) -> EngineSpec:
 def default_mesh():
     """The all-devices 1-D serving mesh: (mesh, axis_names).
 
-    The one definition of "no mesh was passed" — ``build_for_serving`` and
-    the serve CLI both use it, so they can never silently disagree.
+    The one definition of "no mesh was passed" — shared with the BuildPlan
+    pipeline (``core.build.default_mesh``) so planner defaults, serving
+    builds, and the serve CLI can never silently disagree.
     """
-    from repro.launch.mesh import make_mesh
-
-    return make_mesh((len(jax.devices()),), ("shard",)), ("shard",)
+    return build_mod.default_mesh()
 
 
 # --- mesh engines ----------------------------------------------------------
-
-
-def _distributed_serve_build(x, mesh, axis_names, block_size=1024):
-    s = distributed.build_sharded(jnp.asarray(x), mesh, axis_names, block_size)
-    qfn = distributed.make_query_fn(mesh, tuple(axis_names))
-    return (s, qfn)
-
-
-def _distributed_build(x):
-    mesh, axes = default_mesh()
-    return _distributed_serve_build(x, mesh, axes, block_size=128)
 
 
 def _distributed_query(state, l, r):
@@ -145,33 +141,40 @@ def _distributed_query(state, l, r):
     return qfn(s, jnp.asarray(l), jnp.asarray(r))
 
 
-def _sharded_hybrid_serve_build(
-    x, mesh, axis_names, block_size=128, threshold="cached", mode="shard_structure"
-):
-    return sharded_hybrid.build(
-        jnp.asarray(x), mesh, axis_names, block_size, threshold=threshold, mode=mode
-    )
-
-
-def _hybrid_serve_build(x, mesh, axis_names, block_size=128, threshold="cached"):
-    return hybrid.build(jnp.asarray(x), block_size, threshold=threshold)
-
-
 ENGINES: dict = {
     "sparse_table": _with_values(
-        sparse_table.build, sparse_table.query, doc="O(1) doubling-table lookups"
+        "sparse_table",
+        sparse_table.query,
+        serve_plan=_simple_serve_plan("sparse_table"),
+        doc="O(1) doubling-table lookups",
     ),
     "block128": EngineSpec(
-        lambda x: block_rmq.build(x, 128), block_rmq.query, doc="pure-jnp blocked, bs=128"
+        lambda x: build_mod.build("block", x, block_size=128),
+        block_rmq.query,
+        serve_plan=_simple_serve_plan("block", block_size=128),
+        doc="pure-jnp blocked, bs=128",
     ),
     "block256": EngineSpec(
-        lambda x: block_rmq.build(x, 256), block_rmq.query, doc="pure-jnp blocked, bs=256"
+        lambda x: build_mod.build("block", x, block_size=256),
+        block_rmq.query,
+        serve_plan=_simple_serve_plan("block", block_size=256),
+        doc="pure-jnp blocked, bs=256",
     ),
-    "lane": EngineSpec(lane_rmq.build, lane_rmq.query, doc="beyond-paper lane-RMQ"),
-    "lca": _with_values(lca.build, lca.query, doc="LCA/Euler-tour O(1) engine"),
+    "lane": EngineSpec(
+        lambda x: build_mod.build("lane", x),
+        lane_rmq.query,
+        serve_plan=_simple_serve_plan("lane"),
+        doc="beyond-paper lane-RMQ",
+    ),
+    "lca": _with_values(
+        "lca",
+        lca.query,
+        serve_plan=_simple_serve_plan("lca"),
+        doc="LCA/Euler-tour O(1) engine",
+    ),
     # Test oracle, not a server: O(n) scan per query chunk.
     "exhaustive": _with_values(
-        lambda x: x,
+        "exhaustive",
         lambda x, l, r: exhaustive.rmq_exhaustive(x, l, r, query_chunk=64),
         serveable=False,
         doc="O(n)-per-query scan oracle",
@@ -180,31 +183,34 @@ ENGINES: dict = {
     "fused128": _kernels_engine(128),
     # Range-adaptive dispatcher over blocked + sparse-table paths.
     "hybrid": EngineSpec(
-        lambda x: hybrid.build(x, 128),
+        lambda x: build_mod.build("hybrid", x, block_size=128),
         hybrid.query,
         build_kwargs=frozenset({"block_size", "threshold"}),
-        serve_build=_hybrid_serve_build,
+        serve_plan=_simple_serve_plan("hybrid", block_size=128, threshold="cached"),
         doc="range-adaptive blocked/sparse-table crossover dispatcher",
     ),
     # Mesh-sharded blocked engine (structure sharded, queries replicated).
     "distributed": EngineSpec(
-        _distributed_build,
+        lambda x: build_mod.build("distributed", x, block_size=128),
         _distributed_query,
         needs_mesh=True,
         build_kwargs=frozenset({"block_size"}),
-        serve_build=_distributed_serve_build,
+        serve_plan=_simple_serve_plan("distributed", block_size=1024),
         doc="mesh-sharded blocked engine, two-pmin merge",
     ),
     # Mesh-sharded range-adaptive dispatcher (builds over all visible
     # devices; 1-device meshes degenerate to the single-host hybrid).
     "sharded_hybrid": EngineSpec(
-        lambda x: sharded_hybrid.build(x, block_size=128),
+        lambda x: build_mod.build("sharded_hybrid", x, block_size=128),
         sharded_hybrid.query,
         needs_mesh=True,
         build_kwargs=frozenset({"block_size", "threshold", "mode"}),
         modes=sharded_hybrid.MODES,
-        serve_build=_sharded_hybrid_serve_build,
-        doc="sharded range-adaptive hybrid (shard_structure | shard_batch)",
+        serve_plan=_simple_serve_plan(
+            "sharded_hybrid", block_size=128, threshold="cached"
+        ),
+        doc="sharded range-adaptive hybrid "
+        "(shard_structure | shard_batch | shard_2d)",
     ),
 }
 
@@ -224,13 +230,15 @@ def get(name: str) -> EngineSpec:
         raise ValueError(f"unknown engine {name!r}; have {sorted(ENGINES)}") from None
 
 
-def build_for_serving(name: str, x, mesh=None, axis_names=None, **kwargs):
-    """Build engine ``name`` for serving, validating kwargs against its spec.
+def plan_for_serving(name: str, n: int, mesh=None, axis_names=None, **kwargs):
+    """Resolve engine ``name``'s serving BuildPlan, validating kwargs.
 
     Unknown kwargs and unsupported modes raise ``ValueError`` naming the
     engine's declared capabilities — the single enforcement point behind
     CLI flag validation. Mesh engines get a default all-devices 1-D mesh
-    when none is passed.
+    when none is passed. The returned plan carries the resolved layout and
+    metadata (threshold, mode) that serving warmup derives its per-regime
+    probe batches from.
     """
     spec = get(name)
     if not spec.serveable:
@@ -247,6 +255,13 @@ def build_for_serving(name: str, x, mesh=None, axis_names=None, **kwargs):
         )
     if spec.needs_mesh and mesh is None:
         mesh, axis_names = default_mesh()
-    if spec.serve_build is None:
-        return spec.build(jnp.asarray(x))
-    return spec.serve_build(jnp.asarray(x), mesh, axis_names, **kwargs)
+    if spec.serve_plan is None:
+        raise ValueError(f"engine {name!r} declares no serving BuildPlan")
+    return spec.serve_plan(int(n), mesh, axis_names, **kwargs)
+
+
+def build_for_serving(name: str, x, mesh=None, axis_names=None, **kwargs):
+    """Build engine ``name`` for serving: resolve its plan, then execute it."""
+    x = jnp.asarray(x)
+    plan = plan_for_serving(name, x.shape[0], mesh, axis_names, **kwargs)
+    return build_mod.execute(plan, x)

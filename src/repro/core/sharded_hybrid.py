@@ -16,7 +16,7 @@ Data flow (DESIGN.md §6):
            └─ long sub-batch  -> sharded sparse-table  (owner-column pmin)
       └─ exact leftmost scatter-back into batch order
 
-Two distribution modes, one per scaling axis:
+Three distribution modes, one per scaling axis (plus the product):
 
 * ``mode="shard_structure"`` (default): the *array* is sharded — per-device
   blocked chunks for the short path, a column-sharded global doubling table
@@ -25,6 +25,16 @@ Two distribution modes, one per scaling axis:
 * ``mode="shard_batch"``: the *query batch* is sharded — each device holds
   the full (replicated) structures and answers only its slice, so serving
   throughput scales with device count instead of being replicated work.
+* ``mode="shard_2d"``: both — the structure is sharded over the FIRST mesh
+  axis and the query batch over the remaining axes, so memory scales with
+  the structure axis and throughput with the batch axes. Each batch slice
+  is answered by one structure-shard group (pmins over the structure axis
+  only). On a 1-axis mesh it degrades to ``shard_structure``.
+
+Builds lower through the staged ``core.build`` BuildPlan pipeline
+(shard layout -> local build -> halo exchange -> finalize); the long-path
+doubling table is built *distributed* (per-shard doubling + level-k halo
+exchange), so build-time memory per device is bounded by the shard.
 
 The routing threshold (``build(threshold=...)``): ``None`` is the
 deterministic sqrt(n) default, exactly as in ``hybrid.build``; ``"cached"``
@@ -43,15 +53,12 @@ from __future__ import annotations
 from typing import NamedTuple, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from . import calib_cache, distributed
-from .hybrid import DEFAULT_THRESHOLD_FRAC, dispatch_by_length
+from .hybrid import dispatch_by_length
 
 __all__ = ["MODES", "ShardedHybridRMQ", "build", "query"]
 
-MODES = ("shard_structure", "shard_batch")
+MODES = ("shard_structure", "shard_batch", "shard_2d")
 
 
 class ShardedHybridRMQ(NamedTuple):
@@ -61,17 +68,11 @@ class ShardedHybridRMQ(NamedTuple):
     st: object  # ShardedSparseTable (or replicated SparseTable) — long path
     n: int  # logical array length (pre-padding)
     threshold: int  # range lengths <= threshold go to the blocked path
-    mode: str  # "shard_structure" | "shard_batch"
+    mode: str  # "shard_structure" | "shard_batch" | "shard_2d"
     n_shards: int  # flattened mesh size (batch-pad granularity)
     dtype: object  # value dtype for the host-side scatter-back
     short_fn: object  # jitted (blocked, l, r) -> (idx, val)
     long_fn: object  # jitted (st, l, r) -> (idx, val)
-
-
-def _default_mesh():
-    from repro.launch.mesh import make_mesh
-
-    return make_mesh((len(jax.devices()),), ("shard",)), ("shard",)
 
 
 def build(
@@ -86,59 +87,26 @@ def build(
 ) -> ShardedHybridRMQ:
     """Build both distributed constituents over ``mesh`` (default: all devices).
 
+    Lowers through the staged ``core.build`` BuildPlan pipeline.
+
     ``threshold``: int pins the crossover; ``None`` is the deterministic
     sqrt(n) default (no cache, matching ``hybrid.build``); ``"cached"``
     reads the calibration cache with the sqrt(n) fallback, never measuring;
-    ``"calibrated"`` measures on a cache miss and persists the result.
+    ``"calibrated"`` measures on a cache miss — timing the *sharded*
+    constituents on this very mesh and mode — and persists the result under
+    the existing ``(n, bs, backend, ndev)`` key.
     """
-    if mode not in MODES:
-        raise ValueError(f"unknown mode {mode!r}; have {MODES}")
-    x = jnp.asarray(x)
-    if mesh is None:
-        mesh, axis_names = _default_mesh()
-    axis_names = tuple(axis_names if axis_names is not None else mesh.axis_names)
-    num = distributed.num_shards(mesh, axis_names)
-    n = x.shape[0]
+    from . import build as build_mod  # deferred: build.py hosts the planner
 
-    if threshold is None:
-        threshold = max(1, int(round(n**DEFAULT_THRESHOLD_FRAC)))
-    elif threshold == "cached":
-        key = calib_cache.cache_key(n, block_size, n_devices=num)
-        cached = calib_cache.load(key, path=cache_path)
-        threshold = (
-            cached
-            if cached is not None
-            else max(1, int(round(n**DEFAULT_THRESHOLD_FRAC)))
-        )
-    elif threshold == "calibrated":
-        # The crossover is a property of the constituent structures, measured
-        # by hybrid.calibrate on the single-host paths; the cache key still
-        # carries n_devices so a sharded deployment calibrates per mesh size.
-        threshold = calib_cache.get_threshold(
-            n, block_size, n_devices=num, path=cache_path, use_kernels=False
-        )
-
-    if mode == "shard_structure":
-        blocked = distributed.build_sharded(x, mesh, axis_names, block_size)
-        short_fn = distributed.make_query_fn(mesh, axis_names)
-        st = distributed.build_sharded_st(x, mesh, axis_names)
-        long_fn = distributed.make_st_query_fn(mesh, axis_names)
-    else:  # shard_batch
-        blocked = distributed.build_replicated(x, mesh, block_size)
-        short_fn = distributed.make_query_fn(mesh, axis_names, batch_sharded=True)
-        st = distributed.build_replicated_st(x, mesh)
-        long_fn = distributed.make_st_query_fn(mesh, axis_names, batch_sharded=True)
-
-    return ShardedHybridRMQ(
-        blocked=blocked,
-        st=st,
-        n=int(n),
-        threshold=int(threshold),
+    return build_mod.build(
+        "sharded_hybrid",
+        x,
+        mesh=mesh,
+        axis_names=axis_names,
+        block_size=block_size,
+        threshold=threshold,
         mode=mode,
-        n_shards=int(num),
-        dtype=np.dtype(x.dtype),
-        short_fn=short_fn,
-        long_fn=long_fn,
+        cache_path=cache_path,
     )
 
 

@@ -15,7 +15,19 @@ try:  # jax >= 0.5: explicit axis types
 except ImportError:  # jax 0.4.x: no AxisType; make_mesh takes no axis_types
     AxisType = None
 
-__all__ = ["make_production_mesh", "make_mesh", "set_mesh"]
+__all__ = ["factor_2d", "make_production_mesh", "make_mesh", "set_mesh"]
+
+
+def factor_2d(ndev: int):
+    """Squarest (a, b) factoring of a device count, a <= b.
+
+    The one definition of how ``--qshard 2d`` (and the benchmark that mirrors
+    it) splits a flat device fleet into a (structure, batch) grid.
+    """
+    a = int(ndev**0.5)
+    while ndev % a:
+        a -= 1
+    return a, ndev // a
 
 
 def _mk(shape, axes):

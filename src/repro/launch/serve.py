@@ -14,15 +14,18 @@ Two modes:
 
 Engine choices and flag validation derive from the registry's capability
 metadata (``core.registry.EngineSpec``) — no hard-coded engine name lists:
-``--qshard`` needs an engine with a ``"shard_batch"`` mode, ``--calibrate``
-needs a ``"threshold"`` build kwarg, ``--block-size`` needs a
-``"block_size"`` build kwarg.
+``--qshard`` needs an engine with a ``"shard_batch"`` mode (``--qshard 2d``
+needs ``"shard_2d"``: a 2D structure x batch mesh), ``--calibrate`` needs a
+``"threshold"`` build kwarg, ``--block-size`` needs a ``"block_size"`` build
+kwarg. Builds lower through the staged BuildPlan pipeline
+(``registry.plan_for_serving`` + ``core.build.execute``); in async mode the
+plan's resolved threshold drives per-regime engine warmup.
 
   PYTHONPATH=src python -m repro.launch.serve --n 1048576 --batch 4096 \
       --batches 8 --dist small --engine sharded_hybrid
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --mode async --engine sharded_hybrid \
-      --n 65536 --dist medium --clients 4 --requests 32
+      --n 65536 --dist medium --clients 4 --requests 32 --qshard 2d
 """
 
 from __future__ import annotations
@@ -35,12 +38,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import build as build_mod
 from repro.core import ref, registry
-from repro.launch.mesh import set_mesh
+from repro.launch.mesh import factor_2d, make_mesh, set_mesh
 from repro.serve import RMQServer, ServeConfig
 from repro.serve.workload import make_queries, run_poisson_clients
 
 __all__ = ["main"]
+
+# --qshard values -> sharded_hybrid distribution modes.
+_QSHARD_MODES = {"batch": "shard_batch", "2d": "shard_2d"}
 
 
 def _parser() -> argparse.ArgumentParser:
@@ -63,9 +70,14 @@ def _parser() -> argparse.ArgumentParser:
     )
     ap.add_argument(
         "--qshard",
-        action="store_true",
-        help="batch-sharded mode: replicated structure, sharded queries "
-        "(engines declaring a 'shard_batch' mode)",
+        nargs="?",
+        const="batch",
+        choices=sorted(_QSHARD_MODES),
+        default=None,
+        help="shard the query batch: bare --qshard (= 'batch') replicates the "
+        "structure and shards queries over all devices; '--qshard 2d' shards "
+        "the structure over one mesh axis and the batch over the other "
+        "(engines declaring the matching mode)",
     )
     ap.add_argument(
         "--calibrate",
@@ -96,9 +108,10 @@ def _parser() -> argparse.ArgumentParser:
 
 def _validate(ap: argparse.ArgumentParser, args, spec: registry.EngineSpec) -> None:
     """Flag validation straight off the EngineSpec capability metadata."""
-    if args.qshard and "shard_batch" not in spec.modes:
+    if args.qshard is not None and _QSHARD_MODES[args.qshard] not in spec.modes:
         ap.error(
-            f"--qshard requires an engine with a 'shard_batch' mode; "
+            f"--qshard {args.qshard} requires an engine with a "
+            f"'{_QSHARD_MODES[args.qshard]}' mode; "
             f"{args.engine} declares modes {spec.modes or '()'}"
         )
     if args.calibrate and "threshold" not in spec.build_kwargs:
@@ -119,9 +132,23 @@ def _build_kwargs(args, spec: registry.EngineSpec) -> dict:
         kw["block_size"] = args.block_size
     if "threshold" in spec.build_kwargs:
         kw["threshold"] = "calibrated" if args.calibrate else "cached"
-    if args.qshard:
-        kw["mode"] = "shard_batch"
+    if args.qshard is not None:
+        kw["mode"] = _QSHARD_MODES[args.qshard]
     return kw
+
+
+def _serve_mesh(args, spec: registry.EngineSpec):
+    """(mesh, axis_names) for the engine — 2D (structure x batch) on demand.
+
+    ``--qshard 2d`` factors the device count into the squarest (struct,
+    qbatch) grid; everything else gets the default all-devices 1-D mesh.
+    """
+    if not spec.needs_mesh:
+        return None, None
+    ndev = len(jax.devices())
+    if args.qshard == "2d" and ndev > 1:
+        return make_mesh(factor_2d(ndev), ("struct", "qbatch")), ("struct", "qbatch")
+    return registry.default_mesh()
 
 
 def _block_on_state(state) -> None:
@@ -146,7 +173,7 @@ def _run_oneshot(args, spec, state, x, rng) -> bool:
     k = min(args.verify, args.batch)
     gold = ref.rmq_ref(x, l[:k], r[:k])
     ok = (np.asarray(idx[:k]) == gold).all()
-    mode = " qshard" if args.qshard else ""
+    mode = f" qshard={args.qshard}" if args.qshard else ""
     print(
         f"[{args.engine}{mode}] served {total_q} RMQs over n={args.n} "
         f"({args.dist} ranges) on {len(jax.devices())} device(s): "
@@ -156,7 +183,7 @@ def _run_oneshot(args, spec, state, x, rng) -> bool:
     return bool(ok)
 
 
-def _run_async(args, spec, state, x) -> bool:
+def _run_async(args, spec, state, x, plan) -> bool:
     qfn = lambda l, r: spec.query(state, l, r)
     cfg = ServeConfig(
         deadline_s=args.deadline_ms * 1e-3,
@@ -165,8 +192,8 @@ def _run_async(args, spec, state, x) -> bool:
         workers=args.workers,
         n=args.n,
     )
-    srv = RMQServer(qfn, cfg)
-    srv.warmup()  # compile every padded launch shape before traffic
+    srv = RMQServer(qfn, cfg, warmup_bounds=build_mod.warmup_bounds(plan))
+    srv.warmup()  # compile every padded launch shape (per plan regime)
 
     with srv:
         t0 = time.perf_counter()
@@ -196,7 +223,7 @@ def _run_async(args, spec, state, x) -> bool:
         if not (np.array_equal(res.idx, gold) and np.array_equal(res.val, x[gold])):
             mismatches += 1
 
-    mode = " qshard" if args.qshard else ""
+    mode = f" qshard={args.qshard}" if args.qshard else ""
     print(
         f"[async {args.engine}{mode}] {args.clients} clients x {args.requests} reqs "
         f"x {args.req_batch} RMQs ({args.dist} ranges, {args.rate:g} req/s/client, "
@@ -220,22 +247,28 @@ def main(argv=None) -> None:
     rng = np.random.default_rng(0)
     x = rng.random(args.n, dtype=np.float32)
 
-    mesh = axes = None
-    if spec.needs_mesh:
-        mesh, axes = registry.default_mesh()
+    mesh, axes = _serve_mesh(args, spec)
     ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
     with ctx:
-        t0 = time.perf_counter()
-        state = registry.build_for_serving(
-            args.engine, jnp.asarray(x), mesh, axes, **_build_kwargs(args, spec)
+        # The staged BuildPlan resolves everything static (shard layout,
+        # threshold, mode) before touching the array; async warmup reads the
+        # plan's regimes instead of guessing.
+        plan = registry.plan_for_serving(
+            args.engine, args.n, mesh, axes, **_build_kwargs(args, spec)
         )
+        t0 = time.perf_counter()
+        state = build_mod.execute(plan, jnp.asarray(x))
         _block_on_state(state)
-        print(f"[{args.engine}] build {((time.perf_counter() - t0))*1e3:.1f} ms (n={args.n})")
+        print(
+            f"[{args.engine}] build {((time.perf_counter() - t0))*1e3:.1f} ms "
+            f"(n={args.n}, {plan.layout.num_shards} structure shard(s) x "
+            f"{plan.layout.shard_len} cols)"
+        )
 
         if args.mode == "oneshot":
             ok = _run_oneshot(args, spec, state, x, rng)
         else:
-            ok = _run_async(args, spec, state, x)
+            ok = _run_async(args, spec, state, x, plan)
     if not ok:
         raise SystemExit(1)
 

@@ -37,6 +37,8 @@ from typing import Callable, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core import hybrid as _hybrid
+
 from .batcher import MicroBatch, bucket, coalesce, scatter_back
 
 __all__ = [
@@ -111,9 +113,27 @@ class ServeStats(NamedTuple):
     p50_total_s: float
     p99_total_s: float
     throughput_qps: float  # served queries / (first submit -> last done)
+    # Per-launch regime split (short, long) sub-batch sizes, as reported by
+    # the range-adaptive dispatcher — empty for single-path engines. The
+    # measurement regime-aware routing (server-level split, per-engine
+    # pools) will act on.
+    regime_splits: Tuple[Tuple[int, int], ...] = ()
+
+    @property
+    def short_queries(self) -> int:
+        return sum(s for s, _ in self.regime_splits)
+
+    @property
+    def long_queries(self) -> int:
+        return sum(g for _, g in self.regime_splits)
+
+    @property
+    def mixed_batches(self) -> int:
+        """Launches the dispatcher actually split (both regimes non-empty)."""
+        return sum(1 for s, g in self.regime_splits if s and g)
 
     def summary(self) -> str:
-        return (
+        out = (
             f"{self.served_requests} reqs / {self.served_queries} RMQs in "
             f"{self.n_batches} microbatches (mean {self.mean_batch_requests:.1f} "
             f"reqs, {self.mean_batch_queries:.1f} RMQs; padded shapes "
@@ -122,13 +142,28 @@ class ServeStats(NamedTuple):
             f"{self.p50_queue_s*1e3:.2f} ms); {self.throughput_qps:,.0f} RMQ/s; "
             f"rejected {self.rejected_requests}"
         )
+        if self.regime_splits:
+            out += (
+                f"; regime split {self.short_queries} short / "
+                f"{self.long_queries} long RMQs, {self.mixed_batches}/"
+                f"{len(self.regime_splits)} launches mixed"
+            )
+        return out
 
 
 class RMQServer:
     """Deadline micro-batching server over one built RMQ engine."""
 
-    def __init__(self, query_fn: Callable, config: Optional[ServeConfig] = None, **overrides):
+    def __init__(
+        self,
+        query_fn: Callable,
+        config: Optional[ServeConfig] = None,
+        *,
+        warmup_bounds: Optional[Callable] = None,
+        **overrides,
+    ):
         self._query_fn = query_fn
+        self._warmup_bounds = warmup_bounds  # (size) -> [(l, r), ...] per regime
         self._cfg = config if config is not None else ServeConfig(**overrides)
         self._inq: "queue.SimpleQueue" = queue.SimpleQueue()
         self._mbq: "queue.SimpleQueue" = queue.SimpleQueue()
@@ -142,6 +177,7 @@ class RMQServer:
         self._total_lat: List[float] = []
         self._batch_requests: List[int] = []
         self._batch_queries: List[int] = []
+        self._splits: List[Tuple[int, int]] = []  # per-launch (short, long)
         self._padded: Set[int] = set()
         self._rejected = 0
         self._t_first_submit: Optional[float] = None
@@ -188,10 +224,13 @@ class RMQServer:
 
         Client-visible tail latency must not include jit compiles; by default
         this runs the engine once per power-of-two bucket up to ``max_batch``
-        — exactly the shapes the batcher can emit. When ``config.n`` is known
-        each shape runs twice, on all-(0, 0) and all-(0, n-1) batches, so a
-        range-adaptive engine compiles both its short and long regime at
-        every shape instead of deferring the long path to the first client.
+        — exactly the shapes the batcher can emit. The per-shape probe
+        batches come from ``warmup_bounds`` when the server was built from a
+        BuildPlan (``core.build.warmup_bounds``): one batch per query regime
+        the plan's resolved threshold can dispatch to. Without a plan, when
+        ``config.n`` is known each shape runs twice, on all-(0, 0) and
+        all-(0, n-1) batches, so a range-adaptive engine still compiles both
+        regimes instead of deferring the long path to the first client.
         """
         if sizes is None:
             top = bucket(self._cfg.max_batch)
@@ -201,6 +240,10 @@ class RMQServer:
                 s *= 2
         n = self._cfg.n
         for s in sizes:
+            if self._warmup_bounds is not None:
+                for l, r in self._warmup_bounds(s):
+                    self._query_fn(l, r)
+                continue
             zeros = np.zeros(s, np.int32)
             self._query_fn(zeros, zeros)
             if n is not None and n > 1:
@@ -317,8 +360,22 @@ class RMQServer:
                 return
             mb, reqs = item
             try:
-                idx, val = self._query_fn(mb.l, mb.r)
+                # Observe how the range-adaptive dispatcher (if any) splits
+                # this launch: a thread-local sink, so concurrent workers
+                # never see each other's splits.
+                splits: List[Tuple[int, int]] = []
+                with _hybrid.record_splits(lambda s, g: splits.append((s, g))):
+                    idx, val = self._query_fn(mb.l, mb.r)
                 parts = scatter_back(mb, idx, val)
+                # The coalesced launch is power-of-two padded with trivial
+                # (0, 0) queries; the dispatcher routes ALL pads to one side
+                # (short when threshold >= 1, else long — real queries never
+                # leave that side short of the pad count), so subtracting
+                # from whichever side holds them leaves real-traffic splits.
+                pad = mb.l.size - mb.n_queries
+                splits = [
+                    (s - pad, g) if s >= pad else (s, g - pad) for s, g in splits
+                ]
             except BaseException as e:  # engine failure: fail the batch, keep serving
                 with self._lock:
                     self._inflight -= len(reqs)
@@ -330,6 +387,7 @@ class RMQServer:
                 self._inflight -= len(reqs)
                 self._batch_requests.append(len(reqs))
                 self._batch_queries.append(mb.n_queries)
+                self._splits.extend(splits)
                 self._padded.add(mb.l.size)
                 for q in reqs:
                     self._queue_lat.append(q.t_flush - q.t_submit)
@@ -368,4 +426,5 @@ class RMQServer:
                 p50_total_s=pct(tlat, 50),
                 p99_total_s=pct(tlat, 99),
                 throughput_qps=nq / span if span > 0 else 0.0,
+                regime_splits=tuple(self._splits),
             )

@@ -1,0 +1,148 @@
+"""BuildPlan pipeline: stage sequencing, layout/threshold metadata, warmup
+regimes, and the no-full-table guarantee of the distributed ST build."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build as build_mod
+from repro.core import distributed, ref, registry, sparse_table
+
+
+def test_unknown_planner_raises():
+    with pytest.raises(ValueError, match="no build planner"):
+        build_mod.plan_for("warp_drive", 64)
+
+
+def test_execute_rejects_wrong_length():
+    plan = build_mod.plan_for("sparse_table", 64)
+    with pytest.raises(ValueError, match="n=64"):
+        build_mod.execute(plan, jnp.zeros(65, jnp.float32))
+
+
+@pytest.mark.parametrize(
+    "engine,kwargs,has_halo",
+    [
+        ("sparse_table", {}, False),
+        ("block", {"block_size": 128}, False),
+        ("hybrid", {"block_size": 128}, False),
+        ("sharded_st", {}, True),
+        ("sharded_hybrid", {"block_size": 128}, True),
+        ("sharded_hybrid", {"block_size": 128, "mode": "shard_batch"}, False),
+        ("distributed", {"block_size": 128}, False),
+    ],
+)
+def test_stage_sequence(engine, kwargs, has_halo):
+    """Observer sees the declared stages in canonical order; the halo stage
+    appears exactly when the plan builds a structure-sharded doubling table."""
+    plan = build_mod.plan_for(engine, 300, **kwargs)
+    seen = []
+    build_mod.execute(
+        plan, jnp.arange(300.0), observer=lambda name, state: seen.append(name)
+    )
+    assert seen == [s.name for s in plan.stages]
+    assert seen[0] == "shard_layout" and seen[-1] == "finalize"
+    assert ("halo_exchange" in seen) == has_halo
+    order = [build_mod.STAGE_NAMES.index(s) for s in seen]
+    assert order == sorted(order)
+
+
+def test_engine_build_results_match_direct_builders():
+    """Lowering through the plan is a refactor, not a behavior change."""
+    rng = np.random.default_rng(0)
+    n = 700
+    x = rng.integers(0, 5, n).astype(np.float32)
+    l = rng.integers(0, n, 64)
+    r = np.maximum(l, rng.integers(0, n, 64))
+    gold = ref.rmq_ref(x, l, r)
+    for name in registry.names():
+        eng = registry.get(name)
+        s = eng.build(jnp.asarray(x))
+        idx, val = eng.query(s, jnp.asarray(l), jnp.asarray(r))
+        np.testing.assert_array_equal(np.asarray(idx), gold, err_msg=name)
+        np.testing.assert_array_equal(np.asarray(val), x[gold], err_msg=name)
+
+
+def test_plan_metadata_threshold_resolution(tmp_path):
+    from repro.core import calib_cache
+
+    # Int pins; None is the deterministic sqrt(n); "cached" falls back on miss.
+    assert build_mod.plan_for("hybrid", 1000, threshold=33).meta["threshold"] == 33
+    assert build_mod.plan_for("hybrid", 1000).meta["threshold"] == 32  # sqrt
+    p = tmp_path / "cal.json"
+    calib_cache.store(calib_cache.cache_key(1000, 128, n_devices=1), 55, path=p)
+    plan = build_mod.plan_for(
+        "sharded_hybrid", 1000, threshold="cached", cache_path=p
+    )
+    assert plan.meta["threshold"] == 55
+    with pytest.raises(ValueError, match="threshold"):
+        build_mod.plan_for("hybrid", 1000, threshold="tuesday")
+
+
+def test_warmup_bounds_cover_each_regime():
+    # Threshold engine, both regimes reachable: one short + one long probe.
+    plan = build_mod.plan_for("hybrid", 1000, threshold=32)
+    [(ls, rs), (ll, rl)] = build_mod.warmup_bounds(plan)(4)
+    assert rs[0] - ls[0] + 1 == 32  # longest length that still routes short
+    assert rl[0] - ll[0] + 1 == 1000  # full range routes long
+    assert ls.dtype == np.int32 and rs.shape == (4,)
+    # threshold 0: everything routes long -> a single long probe.
+    probes = build_mod.warmup_bounds(build_mod.plan_for("hybrid", 1000, threshold=0))(2)
+    assert [int(r[0] - l[0] + 1) for l, r in probes] == [1000]
+    # threshold >= n: everything routes short -> a single short probe.
+    probes = build_mod.warmup_bounds(
+        build_mod.plan_for("hybrid", 1000, threshold=5000)
+    )(2)
+    assert [int(r[0] - l[0] + 1) for l, r in probes] == [1000]
+    # No threshold metadata: the two extremes.
+    probes = build_mod.warmup_bounds(build_mod.plan_for("sparse_table", 1000))(2)
+    assert [int(r[0] - l[0] + 1) for l, r in probes] == [1, 1000]
+
+
+def test_sharded_st_never_calls_replicated_build(monkeypatch):
+    """The dead single-device materialization path stays dead: the distributed
+    build must not fall back to ``sparse_table.build`` on the full array."""
+
+    def boom(x):
+        raise AssertionError(
+            f"sparse_table.build called on shape {x.shape} during distributed build"
+        )
+
+    monkeypatch.setattr(sparse_table, "build", boom)
+    monkeypatch.setattr(distributed.sparse_table, "build", boom)
+    x = jnp.asarray(np.random.default_rng(1).random(256, dtype=np.float32))
+    mesh, axes = build_mod.default_mesh()
+    t = distributed.build_sharded_st(x, mesh, axes)
+    assert t.idx.shape[1] == 256
+
+
+def test_sharded_st_per_device_allocation_bounded():
+    """Allocation probe: at every stage of the distributed ST build, each
+    addressable shard of every live build-state array stays within the
+    per-shard budget — the full (K, n) table never lands on one device."""
+    n = 1024
+    plan = build_mod.plan_for("sharded_st", n)
+    layout = plan.layout
+    k_levels = distributed.st_levels(layout.n_pad)
+    budget = (k_levels + 2) * layout.shard_len  # rows-per-shard + level-0 pair
+
+    import jax
+
+    def probe(stage, state):
+        for key, leaf in state.items():
+            for arr in jax.tree_util.tree_leaves(leaf):
+                if not isinstance(arr, jax.Array):
+                    continue
+                if key == "x":  # the caller's input, not a build allocation
+                    continue
+                for shard in arr.addressable_shards:
+                    assert np.prod(shard.data.shape) <= budget, (
+                        stage,
+                        key,
+                        shard.data.shape,
+                    )
+
+    t = build_mod.execute(plan, jnp.arange(float(n)), observer=probe)
+    # Steady state is column-sharded: (K, n_pad / num_shards) per device.
+    for shard in t.idx.addressable_shards:
+        assert shard.data.shape == (k_levels, layout.shard_len)

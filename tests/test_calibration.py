@@ -48,6 +48,66 @@ def test_calibrate_reports_interior_crossover(monkeypatch):
     assert thr == int(lengths[lengths <= 16].max())
 
 
+def test_calibrate_with_mesh_uses_sharded_constituents(monkeypatch):
+    """The mesh path must time the sharded blocked / column-sharded ST paths,
+    not the single-host HybridRMQ closures."""
+    from repro.core import sharded_hybrid
+    from repro.launch.mesh import make_mesh
+
+    built = {}
+    real_build = sharded_hybrid.build
+
+    def spy_build(x, mesh=None, axis_names=None, *a, **kw):
+        built["mesh"] = mesh
+        built["mode"] = kw.get("mode")
+        return real_build(x, mesh, axis_names, *a, **kw)
+
+    monkeypatch.setattr(sharded_hybrid, "build", spy_build)
+    monkeypatch.setattr(
+        hybrid, "_measure", lambda kind, *a, **k: 1.0 if kind == "short" else 0.0
+    )
+    mesh = make_mesh((1,), ("shard",))
+    thr = hybrid.calibrate(
+        256, batch=8, repeats=1, mesh=mesh, axis_names=("shard",), mode="shard_batch"
+    )
+    assert thr == 0  # long wins everywhere -> route everything long
+    assert built["mesh"] is mesh and built["mode"] == "shard_batch"
+
+
+def test_sharded_build_calibrated_passes_mesh_to_calibrate(tmp_path, monkeypatch):
+    """threshold="calibrated" on a sharded build must request a sharded-aware
+    measurement (mesh + mode forwarded) and persist under the existing
+    (n, bs, backend, ndev) key."""
+    import jax.numpy as jnp
+
+    from repro.core import sharded_hybrid
+
+    p = tmp_path / "cal.json"
+    seen = {}
+
+    def fake_calibrate(n, **kw):
+        seen.update(kw, n=n)
+        return 17
+
+    monkeypatch.setattr(hybrid, "calibrate", fake_calibrate)
+    s = sharded_hybrid.build(
+        jnp.zeros(512, jnp.float32), threshold="calibrated", cache_path=p
+    )
+    assert s.threshold == 17
+    assert seen["mesh"] is not None and seen["mode"] == "shard_structure"
+    assert seen["axis_names"] == ("shard",)
+    key = calib_cache.cache_key(512, 128, n_devices=1)
+    assert calib_cache.load(key, path=p) == 17
+    # Second build: cache hit, no re-measurement.
+    monkeypatch.setattr(
+        hybrid, "calibrate", lambda *a, **k: pytest.fail("re-measured on a hit")
+    )
+    s2 = sharded_hybrid.build(
+        jnp.zeros(512, jnp.float32), threshold="calibrated", cache_path=p
+    )
+    assert s2.threshold == 17
+
+
 # --- threshold cache round-trip -------------------------------------------
 
 

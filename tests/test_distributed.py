@@ -125,6 +125,110 @@ _CHILD_SHYBRID = textwrap.dedent(
 )
 
 
+_CHILD_HALO = textwrap.dedent(
+    """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import build as build_mod
+    from repro.core import distributed, sparse_table
+    from repro.core.block_rmq import maxval
+    from repro.launch.mesh import make_mesh
+
+    def replicated_reference(x, num):
+        # What the deleted single-device path used to produce: the full
+        # doubling table over the shard-padded array plus gathered values.
+        n = x.shape[0]
+        n_pad = -(-n // num) * num
+        xp = jnp.pad(jnp.asarray(x), (0, n_pad - n), constant_values=maxval(x.dtype))
+        st = sparse_table.build(xp)
+        return np.asarray(st.idx), np.asarray(xp[st.idx])
+
+    # K levels whose 2^k span crosses MULTIPLE shards: n = 8 * 64 -> C = 64,
+    # levels k with 2^(k-1) in {128, 256} pull halos 2 and 4 shards away.
+    # Plus non-power-of-two n (pad tail in the last shard) and tiny n
+    # (shard_len 1: every level crosses shards).
+    for mesh, axes in [
+        (make_mesh((8,), ("shard",)), ("shard",)),
+        (make_mesh((2, 4), ("data", "model")), ("data", "model")),
+    ]:
+        num = distributed.num_shards(mesh, axes)
+        rng = np.random.default_rng(3)
+        for n in (512, 5000, 1057, 17, 8, 1):
+            x = rng.integers(0, 4, max(n, 1)).astype(np.float32)  # dense ties
+            t = distributed.build_sharded_st(jnp.asarray(x), mesh, axes)
+            gi, gv = replicated_reference(x, num)
+            assert np.array_equal(np.asarray(t.idx), gi), (n, axes)
+            assert np.array_equal(np.asarray(t.val), gv), (n, axes)
+
+    # Leftmost ties straddling a shard boundary: equal minima as the last
+    # element of shard 2 and the first element of shard 3 must resolve to
+    # the left copy at every level that sees both.
+    mesh = make_mesh((8,), ("shard",))
+    n = 8 * 32
+    x = np.ones(n, np.float32)
+    x[3 * 32 - 1] = x[3 * 32] = -7.0  # boundary-straddling tie
+    t = distributed.build_sharded_st(jnp.asarray(x), mesh, ("shard",))
+    gi, gv = replicated_reference(x, 8)
+    assert np.array_equal(np.asarray(t.idx), gi)
+    qfn = distributed.make_st_query_fn(mesh, ("shard",))
+    si, sv = qfn(t, jnp.asarray(np.array([0, 3 * 32])), jnp.asarray(np.array([n - 1, n - 1])))
+    assert int(si[0]) == 3 * 32 - 1  # leftmost of the tied pair
+    assert int(si[1]) == 3 * 32      # left copy excluded -> right copy
+
+    # Allocation probe on a REAL multi-device mesh: at every pipeline stage,
+    # every addressable shard of every build-state array stays within the
+    # per-shard budget; the full (K, n_pad) table never lands on one device.
+    n = 4096
+    plan = build_mod.plan_for("sharded_st", n, mesh=mesh, axis_names=("shard",))
+    layout = plan.layout
+    K = distributed.st_levels(layout.n_pad)
+    budget = (K + 2) * layout.shard_len
+    full_table = K * layout.n_pad
+    assert budget < full_table  # the probe is non-vacuous on 8 shards
+
+    def probe(stage, state):
+        for key, leaf in state.items():
+            if key == "x":
+                continue  # the caller's input, not a build allocation
+            for arr in jax.tree_util.tree_leaves(leaf):
+                if isinstance(arr, jax.Array):
+                    for shard in arr.addressable_shards:
+                        size = int(np.prod(shard.data.shape))
+                        assert size <= budget, (stage, key, shard.data.shape)
+                        assert size < full_table, (stage, key, shard.data.shape)
+
+    t = build_mod.execute(plan, jnp.asarray(rng.random(n, dtype=np.float32)), observer=probe)
+    for shard in t.idx.addressable_shards:
+        assert shard.data.shape == (K, layout.shard_len)
+    print("HALO_OK")
+    """
+)
+
+
+_CHILD_CALIB = textwrap.dedent(
+    """
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import hybrid
+    from repro.launch.mesh import make_mesh, set_mesh
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    measured = []
+    def fake_measure(kind, fn, lj, rj, repeats):
+        measured.append(kind)
+        return 0.0 if kind == "short" else 1.0
+    hybrid._measure = fake_measure
+    with set_mesh(mesh):
+        for mode in ("shard_structure", "shard_2d"):
+            thr = hybrid.calibrate(
+                256, batch=8, repeats=1, mesh=mesh,
+                axis_names=("data", "model"), mode=mode,
+            )
+            assert thr == 256, (mode, thr)  # short always wins -> threshold n
+    assert "short" in measured and "long" in measured
+    print("SHARDED_CALIBRATE_OK")
+    """
+)
+
+
 def _run_child(code):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -149,10 +253,27 @@ def test_distributed_leftmost_tie_across_shards():
 
 
 def test_sharded_hybrid_bit_identical_on_8_device_mesh():
-    """Mixed small/large batch through both distribution modes must be
-    bit-identical to the single-host blocked oracle (acceptance criterion)."""
+    """Mixed small/large batch through every distribution mode (including the
+    2D structure x batch mesh) must be bit-identical to the single-host
+    blocked oracle (acceptance criterion)."""
     out = _run_child(_CHILD_SHYBRID)
     assert "SHYBRID_OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_distributed_st_build_halo_exchange_8_shards():
+    """The distributed doubling-table build: bit-identity with the replicated
+    build on non-power-of-two n, boundary-straddling leftmost ties, levels
+    whose 2^k span crosses multiple shards, and the per-device allocation
+    probe (no device ever holds the full (K, n) table)."""
+    out = _run_child(_CHILD_HALO)
+    assert "HALO_OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_sharded_calibration_times_sharded_constituents():
+    """calibrate(mesh=...) must build and time the sharded constituents on a
+    real 2x4 mesh (deterministic via the _measure seam)."""
+    out = _run_child(_CHILD_CALIB)
+    assert "SHARDED_CALIBRATE_OK" in out.stdout, out.stderr[-3000:]
 
 
 def test_sharded_train_step_2x4_mesh():

@@ -148,6 +148,68 @@ def test_max_batch_splits_flushes():
     assert max(st.padded_sizes) <= 8
 
 
+def test_regime_split_counts_in_stats():
+    """Per-launch (short, long) sub-batch sizes surface in ServeStats, with
+    the batcher's trivial (0, 0) pad queries excluded from the counts."""
+    rng = np.random.default_rng(7)
+    n = 2048
+    x = rng.random(n, dtype=np.float32)
+    s = hybrid.build(jnp.asarray(x), 128, use_kernels=False, threshold=16)
+    qfn = lambda l, r: hybrid.query(s, l, r)
+
+    # 5 short (len <= 16) + 3 long queries in one request: bucket(8) = 8, no
+    # pad; then a 3-query all-short request: bucket(3) = 4, one pad query.
+    l1 = np.array([0, 5, 9, 100, 200, 300, 400, 500], np.int32)
+    r1 = np.array([3, 20, 9, 115, 210, 1300, 1400, 1500], np.int32)
+    l2 = np.array([1, 2, 3], np.int32)
+    r2 = np.array([4, 5, 6], np.int32)
+    with RMQServer(qfn, ServeConfig(deadline_s=0.0, max_batch=64, n=n)) as srv:
+        srv.submit(l1, r1).result(timeout=60)
+        srv.submit(l2, r2).result(timeout=60)
+    st = srv.stats()
+    assert st.regime_splits == ((5, 3), (3, 0))
+    assert st.short_queries == 8 and st.long_queries == 3
+    assert st.mixed_batches == 1
+    assert "regime split 8 short / 3 long" in st.summary()
+
+
+def test_regime_splits_empty_for_single_path_engine():
+    x = np.arange(32, 0, -1).astype(np.float32)
+    with RMQServer(_oracle_engine(x), ServeConfig(deadline_s=0.0, n=32)) as srv:
+        srv.submit(np.array([0], np.int32), np.array([31], np.int32)).result(timeout=30)
+    st = srv.stats()
+    assert st.regime_splits == ()
+    assert st.short_queries == 0 and st.mixed_batches == 0
+    assert "regime split" not in st.summary()
+
+
+def test_warmup_bounds_from_plan_compiles_each_regime():
+    """Plan-derived warmup probes: every probe batch the plan prescribes is
+    issued at every padded size, and the probes route one per regime."""
+    from repro.core import build as build_mod
+
+    n = 512
+    plan = registry.plan_for_serving("hybrid", n, threshold=32)
+    x = np.random.default_rng(0).random(n, dtype=np.float32)
+    calls = []
+
+    def qfn(l, r):
+        calls.append((l.size, int(r[0] - l[0] + 1)))
+        return _oracle_engine(x)(l, r)
+
+    srv = RMQServer(
+        qfn,
+        ServeConfig(max_batch=8, n=n),
+        warmup_bounds=build_mod.warmup_bounds(plan),
+    )
+    srv.warmup()
+    # Sizes 1, 2, 4, 8; per size one length-32 (short regime) and one
+    # length-n (long regime) probe.
+    assert calls == [
+        (s, ln) for s in (1, 2, 4, 8) for ln in (32, n)
+    ]
+
+
 def test_scatter_back_mixed_dists_through_hybrid_engine():
     """End-to-end through the real registry engine under all three §6.4 regimes."""
     rng = np.random.default_rng(4)

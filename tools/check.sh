@@ -8,18 +8,24 @@
 #    (tests/test_conformance.py — also part of tier-1; gated explicitly so
 #    a narrowed pytest invocation can't silently drop it).
 # 3. serve smoke: multi-device (8 fake) end-to-end serve through the
-#    sharded range-adaptive hybrid engine, both distribution modes.
-# 4. async-serve smoke: multi-device (8 fake) serve through the async
+#    sharded range-adaptive hybrid engine, all three distribution modes
+#    (structure-sharded, batch-sharded, 2D structure x batch).
+# 4. distributed-build conformance gate: the halo-exchange sparse-table
+#    build on 8 fake devices — bit-identity with the replicated build plus
+#    the per-device allocation probe (tests/test_distributed.py) — then
+#    oracle-verified end-to-end through the async serve smoke on a 2D
+#    (2x4 struct x qbatch) mesh.
+# 5. async-serve smoke: multi-device (8 fake) serve through the async
 #    micro-batching subsystem (repro.serve) — concurrent Poisson clients,
 #    mixed (medium) ranges, every request verified bit-identical against
 #    the numpy oracle (serve.py exits 1 on any mismatch).
-# 5. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+# 6. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
 #    CPU — Pallas kernels validate through the test suite; the smoke catches
 #    perf-path regressions like import errors, shape breaks, or a suite that
 #    stopped emitting rows).
 #
-# Perf baseline: BENCH_PR3.json (benchmarks/run.py --json; includes the
-# serve_latency suite); refresh per PR.
+# Perf baseline: BENCH_PR4.json (benchmarks/run.py --json; includes the
+# build_mem suite); refresh per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -39,6 +45,14 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 300 \
     python -m repro.launch.serve --engine sharded_hybrid --qshard \
     --n 65536 --batch 2048 --batches 2 --block-size 128 --dist medium
 
+echo "== distributed-build conformance gate (8 fake devices, halo exchange) =="
+python -m pytest -q tests/test_distributed.py \
+    -k "halo_exchange or calibration_times_sharded"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 600 \
+    python -m repro.launch.serve --mode async --engine sharded_hybrid \
+    --qshard 2d --n 65536 --block-size 128 --dist medium --clients 4 \
+    --requests 12 --rate 300 --req-batch 16 --max-batch 128
+
 echo "== async micro-batching serve smoke (8 fake devices, oracle-verified) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 600 \
     python -m repro.launch.serve --mode async --engine sharded_hybrid \
@@ -53,4 +67,4 @@ if [ "$rows" -lt 4 ]; then
     echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
     exit 1
 fi
-echo "OK: tier-1 green, conformance green, serve smokes green, fig12 smoke emitted $rows rows"
+echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, fig12 smoke emitted $rows rows"
