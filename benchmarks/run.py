@@ -18,7 +18,7 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: fig12,fig13,fig10,fig14,table2,build_mem,roofline,"
-        "crossover,sharded_hybrid,serve_latency",
+        "crossover,sharded_hybrid,serve_latency,update_throughput",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -42,6 +42,7 @@ def main() -> None:
         serve_latency,
         sharded_hybrid,
         time_per_rmq,
+        update_throughput,
     )
 
     common.SMOKE = args.smoke
@@ -57,6 +58,7 @@ def main() -> None:
         "crossover": hybrid_crossover.run,
         "sharded_hybrid": sharded_hybrid.run,
         "serve_latency": serve_latency.run,
+        "update_throughput": update_throughput.run,
     }
     if only:
         unknown = only - set(suites)

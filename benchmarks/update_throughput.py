@@ -1,0 +1,148 @@
+"""Online-update benchmarks: patch-vs-rebuild speedup + mutate-while-serving.
+
+Two measurements (DESIGN.md §9):
+
+* **Patch vs full rebuild**: per engine x n, the median wall time of applying
+  a coalesced single-point update through ``OnlineEngine.apply`` (windowed
+  patch + COW publish) against re-executing the engine's BuildPlan on the
+  mutated array. The ``derived`` column carries the speedup — the acceptance
+  bar is >= 5x for single-point updates at n >= 2^16 on the CPU baseline
+  (tools/check.sh gates it).
+* **Mutate-while-serving**: an async RMQServer over an online ``hybrid``
+  engine under open-loop Poisson query clients while a mutator thread
+  streams update batches; reports sustained updates/sec, update p50, and the
+  query p99 observed *while mutating* (the latency cost of concurrent
+  mutation, which MVCC pinning is supposed to keep flat).
+
+CSV convention: ``name,us_per_call,derived``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import update
+from repro.core import build as build_mod
+from repro.serve import RMQServer, ServeConfig
+from repro.serve.workload import make_queries, run_poisson_clients
+
+from . import common
+
+# Engines in the patch-vs-rebuild sweep: the raw doubling table (worst case:
+# the patched structure IS the whole O(n log n) table) and the serving
+# flagship hybrid (blocked + raw table).
+_SWEEP_ENGINES = ("sparse_table", "hybrid")
+
+
+def _median_apply_s(online, n, repeats=5):
+    """Median wall seconds of a single-point ``apply`` (fresh write each rep)."""
+    rng = np.random.default_rng(1)
+    ts = []
+    for _ in range(repeats):
+        log = update.DeltaLog().point(int(rng.integers(0, n)), float(rng.random()))
+        t0 = time.perf_counter()
+        online.apply(log)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _median_rebuild_s(plan, x, repeats=3):
+    def rebuild():
+        return build_mod.execute(plan, x)
+
+    return common.time_fn(rebuild, repeats=repeats, warmup=1)
+
+
+def patch_vs_rebuild(sizes=None):
+    sizes = sizes if sizes is not None else ((1 << 12,) if common.SMOKE else (1 << 14, 1 << 16, 1 << 18))
+    rng = np.random.default_rng(0)
+    for engine in _SWEEP_ENGINES:
+        for n in sizes:
+            x = rng.random(n, dtype=np.float32)
+            kw = {"threshold": 64} if engine == "hybrid" else {}
+            online = update.make_online(engine, jnp.asarray(x), **kw)
+            patch_s = _median_apply_s(online, n)
+            rebuild_s = _median_rebuild_s(online.plan, jnp.asarray(np.asarray(x)))
+            speedup = rebuild_s / patch_s if patch_s > 0 else float("inf")
+            common.emit(
+                f"update_throughput/patch_point_{engine}_n{n}",
+                patch_s,
+                f"vs rebuild {rebuild_s*1e3:.1f}ms speedup={speedup:.1f}x",
+            )
+            common.emit(f"update_throughput/rebuild_{engine}_n{n}", rebuild_s)
+
+
+def mutate_while_serving():
+    n = 1 << 12 if common.SMOKE else 1 << 15
+    clients, requests, updates = (2, 8, 6) if common.SMOKE else (4, 24, 24)
+    rng = np.random.default_rng(3)
+    x = rng.random(n, dtype=np.float32)
+    online = update.make_online("hybrid", jnp.asarray(x), threshold=64)
+    cfg = ServeConfig(deadline_s=2e-3, max_batch=512, n=n)
+    srv = RMQServer(online=online, config=cfg,
+                    warmup_bounds=build_mod.warmup_bounds(online.plan))
+    srv.warmup()
+    # Pre-compile the patch/publish path so the measured loop is steady-state.
+    online.apply(update.DeltaLog().point(0, float(x[0])))
+
+    stop = threading.Event()
+    applied = []
+
+    def mutator():
+        mrng = np.random.default_rng(9)
+        for i in range(updates):
+            if stop.is_set():
+                break
+            log = update.DeltaLog().point(int(mrng.integers(0, n)), float(mrng.random()))
+            if i % 3 == 1:
+                a = int(mrng.integers(0, n - 64))
+                log.fill(a, a + 63, float(mrng.random()))
+            t0 = time.perf_counter()
+            srv.submit_update(log).result(timeout=120)
+            applied.append(time.perf_counter() - t0)
+
+    with srv:
+        mut = threading.Thread(target=mutator)
+        t0 = time.perf_counter()
+        mut.start()
+        out = run_poisson_clients(
+            clients,
+            requests,
+            400.0,
+            lambda crng, c: make_queries(crng, n, 16, "medium"),
+            srv.submit,
+            seed=4,
+        )
+        mut.join()
+        stop.set()
+        for per in out:
+            for _, fut in per:
+                if fut is not None:
+                    fut.result(timeout=120)
+        wall = time.perf_counter() - t0
+    st = srv.stats()
+    ups = len(applied) / wall if wall > 0 else 0.0
+    common.emit(
+        "update_throughput/serve_update_p50",
+        float(np.median(applied)) if applied else 0.0,
+        f"{ups:.0f} updates/s, version lag max {st.version_lag_max}",
+    )
+    common.emit(
+        "update_throughput/serve_query_p99_while_mutating",
+        st.p99_total_s,
+        f"{st.throughput_qps:.0f} RMQ/s alongside {len(applied)} updates",
+    )
+
+
+def run():
+    patch_vs_rebuild()
+    mutate_while_serving()
+
+
+if __name__ == "__main__":
+    common.SMOKE = True
+    run()

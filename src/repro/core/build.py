@@ -47,12 +47,26 @@ __all__ = [
     "build",
     "default_mesh",
     "execute",
+    "execute_update",
     "plan_for",
     "planner_names",
+    "run_stages",
+    "update_plan",
     "warmup_bounds",
 ]
 
-STAGE_NAMES = ("shard_layout", "local_build", "halo_exchange", "finalize")
+# Canonical stage order. The first four are the build pipeline; the last two
+# are the online-update pipeline (``repro.update``): ``apply_deltas`` patches
+# structures incrementally from a coalesced DeltaBatch, ``publish`` installs
+# the patched state as the next MVCC version.
+STAGE_NAMES = (
+    "shard_layout",
+    "local_build",
+    "halo_exchange",
+    "finalize",
+    "apply_deltas",
+    "publish",
+)
 
 
 class ShardLayout(NamedTuple):
@@ -102,6 +116,8 @@ def _resolve_threshold(
     n_devices: Optional[int] = None,
     cache_path=None,
     calibrate_kw: Optional[dict] = None,
+    key_mode: Optional[str] = None,
+    key_mesh_shape=None,
 ) -> int:
     """The routing-threshold policy, shared by both hybrid planners.
 
@@ -111,11 +127,9 @@ def _resolve_threshold(
     miss and persist (``calibrate_kw`` carries the mesh for sharded-aware
     measurement); an int pins it.
 
-    The cache key stays ``(n, bs, backend, ndev)`` even though a sharded
-    measurement now varies with the distribution mode: whichever mode
-    calibrates a configuration first owns its cached threshold (mixing
-    ``--calibrate`` across modes on one host reuses it — see ROADMAP for
-    the mode-keyed follow-up).
+    Sharded planners pass ``key_mode``/``key_mesh_shape`` (cache key v2) so
+    every (mode, mesh factoring) owns its own cached threshold; single-host
+    planners omit them and keep reading their v1 entries.
     """
     from . import hybrid  # deferred: hybrid lowers its build through here
 
@@ -124,7 +138,9 @@ def _resolve_threshold(
     if isinstance(threshold, (int, np.integer)):
         return int(threshold)
     if threshold == "cached":
-        key = calib_cache.cache_key(n, block_size, n_devices=n_devices)
+        key = calib_cache.cache_key(
+            n, block_size, n_devices=n_devices, mode=key_mode, mesh_shape=key_mesh_shape
+        )
         hit = calib_cache.load(key, path=cache_path)
         if hit is not None:
             return hit
@@ -134,6 +150,8 @@ def _resolve_threshold(
             n,
             block_size,
             n_devices=n_devices,
+            mode=key_mode,
+            mesh_shape=key_mesh_shape,
             path=cache_path,
             **(calibrate_kw or {}),
         )
@@ -145,23 +163,65 @@ def _resolve_threshold(
 # --- pipeline execution -----------------------------------------------------
 
 
-def execute(plan: BuildPlan, x, *, observer: Optional[Callable] = None):
-    """Run ``plan``'s stages over ``x``; return the finalize stage's result.
+def run_stages(plan: BuildPlan, state: dict, *, observer: Optional[Callable] = None):
+    """Advance ``state`` through ``plan``'s stages; return ``state["result"]``.
 
+    The one stage sequencer behind both pipelines (build and online update).
     ``observer(stage_name, state)`` fires after each stage — the seam the
-    build-memory benchmark and the no-full-table allocation probes hook.
+    build-memory benchmark, the no-full-table allocation probes, and the
+    update-throughput breakdown hook.
     """
-    x = jnp.asarray(x)
-    if x.ndim != 1 or x.shape[0] != plan.layout.n:
-        raise ValueError(
-            f"plan for n={plan.layout.n} executed on array of shape {x.shape}"
-        )
-    state: dict = {"x": x}
     for stage in plan.stages:
         state = stage.fn(state)
         if observer is not None:
             observer(stage.name, state)
     return state["result"]
+
+
+def execute(plan: BuildPlan, x, *, observer: Optional[Callable] = None):
+    """Run ``plan``'s build stages over ``x``; return the finalize result."""
+    x = jnp.asarray(x)
+    if x.ndim != 1 or x.shape[0] != plan.layout.n:
+        raise ValueError(
+            f"plan for n={plan.layout.n} executed on array of shape {x.shape}"
+        )
+    return run_stages(plan, {"x": x}, observer=observer)
+
+
+# --- online-update pipeline --------------------------------------------------
+
+
+def update_plan(
+    engine: str,
+    layout: ShardLayout,
+    apply_fn: Callable[[dict], dict],
+    publish_fn: Callable[[dict], dict],
+    meta: Optional[Dict[str, Any]] = None,
+) -> BuildPlan:
+    """The two-stage online-update plan: ``apply_deltas`` -> ``publish``.
+
+    ``apply_fn`` consumes ``state["deltas"]`` (a coalesced
+    ``repro.update.DeltaBatch``) and writes ``state["patched"]`` (the next
+    engine state, copy-on-write over the previous version's leaves);
+    ``publish_fn`` installs it as the next MVCC version and writes
+    ``state["result"]`` (an ``UpdateResult``). ``repro.update.OnlineEngine``
+    constructs these plans; they run through the same ``run_stages``
+    sequencer (and observer seam) as builds.
+    """
+    return BuildPlan(
+        engine,
+        layout,
+        (
+            BuildStage("apply_deltas", apply_fn),
+            BuildStage("publish", publish_fn),
+        ),
+        dict(meta or {}),
+    )
+
+
+def execute_update(plan: BuildPlan, deltas, *, observer: Optional[Callable] = None):
+    """Run an update plan over a coalesced ``DeltaBatch``."""
+    return run_stages(plan, {"deltas": deltas}, observer=observer)
 
 
 _PLANNERS: Dict[str, Callable] = {}
@@ -483,12 +543,10 @@ def _plan_sharded_hybrid(
         cache_path=cache_path,
         # Sharded-aware measurement: calibrate times the sharded constituents
         # on this very mesh, so the cached value reflects collective costs.
-        calibrate_kw={
-            "use_kernels": False,
-            "mesh": mesh,
-            "axis_names": axis_names,
-            "mode": mode,
-        },
+        calibrate_kw={"use_kernels": False, "mesh": mesh, "axis_names": axis_names},
+        # Cache key v2: the measurement varies per (mode, mesh factoring).
+        key_mode=mode,
+        key_mesh_shape=tuple(mesh.shape[a] for a in mesh.axis_names),
     )
     num_struct = distributed.num_shards(mesh, struct_axes) if struct_axes else 1
     layout = _st_layout(n, num_struct)

@@ -11,6 +11,11 @@ File format (atomic rename on write):
 
     {"version": 1, "entries": {"n=1048576/bs=128/backend=tpu/ndev=8": 1024}}
 
+Key v2: sharded measurements additionally carry the distribution mode and
+mesh shape (``.../ndev=8/mode=shard_2d/mesh=2x4``) so modes no longer share
+one threshold slot per mesh size; the file format is unchanged, and
+single-host builds keep their v1 keys (old entries stay readable).
+
 A version mismatch marks every entry stale: ``load`` misses, and the next
 ``store`` drops the old entries wholesale. Corrupt or unreadable files are
 treated as empty — a cache must never turn into a crash.
@@ -50,14 +55,33 @@ def default_path() -> Path:
 
 
 def cache_key(
-    n: int, block_size: int, *, backend: str | None = None, n_devices: int | None = None
+    n: int,
+    block_size: int,
+    *,
+    backend: str | None = None,
+    n_devices: int | None = None,
+    mode: str | None = None,
+    mesh_shape=None,
 ) -> str:
-    """The cache key: array size, block size, backend, and device count."""
+    """The cache key: array size, block size, backend, and device count.
+
+    Key v2 (sharded builds): a sharded measurement varies with the
+    distribution mode AND the mesh factoring (a 2x4 struct x batch grid
+    times different collectives than an 8x1), so passing ``mode`` (with the
+    mesh shape) extends the key — without it, whichever mode calibrated a
+    configuration first owned the threshold for every mode on that mesh
+    size (the ROADMAP bug). Single-host builds pass neither and keep the
+    v1 key, so their existing entries stay valid.
+    """
     if backend is None:
         backend = jax.default_backend()
     if n_devices is None:
         n_devices = len(jax.devices())
-    return f"n={n}/bs={block_size}/backend={backend}/ndev={n_devices}"
+    key = f"n={n}/bs={block_size}/backend={backend}/ndev={n_devices}"
+    if mode is not None:
+        shape = "x".join(str(int(s)) for s in mesh_shape) if mesh_shape else "?"
+        key += f"/mode={mode}/mesh={shape}"
+    return key
 
 
 def _read(path: Path) -> dict:
@@ -105,16 +129,32 @@ def get_threshold(
     *,
     backend: str | None = None,
     n_devices: int | None = None,
+    mode: str | None = None,
+    mesh_shape=None,
     path: str | Path | None = None,
     **calibrate_kw,
 ) -> int:
-    """Cached crossover threshold; measures via ``hybrid.calibrate`` on miss."""
-    key = cache_key(n, block_size, backend=backend, n_devices=n_devices)
+    """Cached crossover threshold; measures via ``hybrid.calibrate`` on miss.
+
+    ``mode``/``mesh_shape`` extend the key for sharded measurements (key v2)
+    and ``mode`` is forwarded to the calibration itself; single-host callers
+    omit both and keep hitting their v1 entries.
+    """
+    key = cache_key(
+        n,
+        block_size,
+        backend=backend,
+        n_devices=n_devices,
+        mode=mode,
+        mesh_shape=mesh_shape,
+    )
     hit = load(key, path)
     if hit is not None:
         return hit
     from . import hybrid  # deferred: hybrid also consumes this module
 
+    if mode is not None:
+        calibrate_kw["mode"] = mode
     thr = hybrid.calibrate(n, block_size=block_size, **calibrate_kw)
     store(key, thr, path)
     return thr

@@ -47,6 +47,7 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.6 exposes shard_map at top level with `check_vma`
@@ -80,6 +81,8 @@ __all__ = [
     "make_st_query_fn",
     "num_shards",
     "pad_to_shards",
+    "patch_sharded",
+    "patch_sharded_st",
     "st_halo_doubling",
     "st_levels",
     "st_local_level0",
@@ -465,6 +468,216 @@ def build_replicated_st(x: jax.Array, mesh: Mesh) -> SparseTable:
     """Full doubling table replicated on every device (batch-sharded mode)."""
     st = sparse_table.build(x)
     return jax.device_put(st, jax.sharding.NamedSharding(mesh, P()))
+
+
+# --- incremental patch kernels (the online-update subsystem's SPMD side) ----
+#
+# ``repro.update`` mutates structures under live traffic. For the sharded
+# engines the patch must run where the data lives: each device scatters the
+# updates it owns, repairs only its touched blocks, and re-runs the doubling
+# recurrence masked to the affected column windows — the same level-k window
+# containment argument as the host-side ``repro.update.patch`` kernels, the
+# same ``_flat_shift`` halo transport as the distributed build when a window
+# straddles shard boundaries. SPMD masking means devices outside a window do
+# (discarded) lane work rather than skipping it, but no new collective kinds
+# are introduced and per-device memory stays bounded by the shard. Results
+# are bit-identical to a from-scratch rebuild of the mutated array.
+
+
+def _pad_updates(upd_pos, upd_val, val_dtype):
+    """Pad (positions, values) to a power of two with ``pos = -1`` sentinels,
+    so the compiled patch kernels see a bounded set of shapes."""
+    upd_pos = np.asarray(upd_pos, np.int64)
+    upd_val = np.asarray(upd_val)
+    if upd_pos.size == 0:
+        raise ValueError("patch called with no updates")
+    p = 1 << (upd_pos.size - 1).bit_length() if upd_pos.size > 1 else 1
+    pos = np.full(p, -1, np.int32)
+    val = np.zeros(p, np.dtype(val_dtype))
+    pos[: upd_pos.size] = upd_pos
+    val[: upd_val.size] = upd_val
+    return jnp.asarray(pos), jnp.asarray(val)
+
+
+def _window_hull(upd_pos):
+    """(lo, hi) hull of the valid (non-sentinel) update positions."""
+    valid = upd_pos >= 0
+    lo = jnp.min(jnp.where(valid, upd_pos, _INT_BIG))
+    hi = jnp.max(jnp.where(valid, upd_pos, -1))
+    return lo, hi
+
+
+@functools.lru_cache(maxsize=None)
+def _st_patch_fn(mesh: Mesh, axis_names: Tuple[str, ...], n_pad: int, num: int, p: int):
+    shard_len = n_pad // num
+    k_levels = st_levels(n_pad)
+
+    def local(idx, val, upd_pos, upd_val):
+        flat = _flat_axis_index(axis_names)
+        c0 = flat * shard_len
+        cols = jnp.arange(shard_len, dtype=jnp.int32)
+        is_last = flat == num - 1
+        mn, mx = _window_hull(upd_pos)
+        # Scatter the owned updates into the level-0 value row (the level-0
+        # index row is the identity and never changes); non-owned updates
+        # fall off the end and are dropped.
+        lp = upd_pos - c0
+        owned = (upd_pos >= 0) & (lp >= 0) & (lp < shard_len)
+        cur_v = val[0].at[jnp.where(owned, lp, shard_len)].set(
+            upd_val.astype(val.dtype), mode="drop"
+        )
+        cur_i = idx[0]
+        idx_rows, val_rows = [cur_i], [cur_v]
+        for k in range(1, k_levels):
+            h = 1 << (k - 1)
+            if h >= n_pad:  # window spans the whole array: rows repeat
+                idx_rows.append(cur_i)
+                val_rows.append(cur_v)
+                continue
+            # Same transport as st_halo_doubling: the shifted operand is one
+            # shard-width of the previous (patched) row, fetched from up to
+            # two shards to the right, tail-clamped to its last column.
+            d, r = divmod(h, shard_len)
+            wi = _flat_shift(cur_i, mesh, axis_names, d)
+            wv = _flat_shift(cur_v, mesh, axis_names, d)
+            if r:
+                bi = _flat_shift(cur_i, mesh, axis_names, d + 1)
+                bv = _flat_shift(cur_v, mesh, axis_names, d + 1)
+                wi = jnp.concatenate([wi[r:], bi[:r]])
+                wv = jnp.concatenate([wv[r:], bv[:r]])
+            g = c0 + h + cols
+            last_i = jax.lax.pmax(jnp.where(is_last, cur_i[-1], -1), axis_names)
+            last_v = jax.lax.psum(
+                jnp.where(is_last, cur_v[-1], jnp.zeros_like(cur_v[-1])), axis_names
+            )
+            wi = jnp.where(g >= n_pad, last_i, wi)
+            wv = jnp.where(g >= n_pad, last_v, wv)
+            take = cur_v <= wv  # leftmost-tie: prefer the unshifted (left) row
+            cand_i = jnp.where(take, cur_i, wi)
+            cand_v = jnp.where(take, cur_v, wv)
+            # Affected-column window at level k: an entry at column c covers
+            # [c, c + 2^k), so only c in [mn - 2^k + 1, mx] can change.
+            gc = c0 + cols
+            in_win = (gc >= mn - ((1 << k) - 1)) & (gc <= mx)
+            cur_i = jnp.where(in_win, cand_i, idx[k])
+            cur_v = jnp.where(in_win, cand_v, val[k])
+            idx_rows.append(cur_i)
+            val_rows.append(cur_v)
+        return jnp.stack(idx_rows), jnp.stack(val_rows)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(None, axis_names), P(None, axis_names), P(), P()),
+            out_specs=(P(None, axis_names), P(None, axis_names)),
+            check_vma=False,
+        )
+    )
+
+
+def patch_sharded_st(
+    t: ShardedSparseTable, upd_pos, upd_val, mesh: Mesh, axis_names: Sequence[str]
+) -> ShardedSparseTable:
+    """Patch the column-sharded doubling table in place of a rebuild.
+
+    ``upd_pos``/``upd_val`` are the coalesced changed positions and values
+    (host arrays; appends within the padded capacity are just updates at pad
+    columns). Per level the doubling recurrence re-runs masked to the
+    affected window, with the ``_flat_shift`` halo transport covering
+    windows that straddle shard boundaries — bit-identical to
+    ``build_sharded_st`` on the mutated array, with no device ever holding
+    the full table.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    n_pad = t.idx.shape[1]
+    pos, val = _pad_updates(upd_pos, upd_val, t.val.dtype)
+    idx, vals = _st_patch_fn(mesh, axis_names, n_pad, num, pos.shape[0])(
+        t.idx, t.val, pos, val
+    )
+    return ShardedSparseTable(idx=idx, val=vals)
+
+
+@functools.lru_cache(maxsize=None)
+def _blocked_patch_fn(
+    mesh: Mesh, axis_names: Tuple[str, ...], nb_local: int, bs: int, p: int
+):
+    local_n = nb_local * bs
+    k_levels = st_levels(nb_local) if nb_local > 1 else 1
+
+    def local(s: BlockRMQ, upd_pos, upd_val):
+        flat = _flat_axis_index(axis_names)
+        off = flat * local_n
+        lp = upd_pos - off
+        owned = (upd_pos >= 0) & (lp >= 0) & (lp < local_n)
+        # Scatter owned values into the padded block matrix.
+        xf = s.x_blocks.reshape(-1)
+        xf = xf.at[jnp.where(owned, lp, local_n)].set(
+            upd_val.astype(xf.dtype), mode="drop"
+        )
+        xb = xf.reshape(nb_local, bs)
+        # O(bs) per-update block-min repair (duplicate updates to one block
+        # recompute the same answer; drops discard the rest).
+        blk = jnp.clip(lp // bs, 0, nb_local - 1)
+        rows = jnp.take(xb, blk, axis=0)  # (P, bs)
+        lidx = jnp.argmin(rows, axis=1).astype(jnp.int32)
+        newmin = jnp.take_along_axis(rows, lidx[:, None], axis=1)[:, 0]
+        tgt = jnp.where(owned, blk, nb_local)
+        bmin_val = s.bmin_val.at[tgt].set(newmin, mode="drop")
+        bmin_gidx = s.bmin_gidx.at[tgt].set(
+            (blk * bs).astype(jnp.int32) + lidx, mode="drop"
+        )
+        # Masked windowed repair of the LOCAL doubling table over block
+        # minima (per-shard tables never cross chunk boundaries, so there is
+        # no transport here — just the same window containment as the host
+        # patch kernels). Shards owning no update have an empty window and
+        # keep every row.
+        mnb = jnp.min(jnp.where(owned, blk, _INT_BIG))
+        mxb = jnp.max(jnp.where(owned, blk, -1))
+        cols = jnp.arange(nb_local, dtype=jnp.int32)
+        cur = s.st.idx[0]
+        rows_out = [cur]
+        for k in range(1, k_levels):
+            h = 1 << (k - 1)
+            if h >= nb_local:
+                rows_out.append(cur)
+                continue
+            shifted = jnp.concatenate([cur[h:], jnp.broadcast_to(cur[-1], (h,))])
+            cand = jnp.where(bmin_val[cur] <= bmin_val[shifted], cur, shifted)
+            in_win = (cols >= mnb - ((1 << k) - 1)) & (cols <= mxb)
+            cur = jnp.where(in_win, cand, s.st.idx[k])
+            rows_out.append(cur)
+        st = SparseTable(idx=jnp.stack(rows_out), x=bmin_val)
+        return BlockRMQ(x_blocks=xb, bmin_val=bmin_val, bmin_gidx=bmin_gidx, st=st)
+
+    specs = _block_rmq_specs(P(axis_names), P(None, axis_names))
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(specs, P(), P()),
+            out_specs=specs,
+            check_vma=False,
+        )
+    )
+
+
+def patch_sharded(
+    s: BlockRMQ, upd_pos, upd_val, mesh: Mesh, axis_names: Sequence[str]
+) -> BlockRMQ:
+    """Patch the mesh-sharded blocked structure in place of a rebuild.
+
+    Each device scatters the updates it owns into its chunk, re-argmins only
+    the touched blocks (O(bs) each), and window-patches its local block-min
+    doubling table. Bit-identical to ``build_sharded`` on the mutated array.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    bs = s.x_blocks.shape[1]
+    nb_local = s.x_blocks.shape[0] // num
+    pos, val = _pad_updates(upd_pos, upd_val, s.x_blocks.dtype)
+    return _blocked_patch_fn(mesh, axis_names, nb_local, bs, pos.shape[0])(s, pos, val)
 
 
 def make_st_query_fn(

@@ -51,6 +51,7 @@ __all__ = [
     "names",
     "plan_for_serving",
     "serveable_names",
+    "updatable_names",
 ]
 
 
@@ -74,6 +75,11 @@ class EngineSpec(NamedTuple):
     build_kwargs: frozenset = frozenset()
     modes: Tuple[str, ...] = ()
     serve_plan: Optional[Callable] = None  # (n, mesh, axis_names, **kw) -> BuildPlan
+    # The engine enrolls in the online-update subsystem (``repro.update``):
+    # its structures can be mutated incrementally (delta patch + MVCC version
+    # publish) instead of rebuilt. ``repro.update.make_online`` validates the
+    # flag against its per-engine patch implementations.
+    updatable: bool = False
     doc: str = ""
 
 
@@ -146,18 +152,21 @@ ENGINES: dict = {
         "sparse_table",
         sparse_table.query,
         serve_plan=_simple_serve_plan("sparse_table"),
+        updatable=True,
         doc="O(1) doubling-table lookups",
     ),
     "block128": EngineSpec(
         lambda x: build_mod.build("block", x, block_size=128),
         block_rmq.query,
         serve_plan=_simple_serve_plan("block", block_size=128),
+        updatable=True,
         doc="pure-jnp blocked, bs=128",
     ),
     "block256": EngineSpec(
         lambda x: build_mod.build("block", x, block_size=256),
         block_rmq.query,
         serve_plan=_simple_serve_plan("block", block_size=256),
+        updatable=True,
         doc="pure-jnp blocked, bs=256",
     ),
     "lane": EngineSpec(
@@ -187,6 +196,7 @@ ENGINES: dict = {
         hybrid.query,
         build_kwargs=frozenset({"block_size", "threshold"}),
         serve_plan=_simple_serve_plan("hybrid", block_size=128, threshold="cached"),
+        updatable=True,
         doc="range-adaptive blocked/sparse-table crossover dispatcher",
     ),
     # Mesh-sharded blocked engine (structure sharded, queries replicated).
@@ -196,6 +206,7 @@ ENGINES: dict = {
         needs_mesh=True,
         build_kwargs=frozenset({"block_size"}),
         serve_plan=_simple_serve_plan("distributed", block_size=1024),
+        updatable=True,
         doc="mesh-sharded blocked engine, two-pmin merge",
     ),
     # Mesh-sharded range-adaptive dispatcher (builds over all visible
@@ -209,6 +220,7 @@ ENGINES: dict = {
         serve_plan=_simple_serve_plan(
             "sharded_hybrid", block_size=128, threshold="cached"
         ),
+        updatable=True,
         doc="sharded range-adaptive hybrid "
         "(shard_structure | shard_batch | shard_2d)",
     ),
@@ -221,6 +233,11 @@ def names() -> Tuple[str, ...]:
 
 def serveable_names() -> Tuple[str, ...]:
     return tuple(n for n, s in ENGINES.items() if s.serveable)
+
+
+def updatable_names() -> Tuple[str, ...]:
+    """Engines enrolled in the online-update subsystem (``repro.update``)."""
+    return tuple(n for n, s in ENGINES.items() if s.updatable)
 
 
 def get(name: str) -> EngineSpec:

@@ -10,7 +10,15 @@ Two modes:
   the deadline micro-batcher coalesces them into power-of-two padded engine
   launches, scatters per-request results back, and EVERY request is
   verified bit-identical against the oracle. Prints p50/p99 latency,
-  sustained throughput, and the microbatch/coalescing profile.
+  sustained throughput, and the microbatch/coalescing profile. With
+  ``--mutate K`` (engines declaring ``updatable``), a mutator thread
+  interleaves K update batches (point writes, range fills, appends) through
+  ``submit_update`` while the clients run: the engine is built as a
+  ``repro.update.OnlineEngine``, each request is answered against its
+  pinned MVCC version, and verification replays the delta stream on the
+  host so every request is checked against the oracle **of its version**.
+  ``--adaptive-deadline`` lets the batcher move its coalescing deadline
+  with load (trajectory reported in the stats line).
 
 Engine choices and flag validation derive from the registry's capability
 metadata (``core.registry.EngineSpec``) — no hard-coded engine name lists:
@@ -32,16 +40,18 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import update as update_mod
 from repro.core import build as build_mod
 from repro.core import ref, registry
 from repro.launch.mesh import factor_2d, make_mesh, set_mesh
-from repro.serve import RMQServer, ServeConfig
+from repro.serve import RMQServer, ServeConfig, ServerOverloaded
 from repro.serve.workload import make_queries, run_poisson_clients
 
 __all__ = ["main"]
@@ -103,6 +113,26 @@ def _parser() -> argparse.ArgumentParser:
     asy.add_argument("--max-batch", type=int, default=4096, help="queries per engine launch")
     asy.add_argument("--workers", type=int, default=1, help="engine-pool threads")
     asy.add_argument("--max-pending", type=int, default=4096, help="admission-control bound")
+    asy.add_argument(
+        "--mutate",
+        type=int,
+        default=0,
+        metavar="K",
+        help="interleave K update batches (point/range writes + appends) "
+        "while serving (engines declaring 'updatable'); every request is "
+        "verified against the oracle of its pinned version",
+    )
+    asy.add_argument(
+        "--mutate-rate",
+        type=float,
+        default=50.0,
+        help="mutator offered load, update batches/s",
+    )
+    asy.add_argument(
+        "--adaptive-deadline",
+        action="store_true",
+        help="let the batcher shrink its deadline under load and grow it when idle",
+    )
     return ap
 
 
@@ -124,6 +154,14 @@ def _validate(ap: argparse.ArgumentParser, args, spec: registry.EngineSpec) -> N
             f"--block-size requires an engine with a 'block_size' build kwarg; "
             f"{args.engine} declares {sorted(spec.build_kwargs) or '()'}"
         )
+    if args.mutate:
+        if args.mode != "async":
+            ap.error("--mutate requires --mode async")
+        if not spec.updatable:
+            ap.error(
+                f"--mutate requires an updatable engine; "
+                f"{args.engine} is not (have {registry.updatable_names()})"
+            )
 
 
 def _build_kwargs(args, spec: registry.EngineSpec) -> dict:
@@ -183,20 +221,52 @@ def _run_oneshot(args, spec, state, x, rng) -> bool:
     return bool(ok)
 
 
-def _run_async(args, spec, state, x, plan) -> bool:
-    qfn = lambda l, r: spec.query(state, l, r)
+def _run_async(args, spec, state, x, plan, online=None) -> bool:
     cfg = ServeConfig(
         deadline_s=args.deadline_ms * 1e-3,
         max_batch=args.max_batch,
         max_pending=args.max_pending,
         workers=args.workers,
         n=args.n,
+        adaptive_deadline=args.adaptive_deadline,
     )
-    srv = RMQServer(qfn, cfg, warmup_bounds=build_mod.warmup_bounds(plan))
+    wb = build_mod.warmup_bounds(plan)
+    if online is not None:
+        srv = RMQServer(online=online, config=cfg, warmup_bounds=wb)
+    else:
+        qfn = lambda l, r: spec.query(state, l, r)
+        srv = RMQServer(qfn, cfg, warmup_bounds=wb)
     srv.warmup()  # compile every padded launch shape (per plan regime)
+
+    upd_futs = []
+
+    def mutator():
+        # Open-loop Poisson mutator: point writes every batch, a range fill
+        # every 3rd, an append every 4th; overload rejections are dropped.
+        mrng = np.random.default_rng(77)
+        for i in range(args.mutate):
+            if args.mutate_rate > 0:
+                time.sleep(mrng.exponential(1.0 / args.mutate_rate))
+            cur_n = online.n
+            log = update_mod.DeltaLog()
+            for _ in range(3):
+                log.point(int(mrng.integers(0, cur_n)), float(mrng.random()))
+            if i % 3 == 1 and cur_n > 2:
+                a = int(mrng.integers(0, cur_n - 1))
+                log.fill(a, min(a + 63, cur_n - 1), float(mrng.random()))
+            if i % 4 == 3:
+                log.append(mrng.random(32, dtype=np.float32))
+            try:
+                upd_futs.append((log, srv.submit_update(log)))
+            except ServerOverloaded:
+                pass
 
     with srv:
         t0 = time.perf_counter()
+        mut = None
+        if online is not None and args.mutate:
+            mut = threading.Thread(target=mutator, name="mutator")
+            mut.start()
         per_client = run_poisson_clients(
             args.clients,
             args.requests,
@@ -205,6 +275,8 @@ def _run_async(args, spec, state, x, plan) -> bool:
             srv.submit,
             seed=10_000,
         )
+        if mut is not None:
+            mut.join()
         done = []
         dropped = 0
         for out in per_client:
@@ -216,11 +288,25 @@ def _run_async(args, spec, state, x, plan) -> bool:
         wall = time.perf_counter() - t0  # serving only: verification is below
     st = srv.stats()
 
+    # Replay the delta stream on the host: one oracle array per published
+    # version (submission order == publish order: single updater thread).
+    oracles = {0: np.asarray(x)}
+    patched = rebuilt = 0
+    if upd_futs:
+        xm = np.asarray(x).copy()
+        for log, fut in upd_futs:
+            res = fut.result(timeout=300)
+            xm = log.coalesce(xm.shape[0], xm.dtype).apply_numpy(xm)
+            oracles[res.version] = xm.copy()
+            patched += res.patched
+            rebuilt += not res.patched
+
     served = len(done)
     mismatches = 0
     for l, r, res in done:
-        gold = ref.rmq_ref(x, l, r)
-        if not (np.array_equal(res.idx, gold) and np.array_equal(res.val, x[gold])):
+        ox = oracles[res.version if res.version is not None else 0]
+        gold = ref.rmq_ref(ox, l, r)
+        if not (np.array_equal(res.idx, gold) and np.array_equal(res.val, ox[gold])):
             mismatches += 1
 
     mode = f" qshard={args.qshard}" if args.qshard else ""
@@ -231,11 +317,20 @@ def _run_async(args, spec, state, x, plan) -> bool:
         f"{wall*1e3:.0f} ms wall"
     )
     print(f"  {st.summary()}")
+    if upd_futs:
+        print(
+            f"  mutate: {len(upd_futs)} update batches applied "
+            f"({patched} patched, {rebuilt} rebuilt), n {args.n} -> {online.n}, "
+            f"{len(oracles)} oracle versions"
+        )
     print(
         f"  verify: {served - mismatches}/{served} requests bit-identical to the "
-        f"oracle; dropped {dropped}"
+        f"oracle of their pinned version; dropped {dropped}"
     )
-    return mismatches == 0 and served > 0
+    ok = mismatches == 0 and served > 0
+    if args.mutate:
+        ok = ok and len(upd_futs) > 0
+    return ok
 
 
 def main(argv=None) -> None:
@@ -250,6 +345,29 @@ def main(argv=None) -> None:
     mesh, axes = _serve_mesh(args, spec)
     ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
     with ctx:
+        if args.mutate:
+            # Online build: the OnlineEngine plans + builds v0 and owns the
+            # MVCC store; the server pins versions per launch.
+            t0 = time.perf_counter()
+            online = update_mod.make_online(
+                args.engine,
+                jnp.asarray(x),
+                mesh=mesh,
+                axis_names=axes,
+                **_build_kwargs(args, spec),
+            )
+            plan = online.plan
+            _block_on_state(online.store.current.state)
+            print(
+                f"[{args.engine}] online build {((time.perf_counter() - t0))*1e3:.1f} ms "
+                f"(n={args.n}, {plan.layout.num_shards} structure shard(s) x "
+                f"{plan.layout.shard_len} cols, version 0)"
+            )
+            ok = _run_async(args, spec, None, x, plan, online=online)
+            if not ok:
+                raise SystemExit(1)
+            return
+
         # The staged BuildPlan resolves everything static (shard layout,
         # threshold, mode) before touching the array; async warmup reads the
         # plan's regimes instead of guessing.

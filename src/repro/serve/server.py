@@ -11,6 +11,9 @@ and coalesces them into power-of-two padded engine launches:
               │   at low offered load
               └─► microbatch queue ─► engine-pool worker threads
                     └─► scatter-back, per-request futures + latency stamps
+    submit_update(deltas) ─► batcher barrier (flush what's pending first)
+        └─► update queue ─► single updater thread
+              └─► OnlineEngine.apply: patch + MVCC publish
 
 Admission control bounds *in-flight* requests (queued + batching +
 executing): past ``max_pending``, ``submit`` raises ``ServerOverloaded`` —
@@ -24,6 +27,25 @@ The engine is any ``(l, r) -> (idx, val)`` callable — typically a registry
 ``EngineSpec.query`` closed over its built state (``launch.serve`` wires
 exactly that). jax dispatch is thread-safe; ``workers > 1`` overlaps one
 batch's host-side partition/scatter work with another's device execution.
+
+**Mutation under live traffic**: constructed over a ``repro.update``
+``OnlineEngine`` instead of a bare callable, the server also accepts
+``submit_update(DeltaLog)``. Updates interleave with query launches: the
+batcher flushes pending queries first (so requests submitted before an
+update are answered against the pre-update version), each flushed
+microbatch **pins** the then-current MVCC version and is answered entirely
+against that snapshot — mutation never blocks serving, and a query never
+sees a half-applied update. A single updater thread applies updates in
+submission order (publish order = consistency order). ``stats()`` adds
+update-latency percentiles and version lag (how many versions were
+published while a query batch was in flight).
+
+**Adaptive deadline** (``ServeConfig.adaptive_deadline``): the batcher
+shrinks its coalescing deadline while launches fill up (sustained load —
+waiting longer only adds latency) and grows it back toward
+``deadline_max_s`` when flushes are deadline-triggered and near-empty
+(idle — waiting coalesces more per launch). The effective-deadline
+trajectory is recorded per flush in ``ServeStats``.
 """
 
 from __future__ import annotations
@@ -71,10 +93,29 @@ class ServeConfig:
     workers: int = 1  # engine-pool threads
     n: Optional[int] = None  # if set, submit validates r < n
     val_dtype: object = np.float32  # engine value dtype (empty-request results)
+    # Adaptive deadline: start at deadline_s, halve toward deadline_min_s on
+    # size-triggered flushes (sustained load), grow toward deadline_max_s on
+    # near-empty deadline flushes (idle). None bounds derive from deadline_s.
+    adaptive_deadline: bool = False
+    deadline_min_s: Optional[float] = None  # default: deadline_s / 8
+    deadline_max_s: Optional[float] = None  # default: deadline_s * 4
 
     def __post_init__(self):
         if self.deadline_s < 0 or self.max_batch < 1 or self.max_pending < 1 or self.workers < 1:
             raise ValueError(f"invalid ServeConfig: {self}")
+        if self.adaptive_deadline and self.deadline_s <= 0:
+            raise ValueError("adaptive_deadline requires deadline_s > 0")
+        lo, hi = self.deadline_bounds()
+        if not 0 <= lo <= self.deadline_s <= hi:
+            raise ValueError(
+                f"deadline bounds must satisfy 0 <= min <= deadline_s <= max: {self}"
+            )
+
+    def deadline_bounds(self) -> Tuple[float, float]:
+        """(min, max) the adaptive deadline moves within."""
+        lo = self.deadline_min_s if self.deadline_min_s is not None else self.deadline_s / 8
+        hi = self.deadline_max_s if self.deadline_max_s is not None else self.deadline_s * 4
+        return lo, hi
 
 
 class RequestTiming(NamedTuple):
@@ -87,6 +128,7 @@ class RequestResult(NamedTuple):
     idx: np.ndarray  # (B,) int32 leftmost argmin per query
     val: np.ndarray  # (B,) corresponding values
     timing: RequestTiming
+    version: Optional[int] = None  # MVCC version answered against (online only)
 
 
 class _Request:
@@ -98,6 +140,15 @@ class _Request:
         self.future: Future = Future()
         self.t_submit = t_submit
         self.t_flush = 0.0
+
+
+class _UpdateReq:
+    __slots__ = ("deltas", "future", "t_submit")
+
+    def __init__(self, deltas, t_submit):
+        self.deltas = deltas
+        self.future: Future = Future()
+        self.t_submit = t_submit
 
 
 class ServeStats(NamedTuple):
@@ -118,6 +169,15 @@ class ServeStats(NamedTuple):
     # measurement regime-aware routing (server-level split, per-engine
     # pools) will act on.
     regime_splits: Tuple[Tuple[int, int], ...] = ()
+    # Online-update accounting (servers built over an OnlineEngine).
+    applied_updates: int = 0
+    p50_update_s: float = 0.0  # submit_update -> published
+    p99_update_s: float = 0.0
+    # Per-query-launch version lag: versions published between a batch's
+    # pin and its completion (0 = answered against the newest version).
+    version_lags: Tuple[int, ...] = ()
+    # Effective batcher deadline after each flush (adaptive mode only).
+    deadline_trajectory: Tuple[float, ...] = ()
 
     @property
     def short_queries(self) -> int:
@@ -131,6 +191,14 @@ class ServeStats(NamedTuple):
     def mixed_batches(self) -> int:
         """Launches the dispatcher actually split (both regimes non-empty)."""
         return sum(1 for s, g in self.regime_splits if s and g)
+
+    @property
+    def version_lag_max(self) -> int:
+        return max(self.version_lags) if self.version_lags else 0
+
+    @property
+    def version_lag_mean(self) -> float:
+        return float(np.mean(self.version_lags)) if self.version_lags else 0.0
 
     def summary(self) -> str:
         out = (
@@ -148,6 +216,18 @@ class ServeStats(NamedTuple):
                 f"{self.long_queries} long RMQs, {self.mixed_batches}/"
                 f"{len(self.regime_splits)} launches mixed"
             )
+        if self.applied_updates:
+            out += (
+                f"; {self.applied_updates} updates (p50 "
+                f"{self.p50_update_s*1e3:.2f} ms, p99 {self.p99_update_s*1e3:.2f} ms), "
+                f"version lag max {self.version_lag_max} "
+                f"mean {self.version_lag_mean:.2f}"
+            )
+        if self.deadline_trajectory:
+            out += (
+                f"; adaptive deadline {self.deadline_trajectory[0]*1e3:.2f} -> "
+                f"{self.deadline_trajectory[-1]*1e3:.2f} ms"
+            )
         return out
 
 
@@ -156,17 +236,31 @@ class RMQServer:
 
     def __init__(
         self,
-        query_fn: Callable,
+        query_fn: Optional[Callable] = None,
         config: Optional[ServeConfig] = None,
         *,
         warmup_bounds: Optional[Callable] = None,
+        online=None,  # repro.update.OnlineEngine: versioned serving + updates
         **overrides,
     ):
+        if (query_fn is None) == (online is None):
+            raise ValueError("pass exactly one of query_fn or online")
+        self._online = online
+        if online is not None:
+            # Warmup / direct path: answer against the then-current version.
+            def query_fn(l, r):
+                ver = online.pin()
+                try:
+                    return online.query(ver.state, l, r)
+                finally:
+                    online.release(ver.vid)
+
         self._query_fn = query_fn
         self._warmup_bounds = warmup_bounds  # (size) -> [(l, r), ...] per regime
         self._cfg = config if config is not None else ServeConfig(**overrides)
         self._inq: "queue.SimpleQueue" = queue.SimpleQueue()
         self._mbq: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._updq: "queue.SimpleQueue" = queue.SimpleQueue()
         self._lock = threading.Lock()
         self._inflight = 0
         self._closed = False
@@ -180,6 +274,9 @@ class RMQServer:
         self._splits: List[Tuple[int, int]] = []  # per-launch (short, long)
         self._padded: Set[int] = set()
         self._rejected = 0
+        self._update_lat: List[float] = []  # submit_update -> published
+        self._lags: List[int] = []  # per-launch version lag
+        self._deadlines: List[float] = []  # effective deadline per flush
         self._t_first_submit: Optional[float] = None
         self._t_last_done: Optional[float] = None
 
@@ -197,6 +294,11 @@ class RMQServer:
         for i in range(self._cfg.workers):
             self._threads.append(
                 threading.Thread(target=self._worker_loop, daemon=True, name=f"rmq-worker-{i}")
+            )
+        if self._online is not None:
+            # ONE updater: publish order == submission order == version order.
+            self._threads.append(
+                threading.Thread(target=self._update_loop, daemon=True, name="rmq-updater")
             )
         for t in self._threads:
             t.start()
@@ -286,8 +388,12 @@ class RMQServer:
         lo, hi = int(l.min()), int(np.asarray(r, np.int64).max())
         if lo < 0 or np.any(r < l):
             raise ValueError("query bounds must satisfy 0 <= l <= r")
-        if hi > _INT32_MAX or (self._cfg.n is not None and hi >= self._cfg.n):
-            bound = self._cfg.n if self._cfg.n is not None else _INT32_MAX + 1
+        # Online servers validate against the CURRENT logical length: if a
+        # client saw the post-append length, that append already published,
+        # so any version pinned later can answer it.
+        n_bound = self._online.n if self._online is not None else self._cfg.n
+        if hi > _INT32_MAX or (n_bound is not None and hi >= n_bound):
+            bound = n_bound if n_bound is not None else _INT32_MAX + 1
             raise ValueError(f"query upper bound {hi} outside [0, {bound})")
 
         now = time.perf_counter()
@@ -306,25 +412,68 @@ class RMQServer:
             self._inq.put(req)  # under _lock: never lands after close()'s _STOP
         return req.future
 
+    def submit_update(self, deltas) -> Future:
+        """Enqueue one update batch (a ``repro.update`` DeltaLog/DeltaBatch).
+
+        The future resolves to the ``UpdateResult`` of the published version.
+        Updates are barriers in the batcher (queries submitted before an
+        update are flushed — and version-pinned — first) and are applied in
+        submission order by the single updater thread. Shares admission
+        control with queries: a stalled updater backpressures too.
+        """
+        if self._online is None:
+            raise ValueError("submit_update() on a server without an OnlineEngine")
+        if self._closed:
+            raise ServerClosed("submit_update() on a closed server")
+        if not self._started:
+            raise ServerClosed("submit_update() before start()")
+        if not len(deltas):
+            raise ValueError("submit_update() with an empty delta log")
+        req = _UpdateReq(deltas, time.perf_counter())
+        with self._lock:
+            if self._closed:
+                raise ServerClosed("submit_update() on a closed server")
+            if self._inflight >= self._cfg.max_pending:
+                self._rejected += 1
+                raise ServerOverloaded(
+                    f"{self._inflight} requests in flight (max_pending={self._cfg.max_pending})"
+                )
+            self._inflight += 1
+            self._inq.put(req)
+        return req.future
+
     # -- internals ----------------------------------------------------------
 
     def _batch_loop(self):
         cfg = self._cfg
         pending: List[_Request] = []
         pend_q = 0
+        eff = cfg.deadline_s  # effective deadline (moves only when adaptive)
+        dmin, dmax = cfg.deadline_bounds()
 
-        def flush():
-            nonlocal pending, pend_q
+        def flush(reason: str):
+            nonlocal pending, pend_q, eff
             mb = coalesce([q.l for q in pending], [q.r for q in pending])
             t = time.perf_counter()
             for q in pending:
                 q.t_flush = t
-            self._mbq.put((mb, pending))
+            # Snapshot isolation: the whole launch is answered against the
+            # version current at flush time, however long it sits in the
+            # microbatch queue and whatever publishes meanwhile.
+            ver = self._online.pin() if self._online is not None else None
+            self._mbq.put((mb, pending, ver))
+            if cfg.adaptive_deadline:
+                if reason == "full":  # sustained load: waiting only adds latency
+                    eff = max(dmin, eff / 2)
+                elif reason == "deadline" and mb.n_queries < cfg.max_batch / 4:
+                    eff = min(dmax, eff * 1.5)  # idle: wait longer, coalesce more
+                with self._lock:
+                    self._deadlines.append(eff)
             pending, pend_q = [], 0
 
         while True:
             if pending:
-                left = cfg.deadline_s - (time.perf_counter() - pending[0].t_submit)
+                left = eff - (time.perf_counter() - pending[0].t_submit)
                 if left <= 0:
                     item = None
                 else:
@@ -336,36 +485,49 @@ class RMQServer:
                 item = self._inq.get()
             if item is _STOP:
                 if pending:
-                    flush()
+                    flush("stop")
                 for _ in range(cfg.workers):
                     self._mbq.put(_STOP)
+                self._updq.put(_STOP)  # updater (if any) drains, then exits
                 return
+            if isinstance(item, _UpdateReq):
+                # Update barrier: requests already pending were submitted
+                # before the update, so they flush (and pin) first; the
+                # single updater then applies in submission order.
+                if pending:
+                    flush("barrier")
+                self._updq.put(item)
+                continue
             if item is not None:
                 # A request that would overflow the launch flushes what's
                 # pending first, so a batch never exceeds max_batch queries.
                 if pend_q and pend_q + item.l.size > cfg.max_batch:
-                    flush()
+                    flush("full")
                 pending.append(item)
                 pend_q += item.l.size
-            if pending and (
-                pend_q >= cfg.max_batch
-                or time.perf_counter() - pending[0].t_submit >= cfg.deadline_s
-            ):
-                flush()
+            if pending:
+                if pend_q >= cfg.max_batch:
+                    flush("full")
+                elif time.perf_counter() - pending[0].t_submit >= eff:
+                    flush("deadline")
 
     def _worker_loop(self):
         while True:
             item = self._mbq.get()
             if item is _STOP:
                 return
-            mb, reqs = item
+            mb, reqs, ver = item
+            lag = 0
             try:
                 # Observe how the range-adaptive dispatcher (if any) splits
                 # this launch: a thread-local sink, so concurrent workers
                 # never see each other's splits.
                 splits: List[Tuple[int, int]] = []
                 with _hybrid.record_splits(lambda s, g: splits.append((s, g))):
-                    idx, val = self._query_fn(mb.l, mb.r)
+                    if ver is not None:
+                        idx, val = self._online.query(ver.state, mb.l, mb.r)
+                    else:
+                        idx, val = self._query_fn(mb.l, mb.r)
                 parts = scatter_back(mb, idx, val)
                 # The coalesced launch is power-of-two padded with trivial
                 # (0, 0) queries; the dispatcher routes ALL pads to one side
@@ -377,11 +539,16 @@ class RMQServer:
                     (s - pad, g) if s >= pad else (s, g - pad) for s, g in splits
                 ]
             except BaseException as e:  # engine failure: fail the batch, keep serving
+                if ver is not None:
+                    self._online.release(ver.vid)
                 with self._lock:
                     self._inflight -= len(reqs)
                 for q in reqs:
                     q.future.set_exception(e)
                 continue
+            if ver is not None:
+                lag = self._online.current_vid - ver.vid
+                self._online.release(ver.vid)
             t_done = time.perf_counter()
             with self._lock:
                 self._inflight -= len(reqs)
@@ -389,6 +556,8 @@ class RMQServer:
                 self._batch_queries.append(mb.n_queries)
                 self._splits.extend(splits)
                 self._padded.add(mb.l.size)
+                if ver is not None:
+                    self._lags.append(lag)
                 for q in reqs:
                     self._queue_lat.append(q.t_flush - q.t_submit)
                     self._total_lat.append(t_done - q.t_submit)
@@ -396,9 +565,34 @@ class RMQServer:
             for q, (qi, qv) in zip(reqs, parts):
                 q.future.set_result(
                     RequestResult(
-                        qi, qv, RequestTiming(q.t_flush - q.t_submit, t_done - q.t_flush, t_done - q.t_submit)
+                        qi,
+                        qv,
+                        RequestTiming(q.t_flush - q.t_submit, t_done - q.t_flush, t_done - q.t_submit),
+                        ver.vid if ver is not None else None,
                     )
                 )
+
+    def _update_loop(self):
+        """The single updater: applies update batches in submission order."""
+        while True:
+            item = self._updq.get()
+            if item is _STOP:
+                return
+            try:
+                res = self._online.apply(item.deltas)
+            except BaseException as e:
+                # Malformed batches are rejected with the engine untouched;
+                # a mid-patch failure fail-stops the OnlineEngine (later
+                # applies raise) while queries keep serving published
+                # versions. Either way, fail this future and keep going.
+                with self._lock:
+                    self._inflight -= 1
+                item.future.set_exception(e)
+                continue
+            with self._lock:
+                self._inflight -= 1
+                self._update_lat.append(time.perf_counter() - item.t_submit)
+            item.future.set_result(res)
 
     def stats(self) -> ServeStats:
         with self._lock:
@@ -413,6 +607,7 @@ class RMQServer:
                 else 0.0
             )
             pct = lambda a, p: float(np.percentile(a, p)) if a.size else 0.0
+            ulat = np.asarray(self._update_lat)
             return ServeStats(
                 served_requests=nreq,
                 served_queries=nq,
@@ -427,4 +622,9 @@ class RMQServer:
                 p99_total_s=pct(tlat, 99),
                 throughput_qps=nq / span if span > 0 else 0.0,
                 regime_splits=tuple(self._splits),
+                applied_updates=int(ulat.size),
+                p50_update_s=pct(ulat, 50),
+                p99_update_s=pct(ulat, 99),
+                version_lags=tuple(self._lags),
+                deadline_trajectory=tuple(self._deadlines),
             )

@@ -1,0 +1,39 @@
+"""Versioned online-update subsystem: mutate RMQ structures under live traffic.
+
+The missing piece between the paper's frozen-array preprocessing and a
+long-lived service over evolving data (GPU-RMQ's framing): point writes,
+range writes, and appends coalesce into per-shard delta batches
+(``deltas``), incremental recompute kernels patch only the affected block
+minima and doubling-table windows (``patch`` on the host,
+``core.distributed.patch_sharded[_st]`` on the mesh), and copy-on-write
+MVCC snapshots (``versions``) let queries pin a consistent version while
+updates publish the next one — serving never blocks on mutation.
+
+``make_online`` wraps any registry engine marked ``updatable``;
+``serve.RMQServer`` accepts the result and interleaves ``submit_update``
+batches with query launches. See DESIGN.md §9 for the consistency model and
+the patch-window math.
+"""
+
+from .deltas import Delta, DeltaBatch, DeltaLog, shard_batches
+from .engines import OnlineEngine, UpdateResult, make_online, online_names
+from .patch import BlockMirror, STMirror, k_levels, level_windows, patch_doubling
+from .versions import Version, VersionStore
+
+__all__ = [
+    "BlockMirror",
+    "Delta",
+    "DeltaBatch",
+    "DeltaLog",
+    "OnlineEngine",
+    "STMirror",
+    "UpdateResult",
+    "Version",
+    "VersionStore",
+    "k_levels",
+    "level_windows",
+    "make_online",
+    "online_names",
+    "patch_doubling",
+    "shard_batches",
+]

@@ -1,0 +1,438 @@
+"""Online engines: incremental mutation + MVCC versions per registry engine.
+
+``make_online(name, x)`` wraps an ``updatable`` registry engine in an
+``OnlineEngine``: the initial state is built through the engine's staged
+BuildPlan, and every subsequent mutation lowers through the two online
+stages (``core.build.update_plan``: ``apply_deltas`` -> ``publish``) instead
+of a rebuild. Queries pin a version from the MVCC store and never block on
+mutation; ``apply`` is serialized (one updater at a time), so version ids
+are the consistency order.
+
+Per-engine patch strategy:
+
+* ``sparse_table`` / ``block128`` / ``block256`` / ``hybrid`` — host numpy
+  mirrors (``repro.update.patch``): windowed per-level doubling repair and
+  O(bs) block-min repair, then the patched leaves are published as fresh
+  device arrays (copy-on-write at the leaf level). Hybrid versions share
+  module-level jitted query closures so a publish never retraces.
+* ``distributed`` / ``sharded_hybrid`` (structure-sharded modes) — the SPMD
+  patch kernels (``distributed.patch_sharded`` / ``patch_sharded_st``):
+  updates scatter on the owning devices, doubling levels re-run masked to
+  the affected windows with the ``_flat_shift`` halo transport across shard
+  boundaries. Appends that fit the padded capacity are patches (pad columns
+  become real); growing past capacity falls back to a structural rebuild
+  through the engine's BuildPlan (reported via ``UpdateResult.patched``).
+* ``sharded_hybrid`` (``shard_batch``) — host mirrors patched once, then
+  re-replicated (each device holds the full structure by construction).
+
+Every patched state is bit-identical to a from-scratch rebuild of the
+mutated array — the acceptance criterion tests/test_update.py asserts
+leaf-for-leaf.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import block_rmq, distributed, registry, sparse_table
+from repro.core import build as build_mod
+from repro.core.block_rmq import BlockRMQ
+from repro.core.hybrid import HybridRMQ
+from repro.core.sparse_table import SparseTable
+
+from .deltas import DeltaBatch, DeltaLog, shard_batches
+from .patch import BlockMirror, STMirror
+from .versions import Version, VersionStore
+
+__all__ = ["OnlineEngine", "UpdateResult", "make_online", "online_names"]
+
+
+class UpdateResult(NamedTuple):
+    """What one applied update batch did."""
+
+    version: int  # the published version id
+    n: int  # logical array length after the batch
+    patched: bool  # True = incremental patch; False = structural rebuild
+    n_writes: int  # coalesced in-place writes
+    n_appended: int  # appended elements
+    seconds: float  # apply wall time (patch + publish material)
+    touched_shards: int = 1  # structure shards owning >= 1 changed position
+
+
+# Module-level jitted query closures for published hybrid versions: binding a
+# new same-shape structure is a jit-cache hit, so publishing never retraces.
+_block_query_jit = jax.jit(block_rmq.query)
+
+
+def _st_long(table: SparseTable, x, l, r):
+    idx = sparse_table.query(table, l, r)
+    return idx, x[idx]
+
+
+_st_long_jit = jax.jit(_st_long)
+
+
+def _block_state(m: BlockMirror) -> BlockRMQ:
+    bmin = jnp.asarray(m.bmin_val)
+    return BlockRMQ(
+        x_blocks=jnp.asarray(m.x_blocks),
+        bmin_val=bmin,
+        bmin_gidx=jnp.asarray(m.bmin_gidx),
+        st=SparseTable(idx=jnp.asarray(m.st_idx), x=bmin),
+    )
+
+
+class _Impl(NamedTuple):
+    """One engine's online hooks: the resolved plan, the initial state, and
+    ``patch(batch, prev_state) -> (next_state, was_incremental)``."""
+
+    plan: build_mod.BuildPlan
+    state0: object
+    patch: Callable
+
+
+# --- single-host implementations --------------------------------------------
+
+
+def _sparse_table_impl(x, mesh, axis_names, kw) -> _Impl:
+    plan = build_mod.plan_for("sparse_table", x.shape[0])
+    state0 = build_mod.execute(plan, x)
+    mirror = STMirror.from_state(state0[0])
+
+    def patch(batch: DeltaBatch, prev):
+        mirror.patch(batch)
+        xj = jnp.asarray(mirror.x)
+        return (SparseTable(idx=jnp.asarray(mirror.idx), x=xj), xj), True
+
+    return _Impl(plan, state0, patch)
+
+
+def _block_impl(block_size: int):
+    def factory(x, mesh, axis_names, kw) -> _Impl:
+        bs = kw.get("block_size", block_size)
+        plan = build_mod.plan_for("block", x.shape[0], block_size=bs)
+        state0 = build_mod.execute(plan, x)
+        mirror = BlockMirror.from_state(state0, x.shape[0])
+
+        def patch(batch: DeltaBatch, prev):
+            mirror.patch(batch)
+            return _block_state(mirror), True
+
+        return _Impl(plan, state0, patch)
+
+    return factory
+
+
+def _hybrid_impl(x, mesh, axis_names, kw) -> _Impl:
+    # The online hybrid pins the pure-jnp short path: the Pallas megakernel's
+    # packed buffers are not patched in place yet (kernel-side COW is a
+    # ROADMAP follow-up), and the CPU baseline never uses them anyway.
+    plan = build_mod.plan_for(
+        "hybrid",
+        x.shape[0],
+        block_size=kw.get("block_size", 128),
+        threshold=kw.get("threshold"),
+        use_kernels=False,
+    )
+    state0 = build_mod.execute(plan, x)
+    blocked_m = BlockMirror.from_state(state0.blocked, x.shape[0])
+    st_m = STMirror.from_state(state0.st)
+
+    def patch(batch: DeltaBatch, prev: HybridRMQ):
+        blocked_m.patch(batch)
+        st_m.patch(batch)
+        xj = jnp.asarray(st_m.x)
+        blocked = _block_state(blocked_m)
+        table = SparseTable(idx=jnp.asarray(st_m.idx), x=xj)
+        return (
+            HybridRMQ(
+                blocked=blocked,
+                st=table,
+                x=xj,
+                threshold=prev.threshold,
+                use_kernels=False,
+                short_fn=functools.partial(_block_query_jit, blocked),
+                long_fn=functools.partial(_st_long_jit, table, xj),
+            ),
+            True,
+        )
+
+    return _Impl(plan, state0, patch)
+
+
+# --- mesh implementations ----------------------------------------------------
+
+
+def _distributed_impl(x, mesh, axis_names, kw) -> _Impl:
+    plan = build_mod.plan_for(
+        "distributed",
+        x.shape[0],
+        mesh=mesh,
+        axis_names=axis_names,
+        block_size=kw.get("block_size", 128),
+    )
+    state0 = build_mod.execute(plan, x)
+    mesh, axes = plan.meta["mesh"], plan.meta["axis_names"]
+    bs = plan.meta["block_size"]
+    x_host = np.asarray(x)  # full-array mirror: the rebuild-fallback source
+
+    def patch(batch: DeltaBatch, prev):
+        nonlocal x_host
+        x_host = batch.apply_numpy(x_host)
+        s, qfn = prev
+        capacity = s.x_blocks.shape[0] * s.x_blocks.shape[1]
+        if batch.n_new > capacity:  # grew past the padded shard capacity
+            p2 = build_mod.plan_for(
+                "distributed", batch.n_new, mesh=mesh, axis_names=axes, block_size=bs
+            )
+            return build_mod.execute(p2, jnp.asarray(x_host)), False
+        pos = batch.touched()
+        val = np.concatenate([batch.val, batch.tail.astype(batch.val.dtype)])
+        return (distributed.patch_sharded(s, pos, val, mesh, axes), qfn), True
+
+    return _Impl(plan, state0, patch)
+
+
+def _sharded_hybrid_impl(x, mesh, axis_names, kw) -> _Impl:
+    plan = build_mod.plan_for(
+        "sharded_hybrid",
+        x.shape[0],
+        mesh=mesh,
+        axis_names=axis_names,
+        block_size=kw.get("block_size", 128),
+        threshold=kw.get("threshold"),
+        mode=kw.get("mode", "shard_structure"),
+    )
+    state0 = build_mod.execute(plan, x)
+    mesh = plan.meta["mesh"]
+    struct_axes = plan.meta["struct_axes"]
+    mode, bs = plan.meta["mode"], plan.meta["block_size"]
+    x_host = np.asarray(x)
+
+    if not struct_axes:  # shard_batch: replicated structures, host mirrors
+        blocked_m = BlockMirror.from_state(state0.blocked, x.shape[0])
+        st_m = STMirror.from_state(state0.st)
+        repl = NamedSharding(mesh, P())
+
+        def patch(batch: DeltaBatch, prev):
+            nonlocal x_host
+            x_host = batch.apply_numpy(x_host)
+            blocked_m.patch(batch)
+            st_m.patch(batch)
+            table = SparseTable(idx=jnp.asarray(st_m.idx), x=jnp.asarray(st_m.x))
+            return (
+                prev._replace(
+                    blocked=jax.device_put(_block_state(blocked_m), repl),
+                    st=jax.device_put(table, repl),
+                    n=batch.n_new,
+                ),
+                True,
+            )
+
+        return _Impl(plan, state0, patch)
+
+    def patch(batch: DeltaBatch, prev):
+        nonlocal x_host
+        x_host = batch.apply_numpy(x_host)
+        cap_blocked = prev.blocked.x_blocks.shape[0] * prev.blocked.x_blocks.shape[1]
+        cap_st = prev.st.idx.shape[1]
+        if batch.n_new > min(cap_blocked, cap_st):
+            # Structural rebuild (capacity exceeded); the routing threshold
+            # stays pinned so the rebuild is as deterministic as the patch.
+            p2 = build_mod.plan_for(
+                "sharded_hybrid",
+                batch.n_new,
+                mesh=mesh,
+                axis_names=plan.meta["axis_names"],
+                block_size=bs,
+                threshold=int(prev.threshold),
+                mode=mode,
+            )
+            return build_mod.execute(p2, jnp.asarray(x_host)), False
+        pos = batch.touched()
+        val = np.concatenate([batch.val, batch.tail.astype(batch.val.dtype)])
+        return (
+            prev._replace(
+                blocked=distributed.patch_sharded(
+                    prev.blocked, pos, val, mesh, struct_axes
+                ),
+                st=distributed.patch_sharded_st(prev.st, pos, val, mesh, struct_axes),
+                n=batch.n_new,
+            ),
+            True,
+        )
+
+    return _Impl(plan, state0, patch)
+
+
+_FACTORIES: Dict[str, Callable] = {
+    "sparse_table": _sparse_table_impl,
+    "block128": _block_impl(128),
+    "block256": _block_impl(256),
+    "hybrid": _hybrid_impl,
+    "distributed": _distributed_impl,
+    "sharded_hybrid": _sharded_hybrid_impl,
+}
+
+
+def online_names() -> Tuple[str, ...]:
+    """Engines with an online patch implementation (= registry ``updatable``)."""
+    return tuple(sorted(_FACTORIES))
+
+
+class OnlineEngine:
+    """One updatable engine under MVCC: pinned-version queries + delta apply.
+
+    ``apply`` lowers through the ``apply_deltas`` -> ``publish`` stages of
+    ``core.build.update_plan`` (observable like any BuildPlan); queries go
+    through ``pin()``/``release()`` so in-flight work keeps its snapshot
+    while updates publish. Thread-safe: ``apply`` is serialized, pins are
+    refcounted.
+    """
+
+    def __init__(self, name: str, x, *, mesh=None, axis_names=None, **build_kw):
+        spec = registry.get(name)
+        if not spec.updatable:
+            raise ValueError(
+                f"engine {name!r} is not updatable; have {registry.updatable_names()}"
+            )
+        x = jnp.asarray(x)
+        if x.ndim != 1:
+            raise ValueError(f"need a 1-D array, got shape {x.shape}")
+        self.name = name
+        self.spec = spec
+        impl = _FACTORIES[name](x, mesh, axis_names, build_kw)
+        self.plan = impl.plan
+        self._dtype = np.dtype(x.dtype)
+        self.store = VersionStore()
+        self._apply_lock = threading.Lock()
+        self._failed: Optional[BaseException] = None
+        self.store.publish(impl.state0, x.shape[0])
+        # The store owns version 0 now; keeping state0 on the impl would pin
+        # its arrays for the engine's whole lifetime.
+        self._impl = impl._replace(state0=None)
+        self._uplan = build_mod.update_plan(
+            name, self.plan.layout, self._stage_apply, self._stage_publish,
+            meta=self.plan.meta,
+        )
+
+    # -- versions -------------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.store.current.n
+
+    @property
+    def current_vid(self) -> int:
+        return self.store.current_vid
+
+    def pin(self) -> Version:
+        return self.store.pin()
+
+    def release(self, vid: int) -> None:
+        self.store.release(vid)
+
+    def query(self, state, l, r):
+        """The registry conformance query against one pinned version's state."""
+        return self.spec.query(state, l, r)
+
+    # -- mutation -------------------------------------------------------------
+
+    def _stage_apply(self, state: dict) -> dict:
+        batch: DeltaBatch = state["deltas"]
+        new_state, patched = self._impl.patch(batch, self.store.current.state)
+        for leaf in jax.tree_util.tree_leaves(new_state):
+            if isinstance(leaf, jax.Array):
+                leaf.block_until_ready()
+        state["patched"] = new_state
+        state["incremental"] = patched
+        return state
+
+    def _stage_publish(self, state: dict) -> dict:
+        batch: DeltaBatch = state["deltas"]
+        vid = self.store.publish(state.pop("patched"), batch.n_new)
+        layout = self.plan.layout
+        state["result"] = UpdateResult(
+            version=vid,
+            n=batch.n_new,
+            patched=state["incremental"],
+            n_writes=int(batch.idx.size),
+            n_appended=int(batch.tail.size),
+            seconds=0.0,
+            touched_shards=(
+                len(shard_batches(batch, layout.num_shards, layout.shard_len))
+                if layout.num_shards > 1
+                else 1
+            ),
+        )
+        return state
+
+    def _check_batch(self, batch: DeltaBatch) -> None:
+        """Reject malformed batches BEFORE any mirror mutation: patching is
+        in-place on shared host mirrors, so a mid-patch failure cannot be
+        rolled back (it fail-stops the engine instead — see ``apply``)."""
+        if batch.n_old != self.n:
+            raise ValueError(
+                f"update batch coalesced for n={batch.n_old}, engine is at "
+                f"n={self.n} (coalesce against the current length)"
+            )
+        if batch.idx.size:
+            if batch.idx.min() < 0 or batch.idx.max() >= batch.n_old:
+                raise ValueError(
+                    f"write positions [{batch.idx.min()}, {batch.idx.max()}] "
+                    f"outside [0, {batch.n_old})"
+                )
+            if batch.idx.size != batch.val.size:
+                raise ValueError("idx/val length mismatch")
+        if batch.n_new != batch.n_old + batch.tail.size:
+            raise ValueError(f"inconsistent batch lengths: {batch}")
+
+    def apply(self, deltas, *, observer: Optional[Callable] = None) -> UpdateResult:
+        """Apply one update batch; returns the published ``UpdateResult``.
+
+        ``deltas`` is a ``DeltaLog`` (coalesced here against the current
+        length) or an already-coalesced ``DeltaBatch`` (validated before any
+        mutation). Serialized: updates publish in apply order. Queries
+        against pinned versions proceed concurrently throughout.
+
+        Failure semantics are **fail-stop**: malformed batches are rejected
+        up front with the engine untouched, but an exception raised mid-patch
+        (device OOM, a bug) may leave the host mirrors inconsistent with the
+        published chain — the engine marks itself failed and every later
+        ``apply`` raises, rather than silently publishing a diverged
+        version. Queries keep serving the already-published versions.
+        """
+        with self._apply_lock:
+            if self._failed is not None:
+                raise RuntimeError(
+                    f"online engine {self.name!r} is fail-stopped after an "
+                    f"apply error; rebuild it (queries still serve published "
+                    f"versions)"
+                ) from self._failed
+            if isinstance(deltas, DeltaLog):
+                batch = deltas.coalesce(self.n, dtype=self._dtype)
+            else:
+                batch = deltas
+            self._check_batch(batch)
+            t0 = time.perf_counter()
+            try:
+                res = build_mod.execute_update(self._uplan, batch, observer=observer)
+            except BaseException as e:
+                self._failed = e
+                raise
+            return res._replace(seconds=time.perf_counter() - t0)
+
+
+def make_online(
+    name: str, x, *, mesh=None, axis_names=None, **build_kw
+) -> OnlineEngine:
+    """Build engine ``name`` as an ``OnlineEngine`` over ``x``."""
+    return OnlineEngine(name, x, mesh=mesh, axis_names=axis_names, **build_kw)

@@ -1,0 +1,203 @@
+"""Incremental recompute kernels: windowed structure patching on host mirrors.
+
+The single-host engines keep a numpy **mirror** of their built structures
+(materialized once from the device build, so the starting point is exactly
+the built state). A coalesced ``DeltaBatch`` patches the mirror in place —
+O(bs) block-min repair per touched block plus per-level doubling-table
+recompute over only the affected column windows — and the engine publishes
+the patched leaves as the next copy-on-write version.
+
+Why host-side numpy: the structures contain **no arithmetic**, only
+comparisons and leftmost argmins, so numpy patching is trivially
+bit-identical to the jnp build (same IEEE comparisons, same leftmost-tie
+argmin) — asserted leaf-for-leaf by tests/test_update.py. (NaN payloads are
+out of scope, as everywhere else in the repo.)
+
+Window math (the reason patching is cheap): a doubling-table entry
+``idx[k, c]`` covers ``[c, c + 2^k)`` (reads clamped at the array end stay
+inside it), so a write at position ``p`` can only change level-``k`` entries
+with ``c in [p - 2^k + 1, p]``. Patching recomputes exactly those merged
+windows per level, top-down from the patched level below — everything
+outside is untouched and therefore already equal to a from-scratch rebuild.
+A single point write costs ``sum_k min(2^k, n) ~ 2n`` entries against the
+rebuild's ``n log n``. Appends extend the windows with the appended suffix
+``[n_old, n_new)`` (which also re-resolves the old tail-clamped entries) and
+grow new levels in full when ``n`` crosses a power of two.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from .deltas import DeltaBatch
+
+__all__ = [
+    "BlockMirror",
+    "STMirror",
+    "k_levels",
+    "level_windows",
+    "np_maxval",
+    "patch_doubling",
+]
+
+
+def np_maxval(dtype):
+    """Numpy twin of ``block_rmq.maxval`` (pad identity for min)."""
+    dtype = np.dtype(dtype)
+    if np.issubdtype(dtype, np.floating):
+        return dtype.type(np.inf)
+    return np.iinfo(dtype).max
+
+
+def k_levels(m: int) -> int:
+    """Doubling-table depth for length ``m`` (matches ``sparse_table.build``)."""
+    return max(1, (m - 1).bit_length() + 1) if m > 1 else 1
+
+
+def level_windows(touched: np.ndarray, w: int, m: int) -> List[Tuple[int, int]]:
+    """Merged inclusive windows ``[p - w, p]`` over sorted positions, clipped.
+
+    The affected-column ranges for one table level: windows of adjacent
+    touched positions merge, so scattered points stay scattered (two distant
+    writes patch two small windows, not their hull).
+    """
+    out: List[Tuple[int, int]] = []
+    for p in touched:
+        p = int(p)
+        if p >= m:
+            p = m - 1  # clamped reads: the last column covers the overhang
+        a = max(p - w, 0)
+        if out and a <= out[-1][1] + 1:
+            out[-1] = (out[-1][0], max(out[-1][1], p))
+        else:
+            out.append((a, p))
+    return out
+
+
+def patch_doubling(
+    idx: np.ndarray, values: np.ndarray, touched: np.ndarray, m_old: int
+) -> np.ndarray:
+    """Windowed per-level repair of a doubling table's index rows.
+
+    ``idx`` is the (K_old, m_old) table over the OLD values; ``values`` is
+    the already-mutated (m_new,) value array; ``touched`` lists the sorted
+    positions whose value changed (appends contribute ``[m_old, m_new)``).
+    Returns the patched (K_new, m_new) table — the same array patched in
+    place when the length is unchanged, a grown copy otherwise. Bit-identical
+    to ``sparse_table.build(values)``'s ``idx``.
+    """
+    m_new = int(values.shape[0])
+    k_old = idx.shape[0]
+    k_new = k_levels(m_new)
+    if m_new != m_old or k_new != k_old:
+        grown = np.empty((k_new, m_new), np.int32)
+        grown[:k_old, :m_old] = idx
+        grown[0, m_old:] = np.arange(m_old, m_new, dtype=np.int32)
+        idx = grown
+    touched = np.asarray(touched, np.int64)
+    if touched.size == 0:
+        return idx
+    for k in range(1, k_new):
+        h = 1 << (k - 1)
+        if h >= m_new:  # window spans the whole array: rows repeat
+            idx[k] = idx[k - 1]
+            continue
+        # New levels (n crossed a power of two) have no old row: full window.
+        wins = (
+            [(0, m_new - 1)]
+            if k >= k_old
+            else level_windows(touched, (1 << k) - 1, m_new)
+        )
+        prev = idx[k - 1]
+        for a, b in wins:
+            c = np.arange(a, b + 1, dtype=np.int64)
+            j = np.minimum(c + h, m_new - 1)  # build's tail clamp (cur[-1])
+            left = prev[a : b + 1]
+            right = prev[j]
+            # Leftmost-tie merge: prefer the unshifted (left) operand.
+            idx[k, a : b + 1] = np.where(values[left] <= values[right], left, right)
+    return idx
+
+
+class STMirror:
+    """Host mirror of a raw-array ``SparseTable`` (idx rows + values)."""
+
+    def __init__(self, idx: np.ndarray, x: np.ndarray):
+        self.idx = np.array(idx, np.int32)  # writable copy
+        self.x = np.array(x)
+
+    @classmethod
+    def from_state(cls, table) -> "STMirror":
+        return cls(np.asarray(table.idx), np.asarray(table.x))
+
+    def patch(self, batch: DeltaBatch) -> None:
+        if batch.n_old != self.x.shape[0]:
+            raise ValueError(
+                f"batch for n={batch.n_old} on mirror of n={self.x.shape[0]}"
+            )
+        if batch.tail.size:
+            self.x = np.concatenate([self.x, batch.tail.astype(self.x.dtype)])
+        self.x[batch.idx] = batch.val.astype(self.x.dtype)
+        self.idx = patch_doubling(self.idx, self.x, batch.touched(), batch.n_old)
+
+
+class BlockMirror:
+    """Host mirror of a ``BlockRMQ``: padded blocks, block minima, level-2 table.
+
+    ``patch`` is the O(bs)-per-touched-block repair: scatter the new values,
+    re-argmin only the touched blocks, then window-patch the doubling table
+    over the block-min array (whose "positions" are block ids).
+    """
+
+    def __init__(self, x_blocks, bmin_val, bmin_gidx, st_idx, n: int):
+        self.x_blocks = np.array(x_blocks)
+        self.bmin_val = np.array(bmin_val)
+        self.bmin_gidx = np.array(bmin_gidx, np.int32)
+        self.st_idx = np.array(st_idx, np.int32)
+        self.n = int(n)  # logical (pre-padding) length
+
+    @property
+    def block_size(self) -> int:
+        return self.x_blocks.shape[1]
+
+    @classmethod
+    def from_state(cls, s, n: int) -> "BlockMirror":
+        return cls(
+            np.asarray(s.x_blocks),
+            np.asarray(s.bmin_val),
+            np.asarray(s.bmin_gidx),
+            np.asarray(s.st.idx),
+            n,
+        )
+
+    def patch(self, batch: DeltaBatch) -> None:
+        if batch.n_old != self.n:
+            raise ValueError(f"batch for n={batch.n_old} on mirror of n={self.n}")
+        bs = self.block_size
+        nb_old = self.x_blocks.shape[0]
+        nb_new = -(-max(batch.n_new, 1) // bs)
+        if nb_new > nb_old:  # appends grew past the padded capacity: new blocks
+            big = np_maxval(self.x_blocks.dtype)
+            dt = self.x_blocks.dtype
+            self.x_blocks = np.concatenate(
+                [self.x_blocks, np.full((nb_new - nb_old, bs), big, dt)]
+            )
+            self.bmin_val = np.concatenate(
+                [self.bmin_val, np.full(nb_new - nb_old, big, dt)]
+            )
+            self.bmin_gidx = np.concatenate(
+                [self.bmin_gidx, np.zeros(nb_new - nb_old, np.int32)]
+            )
+        pos = batch.touched()
+        vals = np.concatenate([batch.val, batch.tail]).astype(self.x_blocks.dtype)
+        self.x_blocks.reshape(-1)[pos] = vals
+        # O(bs) block-min repair, vectorized over the touched blocks only.
+        tb = np.unique(pos // bs)
+        rows = self.x_blocks[tb]
+        lidx = np.argmin(rows, axis=1).astype(np.int32)  # leftmost, as jnp
+        self.bmin_val[tb] = rows[np.arange(tb.size), lidx]
+        self.bmin_gidx[tb] = (tb * bs).astype(np.int32) + lidx
+        self.st_idx = patch_doubling(self.st_idx, self.bmin_val, tb, nb_old)
+        self.n = batch.n_new

@@ -1,0 +1,102 @@
+"""Copy-on-write version snapshots: MVCC for RMQ structures.
+
+The consistency model of the online-update subsystem (the repo's first):
+
+* Queries **pin** a version and are answered entirely against that version's
+  structures — a snapshot. Mutation never blocks serving.
+* An update **publishes** the next version atomically: after ``publish``
+  returns, every new pin sees the new version; already-pinned queries keep
+  their snapshot.
+* Old versions **retire when drained**: once a superseded version's pin
+  count reaches zero it is dropped from the store, releasing its structure
+  arrays. Versions are copy-on-write at the array-leaf level: a publish
+  installs fresh arrays for the leaves the patch rebuilt and never mutates
+  a published one. (Because the doubling tables are single (K, n) arrays,
+  a value change rebuilds most structure leaves today; chunking tables by
+  row group for finer COW is a ROADMAP follow-up.)
+
+Publish order is the consistency order: the server applies updates on a
+single updater thread, so version ids are also the serialization of the
+update stream. ``version_lag`` (current id minus a query's pinned id) is the
+staleness metric the serving stats report.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, NamedTuple
+
+__all__ = ["Version", "VersionStore"]
+
+
+class Version(NamedTuple):
+    """One immutable snapshot: engine state + the logical array length."""
+
+    vid: int  # publish sequence number (0 = the initial build)
+    state: Any  # engine state (registry conformance contract)
+    n: int  # logical array length at this version
+
+
+class VersionStore:
+    """Thread-safe pin/publish/retire over a chain of ``Version`` snapshots."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._versions: Dict[int, Version] = {}
+        self._pins: Dict[int, int] = {}
+        self._current = -1
+
+    @property
+    def current_vid(self) -> int:
+        with self._lock:
+            return self._current
+
+    @property
+    def current(self) -> Version:
+        with self._lock:
+            if self._current < 0:
+                raise RuntimeError("no version published yet")
+            return self._versions[self._current]
+
+    def live_vids(self) -> tuple:
+        """Version ids still held (current + any with outstanding pins)."""
+        with self._lock:
+            return tuple(sorted(self._versions))
+
+    def publish(self, state, n: int) -> int:
+        """Install ``state`` as the next version; returns its id.
+
+        Atomic: pins taken after return see the new version. Superseded
+        versions with no outstanding pins are retired immediately.
+        """
+        with self._lock:
+            vid = self._current + 1
+            self._versions[vid] = Version(vid, state, int(n))
+            self._current = vid
+            self._retire_locked()
+            return vid
+
+    def pin(self) -> Version:
+        """Take a snapshot reference to the current version (refcounted)."""
+        with self._lock:
+            if self._current < 0:
+                raise RuntimeError("pin() before the first publish")
+            self._pins[self._current] = self._pins.get(self._current, 0) + 1
+            return self._versions[self._current]
+
+    def release(self, vid: int) -> None:
+        """Drop one pin on ``vid``; retires it if superseded and drained."""
+        with self._lock:
+            left = self._pins.get(vid, 0) - 1
+            if left < 0:
+                raise ValueError(f"release() without a pin on version {vid}")
+            if left:
+                self._pins[vid] = left
+            else:
+                self._pins.pop(vid, None)
+            self._retire_locked()
+
+    def _retire_locked(self) -> None:
+        for vid in [v for v in self._versions if v != self._current]:
+            if not self._pins.get(vid):
+                del self._versions[vid]

@@ -70,7 +70,16 @@ def test_plan_metadata_threshold_resolution(tmp_path):
     assert build_mod.plan_for("hybrid", 1000, threshold=33).meta["threshold"] == 33
     assert build_mod.plan_for("hybrid", 1000).meta["threshold"] == 32  # sqrt
     p = tmp_path / "cal.json"
-    calib_cache.store(calib_cache.cache_key(1000, 128, n_devices=1), 55, path=p)
+    # Sharded plans read the v2 key (mode + mesh shape); a v1 entry for the
+    # same configuration is NOT consulted (the PR5 key bump).
+    calib_cache.store(calib_cache.cache_key(1000, 128, n_devices=1), 99, path=p)
+    calib_cache.store(
+        calib_cache.cache_key(
+            1000, 128, n_devices=1, mode="shard_structure", mesh_shape=(1,)
+        ),
+        55,
+        path=p,
+    )
     plan = build_mod.plan_for(
         "sharded_hybrid", 1000, threshold="cached", cache_path=p
     )

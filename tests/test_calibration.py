@@ -76,8 +76,8 @@ def test_calibrate_with_mesh_uses_sharded_constituents(monkeypatch):
 
 def test_sharded_build_calibrated_passes_mesh_to_calibrate(tmp_path, monkeypatch):
     """threshold="calibrated" on a sharded build must request a sharded-aware
-    measurement (mesh + mode forwarded) and persist under the existing
-    (n, bs, backend, ndev) key."""
+    measurement (mesh + mode forwarded) and persist under the v2
+    (n, bs, backend, ndev, mode, mesh) key."""
     import jax.numpy as jnp
 
     from repro.core import sharded_hybrid
@@ -96,8 +96,12 @@ def test_sharded_build_calibrated_passes_mesh_to_calibrate(tmp_path, monkeypatch
     assert s.threshold == 17
     assert seen["mesh"] is not None and seen["mode"] == "shard_structure"
     assert seen["axis_names"] == ("shard",)
-    key = calib_cache.cache_key(512, 128, n_devices=1)
+    key = calib_cache.cache_key(
+        512, 128, n_devices=1, mode="shard_structure", mesh_shape=(1,)
+    )
     assert calib_cache.load(key, path=p) == 17
+    # The v1 key does NOT own the sharded measurement (that was the bug).
+    assert calib_cache.load(calib_cache.cache_key(512, 128, n_devices=1), path=p) is None
     # Second build: cache hit, no re-measurement.
     monkeypatch.setattr(
         hybrid, "calibrate", lambda *a, **k: pytest.fail("re-measured on a hit")
@@ -151,6 +155,87 @@ def test_cache_corrupt_file_is_a_miss_and_recoverable(tmp_path):
     assert calib_cache.load(key, path=p) == 9
 
 
+# --- cache key v2: distribution mode + mesh shape ---------------------------
+
+
+def test_cache_key_v2_extends_v1_with_mode_and_mesh():
+    v1 = calib_cache.cache_key(1024, 128, backend="cpu", n_devices=8)
+    assert v1 == "n=1024/bs=128/backend=cpu/ndev=8"  # unchanged: old entries live
+    v2 = calib_cache.cache_key(
+        1024, 128, backend="cpu", n_devices=8, mode="shard_2d", mesh_shape=(2, 4)
+    )
+    assert v2 == "n=1024/bs=128/backend=cpu/ndev=8/mode=shard_2d/mesh=2x4"
+    other_mode = calib_cache.cache_key(
+        1024, 128, backend="cpu", n_devices=8, mode="shard_batch", mesh_shape=(2, 4)
+    )
+    other_mesh = calib_cache.cache_key(
+        1024, 128, backend="cpu", n_devices=8, mode="shard_2d", mesh_shape=(8,)
+    )
+    assert len({v1, v2, other_mode, other_mesh}) == 4  # all distinct slots
+
+
+def test_modes_no_longer_share_one_threshold_slot(tmp_path, monkeypatch):
+    """The ROADMAP bug: whichever mode calibrated first used to own the
+    threshold for every mode on that mesh size. With key v2 each mode (and
+    mesh factoring) resolves its own entry."""
+    import jax.numpy as jnp
+
+    from repro.core import sharded_hybrid
+
+    p = tmp_path / "cal.json"
+    calib_cache.store(
+        calib_cache.cache_key(640, 128, n_devices=1, mode="shard_structure",
+                              mesh_shape=(1,)),
+        99,
+        path=p,
+    )
+    monkeypatch.setattr(
+        hybrid, "calibrate", lambda *a, **k: pytest.fail('"cached" must never measure')
+    )
+    hit = sharded_hybrid.build(
+        jnp.zeros(640, jnp.float32), threshold="cached", cache_path=p
+    )
+    assert hit.threshold == 99
+    other = sharded_hybrid.build(
+        jnp.zeros(640, jnp.float32), threshold="cached", cache_path=p,
+        mode="shard_batch",
+    )
+    assert other.threshold == 25  # round(sqrt(640)) fallback, NOT 99
+
+
+def test_single_host_builds_keep_reading_v1_entries(tmp_path, monkeypatch):
+    """hybrid (no mesh, no mode) stays on the v1 key, so entries calibrated
+    before the key bump remain valid for single-host builds."""
+    import jax.numpy as jnp
+
+    p = tmp_path / "cal.json"
+    monkeypatch.setenv(calib_cache.ENV_VAR, str(p))
+    calib_cache.store(calib_cache.cache_key(900, 128), 61, path=p)  # v1 key
+    monkeypatch.setattr(
+        hybrid, "calibrate", lambda *a, **k: pytest.fail("must hit the v1 entry")
+    )
+    s = hybrid.build(jnp.zeros(900, jnp.float32), 128, threshold="cached",
+                     use_kernels=False)
+    assert s.threshold == 61
+
+
+def test_get_threshold_v2_forwards_mode_to_calibrate(tmp_path, monkeypatch):
+    p = tmp_path / "cal.json"
+    seen = {}
+    monkeypatch.setattr(
+        hybrid, "calibrate", lambda n, **kw: seen.update(kw) or 13
+    )
+    thr = calib_cache.get_threshold(
+        256, 128, backend="cpu", n_devices=4, mode="shard_2d", mesh_shape=(2, 2),
+        path=p,
+    )
+    assert thr == 13 and seen["mode"] == "shard_2d"
+    key = calib_cache.cache_key(
+        256, 128, backend="cpu", n_devices=4, mode="shard_2d", mesh_shape=(2, 2)
+    )
+    assert calib_cache.load(key, path=p) == 13
+
+
 def test_get_threshold_measures_once_then_hits(tmp_path, monkeypatch):
     p = tmp_path / "cal.json"
     calls = []
@@ -187,7 +272,9 @@ def test_sharded_hybrid_build_reads_cache_without_measuring(tmp_path, monkeypatc
     from repro.core import sharded_hybrid
 
     p = tmp_path / "cal.json"
-    key = calib_cache.cache_key(777, 128, n_devices=1)
+    key = calib_cache.cache_key(
+        777, 128, n_devices=1, mode="shard_structure", mesh_shape=(1,)
+    )
     calib_cache.store(key, 55, path=p)
     monkeypatch.setattr(
         hybrid,

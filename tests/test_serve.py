@@ -247,6 +247,60 @@ def test_scatter_back_mixed_dists_through_hybrid_engine():
     assert srv.stats().n_batches < 15  # actually coalesced across clients
 
 
+# --- adaptive deadline -------------------------------------------------------
+
+
+def test_adaptive_deadline_shrinks_under_load_then_grows_when_idle():
+    """Size-triggered flushes halve the effective deadline (down to the
+    floor); near-empty deadline flushes grow it back. The trajectory is
+    recorded per flush in ServeStats."""
+    rng = np.random.default_rng(11)
+    n = 64
+    x = rng.random(n).astype(np.float32)
+    cfg = ServeConfig(
+        deadline_s=0.008,
+        deadline_min_s=0.001,
+        deadline_max_s=0.032,
+        adaptive_deadline=True,
+        max_batch=8,
+        n=n,
+    )
+    with RMQServer(_oracle_engine(x), cfg) as srv:
+        for _ in range(4):  # 8-query requests: every flush is size-triggered
+            l, r = _bounded(rng, n, 8)
+            srv.submit(l, r).result(timeout=30)
+        # Idle: a single 1-query request flushes by deadline and grows it.
+        l, r = _bounded(rng, n, 1)
+        srv.submit(l, r).result(timeout=30)
+    traj = srv.stats().deadline_trajectory
+    assert traj[:4] == (
+        pytest.approx(0.004),
+        pytest.approx(0.002),
+        pytest.approx(0.001),
+        pytest.approx(0.001),  # clamped at deadline_min_s
+    )
+    assert traj[4] == pytest.approx(0.0015)  # grew by 1.5x from the floor
+
+
+def test_adaptive_deadline_defaults_and_validation():
+    cfg = ServeConfig(deadline_s=0.008, adaptive_deadline=True)
+    assert cfg.deadline_bounds() == (0.001, 0.032)
+    with pytest.raises(ValueError):
+        ServeConfig(deadline_s=0.0, adaptive_deadline=True)
+    with pytest.raises(ValueError):
+        ServeConfig(deadline_s=0.002, deadline_min_s=0.004, adaptive_deadline=True)
+    with pytest.raises(ValueError):
+        ServeConfig(deadline_s=0.002, deadline_max_s=0.001, adaptive_deadline=True)
+
+
+def test_fixed_deadline_records_no_trajectory():
+    x = np.ones(8, np.float32)
+    with RMQServer(_oracle_engine(x), ServeConfig(deadline_s=0.0, n=8)) as srv:
+        one = np.zeros(1, np.int32)
+        srv.submit(one, one).result(timeout=30)
+    assert srv.stats().deadline_trajectory == ()
+
+
 # --- server: edges, admission control, validation ---------------------------
 
 

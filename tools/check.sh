@@ -19,13 +19,19 @@
 #    micro-batching subsystem (repro.serve) — concurrent Poisson clients,
 #    mixed (medium) ranges, every request verified bit-identical against
 #    the numpy oracle (serve.py exits 1 on any mismatch).
-# 6. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+# 6. online-update gate: the mutation-conformance sweep (every updatable
+#    engine x mutation scenario, patched state bit-identical to a
+#    from-scratch rebuild), the >=5x single-point patch-vs-rebuild speedup
+#    acceptance bar at n = 2^16 on the CPU baseline, and an oracle-verified
+#    mutate-while-serving smoke on 8 fake devices (sharded_hybrid, every
+#    request checked against the oracle of its pinned MVCC version).
+# 7. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
 #    CPU — Pallas kernels validate through the test suite; the smoke catches
 #    perf-path regressions like import errors, shape breaks, or a suite that
 #    stopped emitting rows).
 #
-# Perf baseline: BENCH_PR4.json (benchmarks/run.py --json; includes the
-# build_mem suite); refresh per PR.
+# Perf baseline: BENCH_PR5.json (benchmarks/run.py --json; adds the
+# update_throughput suite); refresh per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -59,6 +65,52 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 600 \
     --n 65536 --block-size 128 --dist medium --clients 4 --requests 12 \
     --rate 300 --req-batch 16 --max-batch 128
 
+echo "== online-update gate (patch bit-identity, 5x speedup bar, mutate-while-serving) =="
+python -m pytest -q tests/test_update.py \
+    -k "mutation_conformance or sharded_patch or snapshot_isolation"
+python - <<'PY'
+# Acceptance bar: patching beats a full rebuild by >= 5x for single-point
+# updates at n >= 2^16 on the CPU baseline.
+import time
+import numpy as np
+import jax
+import jax.numpy as jnp
+from repro import update
+from repro.core import build as build_mod
+
+n = 1 << 16
+x = np.random.default_rng(0).random(n, dtype=np.float32)
+online = update.make_online("sparse_table", jnp.asarray(x))
+online.apply(update.DeltaLog().point(0, float(x[0])))  # warm the publish path
+ts = []
+for i in range(5):
+    log = update.DeltaLog().point(12345 + i, 0.5)
+    t0 = time.perf_counter()
+    online.apply(log)
+    ts.append(time.perf_counter() - t0)
+patch = float(np.median(ts))
+
+def rebuild():
+    jax.block_until_ready(
+        jax.tree_util.tree_leaves(build_mod.execute(online.plan, jnp.asarray(x)))
+    )
+
+rebuild()
+ts = []
+for _ in range(3):
+    t0 = time.perf_counter()
+    rebuild()
+    ts.append(time.perf_counter() - t0)
+reb = float(np.median(ts))
+print(f"single-point patch {patch*1e3:.2f} ms vs rebuild {reb*1e3:.2f} ms "
+      f"-> {reb/patch:.1f}x (bar: 5x)")
+assert reb / patch >= 5.0, f"patch speedup {reb/patch:.1f}x below the 5x bar"
+PY
+XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 600 \
+    python -m repro.launch.serve --mode async --engine sharded_hybrid \
+    --n 65536 --block-size 128 --dist medium --clients 4 --requests 12 \
+    --rate 300 --req-batch 16 --max-batch 128 --mutate 6 --adaptive-deadline
+
 echo "== perf smoke (fig12, smoke sizes) =="
 out=$(timeout 300 python -m benchmarks.run --only fig12 --smoke)
 echo "$out"
@@ -67,4 +119,4 @@ if [ "$rows" -lt 4 ]; then
     echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
     exit 1
 fi
-echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, fig12 smoke emitted $rows rows"
+echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, fig12 smoke emitted $rows rows"
