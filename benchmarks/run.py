@@ -10,6 +10,7 @@ a suite finishes in seconds (CI smoke; see tools/check.sh).
 
 import argparse
 import json
+import subprocess
 
 
 def main() -> None:
@@ -18,7 +19,8 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: fig12,fig13,fig10,fig14,table2,build_mem,roofline,"
-        "crossover,sharded_hybrid,serve_latency,update_throughput",
+        "crossover,sharded_hybrid,serve_latency,update_throughput,"
+        "fault_overhead",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -34,6 +36,7 @@ def main() -> None:
     from . import (
         batch_scaling,
         common,
+        fault_overhead,
         heatmap,
         hybrid_crossover,
         memory_usage,
@@ -59,6 +62,7 @@ def main() -> None:
         "sharded_hybrid": sharded_hybrid.run,
         "serve_latency": serve_latency.run,
         "update_throughput": update_throughput.run,
+        "fault_overhead": fault_overhead.run,
     }
     if only:
         unknown = only - set(suites)
@@ -75,6 +79,19 @@ def main() -> None:
         for name, us in common.RESULTS.items():
             suite, _, rest = name.partition("/")
             by_suite.setdefault(suite, {})[rest or suite] = us
+        # Provenance: which tree produced these numbers and which fault
+        # schedule the injected-fault measurements used.
+        try:
+            rev = subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True, text=True, timeout=10
+            ).stdout.strip() or None
+        except OSError:
+            rev = None
+        by_suite["_meta"] = {
+            "git_rev": rev,
+            "fault_seed": fault_overhead.FAULT_SEED,
+            "smoke": bool(args.smoke),
+        }
         with open(args.json, "w") as f:
             json.dump(by_suite, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}")

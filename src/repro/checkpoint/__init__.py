@@ -1,5 +1,19 @@
 """repro.checkpoint — atomic/async sharded checkpoints, elastic restore."""
 
-from .store import latest_step, restore, save, wait_pending
+from .store import (
+    latest_step,
+    load_snapshot,
+    restore,
+    save,
+    save_snapshot,
+    wait_pending,
+)
 
-__all__ = ["latest_step", "restore", "save", "wait_pending"]
+__all__ = [
+    "latest_step",
+    "load_snapshot",
+    "restore",
+    "save",
+    "save_snapshot",
+    "wait_pending",
+]

@@ -22,16 +22,32 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
-from typing import Any
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "wait_pending"]
+__all__ = [
+    "latest_step",
+    "load_snapshot",
+    "restore",
+    "save",
+    "save_snapshot",
+    "wait_pending",
+]
 
 _PENDING: list[threading.Thread] = []
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree):
@@ -39,8 +55,24 @@ def _flatten(tree):
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat], treedef
 
 
-def save(root: str, step: int, tree: Any, *, background: bool = False, meta: dict | None = None):
-    """Checkpoint ``tree`` at ``step``. Atomic; optionally async."""
+def save(
+    root: str,
+    step: int,
+    tree: Any,
+    *,
+    background: bool = False,
+    meta: dict | None = None,
+    fault: Optional[Callable[[str], None]] = None,
+):
+    """Checkpoint ``tree`` at ``step``. Atomic (write-temp-fsync-rename).
+
+    Every leaf and the manifest are fsynced before the rename, and the
+    parent directory after it: a power loss at any point leaves either the
+    previous checkpoint or the new one, never a torn mix (``latest_step``
+    ignores ``.tmp`` leftovers). ``fault`` is an optional ``check(site)``
+    callable fired at the ``checkpoint_write`` site after the leaf writes
+    but before the manifest/rename — the widest crash window.
+    """
     flat, _ = _flatten(tree)
     # Snapshot to host memory first (fast, device -> host DMA) so async
     # writers never race live training buffers.
@@ -60,11 +92,23 @@ def save(root: str, step: int, tree: Any, *, background: bool = False, meta: dic
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp, exist_ok=True)
         for i, (_, a) in enumerate(host):
-            np.save(os.path.join(tmp, f"leaf_{i}.npy"), a)
+            with open(os.path.join(tmp, f"leaf_{i}.npy"), "wb") as f:
+                np.save(f, a)
+                f.flush()
+                os.fsync(f.fileno())
+        if fault is not None:
+            # A crash here leaves a durable-but-manifestless temp dir, which
+            # restore ignores — exactly a death between leaf writes and
+            # publication. The torn temp stays on disk, like a real crash.
+            fault("checkpoint_write")
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
         shutil.rmtree(final, ignore_errors=True)
         os.replace(tmp, final)
+        _fsync_dir(root)
 
     if background:
         t = threading.Thread(target=write, daemon=True)
@@ -90,6 +134,51 @@ def latest_step(root: str) -> int | None:
             if os.path.exists(os.path.join(root, d, "manifest.json")):
                 steps.append(int(d.split("_")[1]))
     return max(steps) if steps else None
+
+
+# Keys of a plain-dict tree flatten to "['name']" via jax.tree_util.keystr.
+_DICT_KEY = re.compile(r"^\['(.*)'\]$")
+
+
+def save_snapshot(
+    root: str,
+    step: int,
+    arrays: dict,
+    meta: dict,
+    *,
+    fault: Optional[Callable[[str], None]] = None,
+) -> None:
+    """Atomically snapshot a named-array dict (engine structure leaves).
+
+    The durability half of ``fault.durable.DurableEngine.checkpoint``:
+    ``arrays`` is an engine's host-side structure leaves keyed by name,
+    ``meta`` the JSON-serializable identity needed to rebuild it (engine
+    name, version id, journal seq, build kwargs). ``step`` is conventionally
+    the journal seq the snapshot covers, so ``latest_step`` finds the most
+    recent durable point.
+    """
+    save(root, step, dict(arrays), meta=dict(meta), fault=fault)
+
+
+def load_snapshot(root: str, step: int | None = None):
+    """Load a ``save_snapshot`` checkpoint -> ``(arrays, meta, step)``.
+
+    ``step=None`` loads the latest complete checkpoint; raises
+    ``FileNotFoundError`` when the root holds none.
+    """
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint under {root!r}")
+    path = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = {}
+    for e in manifest["leaves"]:
+        m = _DICT_KEY.match(e["key"])
+        key = m.group(1) if m else e["key"]
+        arrays[key] = np.load(os.path.join(path, e["file"]))
+    return arrays, manifest["meta"], int(step)
 
 
 def restore(root: str, step: int, like: Any, *, shardings: Any = None) -> Any:

@@ -1,0 +1,39 @@
+"""Crash-safety subsystem (DESIGN.md §10): WAL, checkpoints, fault injection.
+
+Serving state must survive process death and misbehaving components without
+losing an acknowledged update or returning a wrong answer:
+
+* ``inject`` — deterministic seeded fault plans (``FaultPlan``) with four
+  sites: ``worker_query``, ``patch_apply``, ``checkpoint_write``,
+  ``journal_append``. Everything else in this package takes an optional
+  plan and fires its site hooks at the exact instants the machinery is
+  most exposed.
+* ``wal`` — the append-only, checksummed, seq-numbered delta journal.
+  Torn tails (a crash mid-append) are detected and dropped on scan;
+  replay dedups seqs and skips abort markers.
+* ``durable`` — ``DurableEngine``: journal-before-apply over any updatable
+  ``OnlineEngine``, atomic structure checkpoints, restore = checkpoint +
+  journal-suffix replay (bit-identical to the never-crashed state).
+* ``fallback`` — ``DegradedFallback``: the pure-jnp sparse-table engine
+  the serve circuit breaker routes to while the primary pool is failing —
+  correct answers, slower path.
+* ``chaos`` (not imported here — it pulls in ``repro.serve``; run it as
+  ``python -m repro.fault.chaos``) — the seeded mutate-while-serving soak
+  that kills workers, fails patches, and crash-restores mid-stream while
+  oracle-verifying every response against its pinned version.
+"""
+
+from .inject import SITES, FaultPlan, FaultSpec, InjectedFault
+from .wal import Journal
+from .durable import DurableEngine
+from .fallback import DegradedFallback
+
+__all__ = [
+    "SITES",
+    "DegradedFallback",
+    "DurableEngine",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "Journal",
+]

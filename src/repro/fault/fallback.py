@@ -1,0 +1,79 @@
+"""Degraded fallback engine: a pure-jnp sparse table per pinned version.
+
+When the serve circuit breaker opens (the primary engine pool keeps
+failing), queries route here instead of erroring: correct answers, slower
+path. The fallback builds a plain ``sparse_table`` — no Pallas kernels, no
+mesh, no shared mutable state with the primary — from the pinned version's
+logical host array (``update.Version.x_host``), so even mid-mutation traffic
+is answered against exactly its snapshot. An LRU of a few versions bounds
+the rebuild cost under version churn; launch shapes are the batcher's
+power-of-two buckets, so the jit cache stays bounded like the primary's.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_table
+from repro.core.sparse_table import SparseTable
+
+
+def _query(table: SparseTable, l, r):
+    idx = sparse_table.query(table, l, r)
+    return idx, table.x[idx]
+
+
+_query_jit = jax.jit(_query)
+
+__all__ = ["DegradedFallback"]
+
+
+class DegradedFallback:
+    """Correct-but-slower query engine for breaker-open serving.
+
+    ``query(ver, l, r)`` answers against version ``ver`` (an
+    ``update.Version`` with ``x_host``); ``ver=None`` uses the static array
+    the fallback was constructed over (non-online servers).
+    """
+
+    def __init__(self, x=None, *, cache_versions: int = 4):
+        self._static: Optional[SparseTable] = (
+            sparse_table.build(jnp.asarray(x)) if x is not None else None
+        )
+        self._cache: "OrderedDict[int, SparseTable]" = OrderedDict()
+        self._max = int(cache_versions)
+        self._lock = threading.Lock()
+
+    def _table_for(self, ver) -> SparseTable:
+        with self._lock:
+            table = self._cache.get(ver.vid)
+            if table is not None:
+                self._cache.move_to_end(ver.vid)
+                return table
+        if ver.x_host is None:
+            raise RuntimeError(
+                f"version {ver.vid} carries no host array; the degraded "
+                f"fallback needs Version.x_host to build from"
+            )
+        table = sparse_table.build(jnp.asarray(ver.x_host))
+        with self._lock:
+            self._cache[ver.vid] = table
+            while len(self._cache) > self._max:
+                self._cache.popitem(last=False)
+        return table
+
+    def query(self, ver, l, r):
+        if ver is None:
+            if self._static is None:
+                raise RuntimeError(
+                    "degraded fallback has no static array and no pinned version"
+                )
+            table = self._static
+        else:
+            table = self._table_for(ver)
+        return _query_jit(table, jnp.asarray(l), jnp.asarray(r))

@@ -133,6 +133,23 @@ def _parser() -> argparse.ArgumentParser:
         action="store_true",
         help="let the batcher shrink its deadline under load and grow it when idle",
     )
+    asy.add_argument(
+        "--restore",
+        default=None,
+        metavar="DIR",
+        help="durability root (with --mutate): restore the engine from DIR's "
+        "latest checkpoint + journal suffix if one exists, else create it "
+        "there; every update is WAL-journaled before it applies",
+    )
+    ap.add_argument(
+        "--chaos",
+        type=int,
+        default=None,
+        metavar="SEED",
+        help="run the seeded chaos soak instead of serving: crash workers, "
+        "fail patches and checkpoints mid-stream, then crash-restore and "
+        "verify nothing was lost (engines declaring 'updatable')",
+    )
     return ap
 
 
@@ -162,6 +179,13 @@ def _validate(ap: argparse.ArgumentParser, args, spec: registry.EngineSpec) -> N
                 f"--mutate requires an updatable engine; "
                 f"{args.engine} is not (have {registry.updatable_names()})"
             )
+    if args.chaos is not None and not spec.updatable:
+        ap.error(
+            f"--chaos requires an updatable engine; "
+            f"{args.engine} is not (have {registry.updatable_names()})"
+        )
+    if args.restore is not None and not args.mutate and args.chaos is None:
+        ap.error("--restore requires --mutate (durable online serving) or --chaos")
 
 
 def _build_kwargs(args, spec: registry.EngineSpec) -> dict:
@@ -237,6 +261,9 @@ def _run_async(args, spec, state, x, plan, online=None) -> bool:
         qfn = lambda l, r: spec.query(state, l, r)
         srv = RMQServer(qfn, cfg, warmup_bounds=wb)
     srv.warmup()  # compile every padded launch shape (per plan regime)
+    # The oracle of the version serving starts from — a restored engine
+    # continues its original timeline, so this need not be 0.
+    base_vid = online.current_vid if online is not None else 0
 
     upd_futs = []
 
@@ -290,7 +317,7 @@ def _run_async(args, spec, state, x, plan, online=None) -> bool:
 
     # Replay the delta stream on the host: one oracle array per published
     # version (submission order == publish order: single updater thread).
-    oracles = {0: np.asarray(x)}
+    oracles = {base_vid: np.asarray(x)}
     patched = rebuilt = 0
     if upd_futs:
         xm = np.asarray(x).copy()
@@ -304,7 +331,7 @@ def _run_async(args, spec, state, x, plan, online=None) -> bool:
     served = len(done)
     mismatches = 0
     for l, r, res in done:
-        ox = oracles[res.version if res.version is not None else 0]
+        ox = oracles[res.version if res.version is not None else base_vid]
         gold = ref.rmq_ref(ox, l, r)
         if not (np.array_equal(res.idx, gold) and np.array_equal(res.val, ox[gold])):
             mismatches += 1
@@ -343,25 +370,73 @@ def main(argv=None) -> None:
     x = rng.random(args.n, dtype=np.float32)
 
     mesh, axes = _serve_mesh(args, spec)
+    if args.chaos is not None:
+        # Outside the mesh context on purpose: run_soak hands the mesh to the
+        # engines explicitly (like `python -m repro.fault.chaos`). Activating
+        # it globally switches jax 0.4.x sharded launches onto per-device
+        # rendezvous collectives, and two pool workers launching concurrently
+        # deadlock each other's rendezvous on the CPU backend.
+        from repro.fault import chaos as chaos_mod
+
+        report = chaos_mod.run_soak(
+            engine=args.engine,
+            n=args.n,
+            seed=args.chaos,
+            root=args.restore,
+            workers=args.workers,
+            mesh=mesh,
+            axis_names=axes,
+            log=print,
+        )
+        print(report.summary())
+        if not report.ok:
+            raise SystemExit(1)
+        return
     ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
     with ctx:
         if args.mutate:
             # Online build: the OnlineEngine plans + builds v0 and owns the
-            # MVCC store; the server pins versions per launch.
+            # MVCC store; the server pins versions per launch. With
+            # --restore, the engine is durable: WAL-journaled updates rooted
+            # at DIR, resumed from its checkpoint + journal when one exists.
             t0 = time.perf_counter()
-            online = update_mod.make_online(
-                args.engine,
-                jnp.asarray(x),
-                mesh=mesh,
-                axis_names=axes,
-                **_build_kwargs(args, spec),
-            )
+            if args.restore is not None:
+                from repro import checkpoint as ckpt_mod
+                from repro.fault import DurableEngine
+
+                ckpt_dir = f"{args.restore}/ckpt"
+                if ckpt_mod.latest_step(ckpt_dir) is not None:
+                    online = DurableEngine.restore(args.restore, mesh=mesh, axis_names=axes)
+                    x = np.asarray(online.store.current.x_host)
+                    args.n = online.n
+                    print(
+                        f"[{args.engine}] restored from {args.restore}: "
+                        f"version {online.current_vid}, seq {online.seq}, "
+                        f"n={online.n} ({online.replayed} journal records replayed)"
+                    )
+                else:
+                    online = DurableEngine.create(
+                        args.engine,
+                        jnp.asarray(x),
+                        args.restore,
+                        mesh=mesh,
+                        axis_names=axes,
+                        **_build_kwargs(args, spec),
+                    )
+            else:
+                online = update_mod.make_online(
+                    args.engine,
+                    jnp.asarray(x),
+                    mesh=mesh,
+                    axis_names=axes,
+                    **_build_kwargs(args, spec),
+                )
             plan = online.plan
             _block_on_state(online.store.current.state)
             print(
                 f"[{args.engine}] online build {((time.perf_counter() - t0))*1e3:.1f} ms "
                 f"(n={args.n}, {plan.layout.num_shards} structure shard(s) x "
-                f"{plan.layout.shard_len} cols, version 0)"
+                f"{plan.layout.shard_len} cols, version {online.current_vid})"
             )
             ok = _run_async(args, spec, None, x, plan, online=online)
             if not ok:

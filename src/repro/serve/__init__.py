@@ -18,6 +18,8 @@ the boundary) and open-loop Poisson arrival processes for clients.
 
 from .batcher import MicroBatch, bucket, coalesce, scatter_back
 from .server import (
+    DeadlineExceeded,
+    EngineFailure,
     RMQServer,
     RequestResult,
     RequestTiming,
@@ -29,6 +31,8 @@ from .server import (
 from .workload import make_queries, poisson_interarrivals, run_poisson_clients
 
 __all__ = [
+    "DeadlineExceeded",
+    "EngineFailure",
     "MicroBatch",
     "RMQServer",
     "RequestResult",

@@ -60,10 +60,13 @@ from typing import Callable, List, NamedTuple, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core import hybrid as _hybrid
+from repro.fault.inject import InjectedFault
 
 from .batcher import MicroBatch, bucket, coalesce, scatter_back
 
 __all__ = [
+    "DeadlineExceeded",
+    "EngineFailure",
     "RMQServer",
     "RequestResult",
     "RequestTiming",
@@ -78,11 +81,34 @@ _STOP = object()
 
 
 class ServerClosed(RuntimeError):
-    """submit() after close()."""
+    """submit() after close() — or a request still unresolved when the
+    server shut down (close() fails every leftover future with this rather
+    than leaving a client hanging forever)."""
 
 
 class ServerOverloaded(RuntimeError):
     """Admission control rejected the request: too many in flight."""
+
+
+class EngineFailure(RuntimeError):
+    """A query launch failed after exhausting its retry budget.
+
+    Typed and (by default) retryable: the underlying failure is a worker
+    crash, an injected fault, or an engine exception — resubmitting the
+    request may well succeed (the supervisor restarts crashed workers, the
+    breaker may have routed to the fallback meanwhile). ``cause`` holds the
+    original exception.
+    """
+
+    def __init__(self, msg: str, *, cause: Optional[BaseException] = None, retryable: bool = True):
+        super().__init__(msg)
+        self.cause = cause
+        self.retryable = retryable
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's ``request_timeout_s`` deadline passed before an engine
+    answered it (in queue, or across too many retries)."""
 
 
 @dataclass(frozen=True)
@@ -99,6 +125,13 @@ class ServeConfig:
     adaptive_deadline: bool = False
     deadline_min_s: Optional[float] = None  # default: deadline_s / 8
     deadline_max_s: Optional[float] = None  # default: deadline_s * 4
+    # Crash-safe serving (supervised workers, retry, circuit breaker).
+    request_timeout_s: Optional[float] = None  # per-request deadline (None = no limit)
+    max_retries: int = 0  # automatic resubmits after a failed launch
+    breaker_threshold: int = 0  # consecutive failures to trip (0 = disabled)
+    breaker_cooldown_s: float = 0.05  # open time before a half-open health probe
+    worker_backoff_s: float = 0.01  # first restart delay for a crashed worker
+    worker_backoff_max_s: float = 1.0  # exponential backoff cap
 
     def __post_init__(self):
         if self.deadline_s < 0 or self.max_batch < 1 or self.max_pending < 1 or self.workers < 1:
@@ -110,6 +143,16 @@ class ServeConfig:
             raise ValueError(
                 f"deadline bounds must satisfy 0 <= min <= deadline_s <= max: {self}"
             )
+        if (
+            self.max_retries < 0
+            or self.breaker_threshold < 0
+            or self.breaker_cooldown_s < 0
+            or self.worker_backoff_s <= 0
+            or self.worker_backoff_max_s < self.worker_backoff_s
+        ):
+            raise ValueError(f"invalid ServeConfig: {self}")
+        if self.request_timeout_s is not None and self.request_timeout_s <= 0:
+            raise ValueError(f"request_timeout_s must be > 0 or None: {self}")
 
     def deadline_bounds(self) -> Tuple[float, float]:
         """(min, max) the adaptive deadline moves within."""
@@ -132,7 +175,7 @@ class RequestResult(NamedTuple):
 
 
 class _Request:
-    __slots__ = ("l", "r", "future", "t_submit", "t_flush")
+    __slots__ = ("l", "r", "future", "t_submit", "t_flush", "retries")
 
     def __init__(self, l, r, t_submit):
         self.l = l
@@ -140,6 +183,7 @@ class _Request:
         self.future: Future = Future()
         self.t_submit = t_submit
         self.t_flush = 0.0
+        self.retries = 0  # failed launches this request has survived so far
 
 
 class _UpdateReq:
@@ -178,6 +222,13 @@ class ServeStats(NamedTuple):
     version_lags: Tuple[int, ...] = ()
     # Effective batcher deadline after each flush (adaptive mode only).
     deadline_trajectory: Tuple[float, ...] = ()
+    # Crash-safety accounting (supervision / retry / breaker / fallback).
+    degraded_launches: int = 0  # launches served by the degraded fallback
+    worker_restarts: int = 0  # crashed workers the supervisor restarted
+    retried_requests: int = 0  # failed-launch requests resubmitted to the batcher
+    expired_requests: int = 0  # requests failed on their request_timeout_s deadline
+    failed_requests: int = 0  # requests failed with EngineFailure (retries exhausted)
+    breaker_trips: int = 0  # closed -> open transitions of the circuit breaker
 
     @property
     def short_queries(self) -> int:
@@ -228,6 +279,20 @@ class ServeStats(NamedTuple):
                 f"; adaptive deadline {self.deadline_trajectory[0]*1e3:.2f} -> "
                 f"{self.deadline_trajectory[-1]*1e3:.2f} ms"
             )
+        if (
+            self.worker_restarts
+            or self.retried_requests
+            or self.degraded_launches
+            or self.expired_requests
+            or self.failed_requests
+            or self.breaker_trips
+        ):
+            out += (
+                f"; faults: {self.worker_restarts} worker restarts, "
+                f"{self.retried_requests} retried / {self.expired_requests} expired / "
+                f"{self.failed_requests} failed reqs, breaker tripped "
+                f"{self.breaker_trips}x ({self.degraded_launches} degraded launches)"
+            )
         return out
 
 
@@ -240,12 +305,38 @@ class RMQServer:
         config: Optional[ServeConfig] = None,
         *,
         warmup_bounds: Optional[Callable] = None,
-        online=None,  # repro.update.OnlineEngine: versioned serving + updates
+        online=None,  # repro.update.OnlineEngine or fault.DurableEngine
+        restore: Optional[str] = None,  # DurableEngine root to restore from
+        mesh=None,  # mesh/axis_names forwarded to a restore (sharded engines)
+        axis_names=None,
+        fault_plan=None,  # fault.FaultPlan (or check callable): worker_query site
+        fallback: Optional[Callable] = None,  # degraded (l, r) -> (idx, val)
         **overrides,
     ):
-        if (query_fn is None) == (online is None):
-            raise ValueError("pass exactly one of query_fn or online")
+        if sum(x is not None for x in (query_fn, online, restore)) != 1:
+            raise ValueError("pass exactly one of query_fn, online, or restore")
+        if restore is not None:
+            # Crash recovery at construction: latest checkpoint + journal
+            # suffix replay -> bit-identical to the never-crashed engine.
+            from repro.fault.durable import DurableEngine
+
+            online = DurableEngine.restore(
+                restore, mesh=mesh, axis_names=axis_names, fault=fault_plan
+            )
         self._online = online
+        # On the CPU host platform, two overlapping executions of a
+        # mesh-sharded query deadlock: each run's cross-device AllReduce
+        # parks 8 rendezvous participants on the shared intra-op pool and
+        # neither set can complete. Serialize primary launches there —
+        # execution fully drains (np.asarray) before the gate releases.
+        # Real accelerators queue per-device and skip the gate.
+        self._launch_gate: Optional[threading.Lock] = None
+        spec = getattr(online, "spec", None)
+        if spec is not None and getattr(spec, "needs_mesh", False):
+            import jax
+
+            if jax.default_backend() == "cpu":
+                self._launch_gate = threading.Lock()
         if online is not None:
             # Warmup / direct path: answer against the then-current version.
             def query_fn(l, r):
@@ -266,6 +357,29 @@ class RMQServer:
         self._closed = False
         self._started = False
         self._threads: List[threading.Thread] = []
+        # Supervision + breaker state. _live tracks every admitted request /
+        # update whose future is unresolved, so close() can fail leftovers
+        # instead of leaving clients hanging.
+        self._live: Set[object] = set()
+        self._deaths: "queue.SimpleQueue" = queue.SimpleQueue()  # crashed worker slots
+        self._fault = fault_plan.check if hasattr(fault_plan, "check") else fault_plan
+        self._fallback_fn = fallback
+        self._degraded = None  # lazy fault.DegradedFallback (online servers)
+        if self._cfg.breaker_threshold > 0 and online is None and fallback is None:
+            raise ValueError(
+                "breaker_threshold > 0 needs a degraded path: an online engine "
+                "(version x_host fallback) or an explicit fallback callable"
+            )
+        self._brk_fails = 0  # consecutive primary-launch failures
+        self._brk_open = False
+        self._brk_opened_t = 0.0
+        self._brk_probing = False
+        self._brk_trips = 0
+        self._worker_restarts = 0
+        self._retried = 0
+        self._expired = 0
+        self._failed_reqs = 0
+        self._degraded_count = 0
         # Stats accumulators (under _lock).
         self._queue_lat: List[float] = []
         self._total_lat: List[float] = []
@@ -293,13 +407,18 @@ class RMQServer:
         self._threads = [threading.Thread(target=self._batch_loop, daemon=True, name="rmq-batcher")]
         for i in range(self._cfg.workers):
             self._threads.append(
-                threading.Thread(target=self._worker_loop, daemon=True, name=f"rmq-worker-{i}")
+                threading.Thread(
+                    target=self._worker_main, args=(i,), daemon=True, name=f"rmq-worker-{i}"
+                )
             )
         if self._online is not None:
             # ONE updater: publish order == submission order == version order.
             self._threads.append(
                 threading.Thread(target=self._update_loop, daemon=True, name="rmq-updater")
             )
+        self._threads.append(
+            threading.Thread(target=self._supervisor_loop, daemon=True, name="rmq-supervisor")
+        )
         for t in self._threads:
             t.start()
         return self
@@ -311,15 +430,31 @@ class RMQServer:
         self.close()
 
     def close(self, timeout: Optional[float] = None):
-        """Stop accepting, drain everything already admitted, join threads."""
+        """Stop accepting, drain everything already admitted, join threads.
+
+        With a ``timeout``, each join waits at most that long; any request or
+        update future still unresolved afterwards (a wedged engine, a worker
+        that died with no supervisor restart in time) is failed with
+        ``ServerClosed`` — a client blocked on ``future.result()`` always
+        unblocks.
+        """
         with self._lock:
             if self._closed:
                 return
             self._closed = True
             if self._started:
                 self._inq.put(_STOP)  # under _lock: serialized against submit
+        self._deaths.put(_STOP)  # supervisor exits; no restarts after close
         for t in self._threads:
             t.join(timeout)
+        with self._lock:
+            leftovers = [q for q in self._live if not q.future.done()]
+            self._live.clear()
+            self._inflight = 0
+        for q in leftovers:
+            self._fail_future(
+                q, ServerClosed("server closed before the request completed")
+            )
 
     def warmup(self, sizes: Optional[Sequence[int]] = None):
         """Compile every padded launch shape before traffic hits.
@@ -407,6 +542,7 @@ class RMQServer:
                     f"{self._inflight} requests in flight (max_pending={self._cfg.max_pending})"
                 )
             self._inflight += 1
+            self._live.add(req)
             if self._t_first_submit is None:
                 self._t_first_submit = now
             self._inq.put(req)  # under _lock: never lands after close()'s _STOP
@@ -439,6 +575,7 @@ class RMQServer:
                     f"{self._inflight} requests in flight (max_pending={self._cfg.max_pending})"
                 )
             self._inflight += 1
+            self._live.add(req)
             self._inq.put(req)
         return req.future
 
@@ -453,6 +590,29 @@ class RMQServer:
 
         def flush(reason: str):
             nonlocal pending, pend_q, eff
+            if cfg.request_timeout_s is not None:
+                # Requests past their deadline fail here instead of occupying
+                # a launch: an expired client has stopped waiting already.
+                now = time.perf_counter()
+                expired = [q for q in pending if now - q.t_submit > cfg.request_timeout_s]
+                if expired:
+                    pending = [q for q in pending if now - q.t_submit <= cfg.request_timeout_s]
+                    pend_q = sum(q.l.size for q in pending)
+                    with self._lock:
+                        self._inflight -= len(expired)
+                        self._expired += len(expired)
+                        for q in expired:
+                            self._live.discard(q)
+                    for q in expired:
+                        self._fail_future(
+                            q,
+                            DeadlineExceeded(
+                                f"request expired after {now - q.t_submit:.3f}s "
+                                f"(request_timeout_s={cfg.request_timeout_s})"
+                            ),
+                        )
+                    if not pending:
+                        return
             mb = coalesce([q.l for q in pending], [q.r for q in pending])
             t = time.perf_counter()
             for q in pending:
@@ -511,58 +671,235 @@ class RMQServer:
                 elif time.perf_counter() - pending[0].t_submit >= eff:
                     flush("deadline")
 
-    def _worker_loop(self):
+    def _worker_main(self, slot: int):
+        """Supervised worker entry: a crash reports the slot and dies.
+
+        Everything short of an injected kill is absorbed inside
+        ``_worker_loop`` (a failed launch fails or requeues only its own
+        batch); an escaping exception means the thread is gone, so the
+        supervisor is told which slot to restart.
+        """
+        try:
+            self._worker_loop(slot)
+        except BaseException:
+            self._deaths.put(slot)
+
+    def _worker_loop(self, slot: int = 0):
         while True:
             item = self._mbq.get()
             if item is _STOP:
                 return
             mb, reqs, ver = item
-            lag = 0
             try:
-                # Observe how the range-adaptive dispatcher (if any) splits
-                # this launch: a thread-local sink, so concurrent workers
-                # never see each other's splits.
-                splits: List[Tuple[int, int]] = []
-                with _hybrid.record_splits(lambda s, g: splits.append((s, g))):
-                    if ver is not None:
-                        idx, val = self._online.query(ver.state, mb.l, mb.r)
-                    else:
-                        idx, val = self._query_fn(mb.l, mb.r)
-                parts = scatter_back(mb, idx, val)
-                # The coalesced launch is power-of-two padded with trivial
-                # (0, 0) queries; the dispatcher routes ALL pads to one side
-                # (short when threshold >= 1, else long — real queries never
-                # leave that side short of the pad count), so subtracting
-                # from whichever side holds them leaves real-traffic splits.
-                pad = mb.l.size - mb.n_queries
-                splits = [
-                    (s - pad, g) if s >= pad else (s, g - pad) for s, g in splits
-                ]
-            except BaseException as e:  # engine failure: fail the batch, keep serving
-                if ver is not None:
-                    self._online.release(ver.vid)
-                with self._lock:
-                    self._inflight -= len(reqs)
-                for q in reqs:
-                    q.future.set_exception(e)
+                parts, splits, degraded = self._launch(mb, ver)
+            except BaseException as e:
+                # Failed launch: its requests retry or fail — never the whole
+                # server. An injected crash additionally kills this worker
+                # thread (after the batch is requeued) to exercise the
+                # supervisor's restart path.
+                self._requeue_or_fail(mb, reqs, ver, e)
+                if isinstance(e, InjectedFault) and e.kind == "crash":
+                    raise
                 continue
-            if ver is not None:
-                lag = self._online.current_vid - ver.vid
-                self._online.release(ver.vid)
-            t_done = time.perf_counter()
-            with self._lock:
-                self._inflight -= len(reqs)
-                self._batch_requests.append(len(reqs))
-                self._batch_queries.append(mb.n_queries)
-                self._splits.extend(splits)
-                self._padded.add(mb.l.size)
+            self._finish(mb, reqs, ver, parts, splits, degraded)
+
+    def _launch(self, mb: MicroBatch, ver):
+        """One engine launch -> (per-request parts, regime splits, degraded?).
+
+        Routes to the degraded fallback while the breaker is open; otherwise
+        runs the primary engine, feeding the breaker's consecutive-failure
+        count on each outcome.
+        """
+        if self._use_degraded():
+            return self._launch_degraded(mb, ver)
+        try:
+            # Observe how the range-adaptive dispatcher (if any) splits
+            # this launch: a thread-local sink, so concurrent workers
+            # never see each other's splits.
+            splits: List[Tuple[int, int]] = []
+            with _hybrid.record_splits(lambda s, g: splits.append((s, g))):
+                if self._fault is not None:
+                    self._fault("worker_query")
                 if ver is not None:
-                    self._lags.append(lag)
-                for q in reqs:
-                    self._queue_lat.append(q.t_flush - q.t_submit)
-                    self._total_lat.append(t_done - q.t_submit)
-                self._t_last_done = t_done
-            for q, (qi, qv) in zip(reqs, parts):
+                    if self._launch_gate is not None:
+                        with self._launch_gate:
+                            idx, val = self._online.query(ver.state, mb.l, mb.r)
+                            idx, val = np.asarray(idx), np.asarray(val)
+                    else:
+                        idx, val = self._online.query(ver.state, mb.l, mb.r)
+                else:
+                    idx, val = self._query_fn(mb.l, mb.r)
+            parts = scatter_back(mb, idx, val)
+        except BaseException:
+            self._breaker_failure()
+            raise
+        self._breaker_success()
+        # The coalesced launch is power-of-two padded with trivial
+        # (0, 0) queries; the dispatcher routes ALL pads to one side
+        # (short when threshold >= 1, else long — real queries never
+        # leave that side short of the pad count), so subtracting
+        # from whichever side holds them leaves real-traffic splits.
+        pad = mb.l.size - mb.n_queries
+        splits = [(s - pad, g) if s >= pad else (s, g - pad) for s, g in splits]
+        return parts, splits, False
+
+    def _launch_degraded(self, mb: MicroBatch, ver):
+        """Answer via the correct-but-slower fallback path (breaker open)."""
+        with self._lock:
+            self._degraded_count += 1
+        if self._online is not None:
+            if self._degraded is None:
+                from repro.fault.fallback import DegradedFallback
+
+                self._degraded = DegradedFallback()
+            idx, val = self._degraded.query(ver, mb.l, mb.r)
+        elif self._fallback_fn is not None:
+            idx, val = self._fallback_fn(mb.l, mb.r)
+        else:  # unreachable: __init__ validates breaker => degraded path
+            raise EngineFailure("breaker open and no fallback", retryable=False)
+        return scatter_back(mb, idx, val), [], True
+
+    # -- circuit breaker ------------------------------------------------------
+
+    def _use_degraded(self) -> bool:
+        """True while the breaker routes launches to the fallback.
+
+        closed -> open after ``breaker_threshold`` consecutive primary
+        failures; open -> half-open once ``breaker_cooldown_s`` elapses (ONE
+        worker runs a trivial health probe through the primary; the rest stay
+        degraded); probe success closes, probe failure re-arms the cooldown.
+        """
+        if self._cfg.breaker_threshold <= 0:
+            return False
+        with self._lock:
+            if not self._brk_open:
+                return False
+            cooled = time.perf_counter() - self._brk_opened_t >= self._cfg.breaker_cooldown_s
+            if not cooled or self._brk_probing:
+                return True
+            self._brk_probing = True  # this worker owns the health probe
+        ok = False
+        try:
+            ok = self._probe_primary()
+        finally:
+            with self._lock:
+                self._brk_probing = False
+                if ok:
+                    self._brk_open = False
+                    self._brk_fails = 0
+                else:
+                    self._brk_opened_t = time.perf_counter()  # re-arm cooldown
+        return not ok
+
+    def _probe_primary(self) -> bool:
+        """Half-open health probe: one trivial query through the primary."""
+        try:
+            zeros = np.zeros(1, np.int32)
+            if self._fault is not None:
+                self._fault("worker_query")
+            if self._online is not None:
+                ver = self._online.pin()
+                try:
+                    if self._launch_gate is not None:
+                        with self._launch_gate:
+                            out = self._online.query(ver.state, zeros, zeros)
+                            np.asarray(out[0])
+                    else:
+                        self._online.query(ver.state, zeros, zeros)
+                finally:
+                    self._online.release(ver.vid)
+            else:
+                self._query_fn(zeros, zeros)
+            return True
+        except BaseException:
+            return False
+
+    def _breaker_failure(self):
+        if self._cfg.breaker_threshold <= 0:
+            return
+        with self._lock:
+            self._brk_fails += 1
+            if not self._brk_open and self._brk_fails >= self._cfg.breaker_threshold:
+                self._brk_open = True
+                self._brk_opened_t = time.perf_counter()
+                self._brk_trips += 1
+
+    def _breaker_success(self):
+        if self._cfg.breaker_threshold <= 0:
+            return
+        with self._lock:
+            self._brk_fails = 0
+
+    # -- launch outcome plumbing ----------------------------------------------
+
+    def _requeue_or_fail(self, mb: MicroBatch, reqs, ver, err: BaseException):
+        """Split a failed batch's requests into automatic retries and failures.
+
+        A request retries while it has retry budget left, hasn't blown its
+        ``request_timeout_s`` deadline, and the server is still open; retried
+        requests re-enter the batcher (fresh coalescing, fresh version pin).
+        The rest fail with a typed ``EngineFailure`` carrying the cause.
+        """
+        if ver is not None:
+            self._online.release(ver.vid)
+        now = time.perf_counter()
+        retry, fail = [], []
+        for q in reqs:
+            expired = (
+                self._cfg.request_timeout_s is not None
+                and now - q.t_submit > self._cfg.request_timeout_s
+            )
+            if q.retries < self._cfg.max_retries and not expired and not self._closed:
+                q.retries += 1
+                retry.append(q)
+            else:
+                fail.append(q)
+        with self._lock:
+            self._inflight -= len(fail)
+            self._retried += len(retry)
+            self._failed_reqs += len(fail)
+            for q in fail:
+                self._live.discard(q)
+            if retry and not self._closed:
+                for q in retry:
+                    self._inq.put(q)
+                retry = []
+            else:
+                # close() raced us: its _STOP is already in _inq, so requeued
+                # requests would never flush. Fail them instead.
+                self._inflight -= len(retry)
+                self._failed_reqs += len(retry)
+                for q in retry:
+                    self._live.discard(q)
+        fail += retry
+        if isinstance(err, (EngineFailure, DeadlineExceeded)):
+            exc = err
+        else:
+            exc = EngineFailure(f"engine launch failed: {err!r}", cause=err)
+        for q in fail:
+            self._fail_future(q, exc)
+
+    def _finish(self, mb: MicroBatch, reqs, ver, parts, splits, degraded: bool):
+        lag = 0
+        if ver is not None:
+            lag = self._online.current_vid - ver.vid
+            self._online.release(ver.vid)
+        t_done = time.perf_counter()
+        with self._lock:
+            self._inflight -= len(reqs)
+            self._batch_requests.append(len(reqs))
+            self._batch_queries.append(mb.n_queries)
+            self._splits.extend(splits)
+            self._padded.add(mb.l.size)
+            if ver is not None:
+                self._lags.append(lag)
+            for q in reqs:
+                self._live.discard(q)
+                self._queue_lat.append(q.t_flush - q.t_submit)
+                self._total_lat.append(t_done - q.t_submit)
+            self._t_last_done = t_done
+        for q, (qi, qv) in zip(reqs, parts):
+            try:
                 q.future.set_result(
                     RequestResult(
                         qi,
@@ -571,6 +908,38 @@ class RMQServer:
                         ver.vid if ver is not None else None,
                     )
                 )
+            except Exception:
+                pass  # already failed (expired/closed): result has no taker
+
+    @staticmethod
+    def _fail_future(q, exc: BaseException):
+        try:
+            q.future.set_exception(exc)
+        except Exception:
+            pass  # already resolved
+
+    def _supervisor_loop(self):
+        """Restart crashed workers with capped exponential backoff per slot."""
+        delay = {}
+        while True:
+            slot = self._deaths.get()
+            if slot is _STOP:
+                return
+            d = delay.get(slot, self._cfg.worker_backoff_s)
+            delay[slot] = min(d * 2, self._cfg.worker_backoff_max_s)
+            time.sleep(d)
+            with self._lock:
+                if self._closed:
+                    continue  # shutting down: _STOP already drained the pool
+                self._worker_restarts += 1
+                t = threading.Thread(
+                    target=self._worker_main,
+                    args=(slot,),
+                    daemon=True,
+                    name=f"rmq-worker-{slot}r",
+                )
+                self._threads.append(t)
+            t.start()
 
     def _update_loop(self):
         """The single updater: applies update batches in submission order."""
@@ -587,12 +956,17 @@ class RMQServer:
                 # versions. Either way, fail this future and keep going.
                 with self._lock:
                     self._inflight -= 1
-                item.future.set_exception(e)
+                    self._live.discard(item)
+                self._fail_future(item, e)
                 continue
             with self._lock:
                 self._inflight -= 1
+                self._live.discard(item)
                 self._update_lat.append(time.perf_counter() - item.t_submit)
-            item.future.set_result(res)
+            try:
+                item.future.set_result(res)
+            except Exception:
+                pass  # already failed (server closed under us)
 
     def stats(self) -> ServeStats:
         with self._lock:
@@ -627,4 +1001,10 @@ class RMQServer:
                 p99_update_s=pct(ulat, 99),
                 version_lags=tuple(self._lags),
                 deadline_trajectory=tuple(self._deadlines),
+                degraded_launches=self._degraded_count,
+                worker_restarts=self._worker_restarts,
+                retried_requests=self._retried,
+                expired_requests=self._expired,
+                failed_requests=self._failed_reqs,
+                breaker_trips=self._brk_trips,
             )

@@ -16,7 +16,13 @@ the patch-window math.
 """
 
 from .deltas import Delta, DeltaBatch, DeltaLog, shard_batches
-from .engines import OnlineEngine, UpdateResult, make_online, online_names
+from .engines import (
+    EnginePoisoned,
+    OnlineEngine,
+    UpdateResult,
+    make_online,
+    online_names,
+)
 from .patch import BlockMirror, STMirror, k_levels, level_windows, patch_doubling
 from .versions import Version, VersionStore
 
@@ -25,6 +31,7 @@ __all__ = [
     "Delta",
     "DeltaBatch",
     "DeltaLog",
+    "EnginePoisoned",
     "OnlineEngine",
     "STMirror",
     "UpdateResult",

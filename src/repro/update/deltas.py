@@ -22,6 +22,7 @@ host anyway (window math is static per patch).
 
 from __future__ import annotations
 
+import io
 from typing import List, NamedTuple, Tuple
 
 import numpy as np
@@ -69,6 +70,36 @@ class DeltaBatch(NamedTuple):
         out = np.concatenate([x, self.tail.astype(x.dtype)])
         out[self.idx] = self.val.astype(x.dtype)
         return out
+
+    def to_bytes(self) -> bytes:
+        """Serialize for the write-ahead journal (``repro.fault.wal``).
+
+        npz keeps exact dtypes and shapes, so a journal round-trip replays
+        bit-identically: ``from_bytes(b.to_bytes()).apply_numpy(x)`` equals
+        ``b.apply_numpy(x)`` leaf-for-leaf.
+        """
+        bio = io.BytesIO()
+        np.savez(
+            bio,
+            idx=self.idx,
+            val=self.val,
+            tail=self.tail,
+            dims=np.asarray([self.n_old, self.n_new], np.int64),
+        )
+        return bio.getvalue()
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "DeltaBatch":
+        """Inverse of ``to_bytes``."""
+        with np.load(io.BytesIO(raw)) as z:
+            dims = z["dims"]
+            return cls(
+                idx=z["idx"],
+                val=z["val"],
+                tail=z["tail"],
+                n_old=int(dims[0]),
+                n_new=int(dims[1]),
+            )
 
 
 class DeltaLog:

@@ -52,7 +52,36 @@ from .deltas import DeltaBatch, DeltaLog, shard_batches
 from .patch import BlockMirror, STMirror
 from .versions import Version, VersionStore
 
-__all__ = ["OnlineEngine", "UpdateResult", "make_online", "online_names"]
+__all__ = [
+    "EnginePoisoned",
+    "OnlineEngine",
+    "UpdateResult",
+    "make_online",
+    "online_names",
+]
+
+
+class EnginePoisoned(RuntimeError):
+    """The engine fail-stopped after a mid-patch apply failure.
+
+    Carries what recovery needs: ``cause`` is the original exception and
+    ``seq`` the failing update's journal sequence number (``None`` when the
+    engine runs unjournaled). Queries keep serving published versions; a
+    successful checkpoint+journal restore (``fault.durable``) replaces the
+    poisoned engine with a consistent one — the aborted seq is skipped on
+    replay, so the restored state is the last published version.
+    """
+
+    def __init__(self, name: str, seq, cause: BaseException):
+        at = f" applying journaled update seq {seq}" if seq is not None else ""
+        super().__init__(
+            f"online engine {name!r} is fail-stopped after an apply error{at}: "
+            f"{cause!r}; restore from checkpoint+journal or rebuild (queries "
+            f"still serve published versions)"
+        )
+        self.engine = name
+        self.seq = seq
+        self.cause = cause
 
 
 class UpdateResult(NamedTuple):
@@ -91,47 +120,94 @@ def _block_state(m: BlockMirror) -> BlockRMQ:
 
 
 class _Impl(NamedTuple):
-    """One engine's online hooks: the resolved plan, the initial state, and
-    ``patch(batch, prev_state) -> (next_state, was_incremental)``."""
+    """One engine's online hooks: the resolved plan, the initial state,
+    ``patch(batch, prev_state) -> (next_state, was_incremental)``, plus the
+    crash-safety hooks — ``snapshot() -> {name: np.ndarray}`` (the host-side
+    structure leaves a checkpoint persists; a factory given ``snap=...``
+    reconstructs the same state without re-running the argmin build) and
+    ``array() -> np.ndarray`` (a host copy of the current logical array:
+    published on every version for the degraded fallback + oracle checks,
+    and the rebuild source for mesh-resident engines)."""
 
     plan: build_mod.BuildPlan
     state0: object
     patch: Callable
+    snapshot: Optional[Callable] = None
+    array: Optional[Callable] = None
 
 
 # --- single-host implementations --------------------------------------------
+#
+# The single-host engines restore *instantly*: their host mirrors ARE the
+# built structures, so a checkpoint persists the mirror leaves and a restore
+# re-seats them without recomputing a single argmin. The mesh engines (below)
+# snapshot only the logical array and restore by re-running their BuildPlan —
+# bit-identical by the patched==rebuilt invariant this subsystem asserts.
 
 
-def _sparse_table_impl(x, mesh, axis_names, kw) -> _Impl:
+def _sparse_table_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
     plan = build_mod.plan_for("sparse_table", x.shape[0])
-    state0 = build_mod.execute(plan, x)
-    mirror = STMirror.from_state(state0[0])
+    if snap is None:
+        state0 = build_mod.execute(plan, x)
+        mirror = STMirror.from_state(state0[0])
+    else:
+        mirror = STMirror(snap["st_idx"], snap["x"])
+        xj = jnp.asarray(mirror.x)
+        state0 = (SparseTable(idx=jnp.asarray(mirror.idx), x=xj), xj)
 
     def patch(batch: DeltaBatch, prev):
         mirror.patch(batch)
         xj = jnp.asarray(mirror.x)
         return (SparseTable(idx=jnp.asarray(mirror.idx), x=xj), xj), True
 
-    return _Impl(plan, state0, patch)
+    return _Impl(
+        plan,
+        state0,
+        patch,
+        snapshot=lambda: {"x": mirror.x.copy(), "st_idx": mirror.idx.copy()},
+        array=lambda: mirror.x.copy(),
+    )
 
 
 def _block_impl(block_size: int):
-    def factory(x, mesh, axis_names, kw) -> _Impl:
+    def factory(x, mesh, axis_names, kw, snap=None) -> _Impl:
         bs = kw.get("block_size", block_size)
         plan = build_mod.plan_for("block", x.shape[0], block_size=bs)
-        state0 = build_mod.execute(plan, x)
-        mirror = BlockMirror.from_state(state0, x.shape[0])
+        if snap is None:
+            state0 = build_mod.execute(plan, x)
+            mirror = BlockMirror.from_state(state0, x.shape[0])
+        else:
+            mirror = BlockMirror(
+                snap["x_blocks"],
+                snap["bmin_val"],
+                snap["bmin_gidx"],
+                snap["st_idx"],
+                snap["x"].shape[0],
+            )
+            state0 = _block_state(mirror)
 
         def patch(batch: DeltaBatch, prev):
             mirror.patch(batch)
             return _block_state(mirror), True
 
-        return _Impl(plan, state0, patch)
+        return _Impl(
+            plan,
+            state0,
+            patch,
+            snapshot=lambda: {
+                "x": mirror.x_blocks.reshape(-1)[: mirror.n].copy(),
+                "x_blocks": mirror.x_blocks.copy(),
+                "bmin_val": mirror.bmin_val.copy(),
+                "bmin_gidx": mirror.bmin_gidx.copy(),
+                "st_idx": mirror.st_idx.copy(),
+            },
+            array=lambda: mirror.x_blocks.reshape(-1)[: mirror.n].copy(),
+        )
 
     return factory
 
 
-def _hybrid_impl(x, mesh, axis_names, kw) -> _Impl:
+def _hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
     # The online hybrid pins the pure-jnp short path: the Pallas megakernel's
     # packed buffers are not patched in place yet (kernel-side COW is a
     # ROADMAP follow-up), and the CPU baseline never uses them anyway.
@@ -142,36 +218,68 @@ def _hybrid_impl(x, mesh, axis_names, kw) -> _Impl:
         threshold=kw.get("threshold"),
         use_kernels=False,
     )
-    state0 = build_mod.execute(plan, x)
-    blocked_m = BlockMirror.from_state(state0.blocked, x.shape[0])
-    st_m = STMirror.from_state(state0.st)
+
+    def _assemble(blocked_m: BlockMirror, st_m: STMirror, threshold) -> HybridRMQ:
+        xj = jnp.asarray(st_m.x)
+        blocked = _block_state(blocked_m)
+        table = SparseTable(idx=jnp.asarray(st_m.idx), x=xj)
+        return HybridRMQ(
+            blocked=blocked,
+            st=table,
+            x=xj,
+            threshold=threshold,
+            use_kernels=False,
+            short_fn=functools.partial(_block_query_jit, blocked),
+            long_fn=functools.partial(_st_long_jit, table, xj),
+        )
+
+    if snap is None:
+        state0 = build_mod.execute(plan, x)
+        blocked_m = BlockMirror.from_state(state0.blocked, x.shape[0])
+        st_m = STMirror.from_state(state0.st)
+    else:
+        blocked_m = BlockMirror(
+            snap["b_x_blocks"],
+            snap["b_bmin_val"],
+            snap["b_bmin_gidx"],
+            snap["b_st_idx"],
+            snap["x"].shape[0],
+        )
+        st_m = STMirror(snap["st_idx"], snap["x"])
+        # The snapshot was taken under the plan's resolved threshold (the
+        # restore kwargs pin it), so routing is identical to the live engine.
+        state0 = _assemble(blocked_m, st_m, plan.meta["threshold"])
 
     def patch(batch: DeltaBatch, prev: HybridRMQ):
         blocked_m.patch(batch)
         st_m.patch(batch)
-        xj = jnp.asarray(st_m.x)
-        blocked = _block_state(blocked_m)
-        table = SparseTable(idx=jnp.asarray(st_m.idx), x=xj)
-        return (
-            HybridRMQ(
-                blocked=blocked,
-                st=table,
-                x=xj,
-                threshold=prev.threshold,
-                use_kernels=False,
-                short_fn=functools.partial(_block_query_jit, blocked),
-                long_fn=functools.partial(_st_long_jit, table, xj),
-            ),
-            True,
-        )
+        return _assemble(blocked_m, st_m, prev.threshold), True
 
-    return _Impl(plan, state0, patch)
+    return _Impl(
+        plan,
+        state0,
+        patch,
+        snapshot=lambda: {
+            "x": st_m.x.copy(),
+            "st_idx": st_m.idx.copy(),
+            "b_x_blocks": blocked_m.x_blocks.copy(),
+            "b_bmin_val": blocked_m.bmin_val.copy(),
+            "b_bmin_gidx": blocked_m.bmin_gidx.copy(),
+            "b_st_idx": blocked_m.st_idx.copy(),
+        },
+        array=lambda: st_m.x.copy(),
+    )
 
 
 # --- mesh implementations ----------------------------------------------------
 
 
-def _distributed_impl(x, mesh, axis_names, kw) -> _Impl:
+def _distributed_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
+    # Mesh-resident structures: the snapshot is the logical array only, and a
+    # restore re-executes the BuildPlan over it (bit-identical to the live
+    # patched state by the patched==rebuilt invariant). ``snap`` therefore
+    # needs no special casing here — ``from_snapshot`` hands the saved array
+    # in as ``x`` and the normal build path is the restore path.
     plan = build_mod.plan_for(
         "distributed",
         x.shape[0],
@@ -198,10 +306,19 @@ def _distributed_impl(x, mesh, axis_names, kw) -> _Impl:
         val = np.concatenate([batch.val, batch.tail.astype(batch.val.dtype)])
         return (distributed.patch_sharded(s, pos, val, mesh, axes), qfn), True
 
-    return _Impl(plan, state0, patch)
+    return _Impl(
+        plan,
+        state0,
+        patch,
+        snapshot=lambda: {"x": x_host.copy()},
+        array=lambda: x_host.copy(),
+    )
 
 
-def _sharded_hybrid_impl(x, mesh, axis_names, kw) -> _Impl:
+def _sharded_hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
+    # Like ``_distributed_impl``: snapshot = the logical array, restore =
+    # re-run the BuildPlan (with the threshold pinned via the restore
+    # kwargs), bit-identical by the patched==rebuilt invariant.
     plan = build_mod.plan_for(
         "sharded_hybrid",
         x.shape[0],
@@ -216,6 +333,8 @@ def _sharded_hybrid_impl(x, mesh, axis_names, kw) -> _Impl:
     struct_axes = plan.meta["struct_axes"]
     mode, bs = plan.meta["mode"], plan.meta["block_size"]
     x_host = np.asarray(x)
+    snapshot = lambda: {"x": x_host.copy()}
+    array = lambda: x_host.copy()
 
     if not struct_axes:  # shard_batch: replicated structures, host mirrors
         blocked_m = BlockMirror.from_state(state0.blocked, x.shape[0])
@@ -237,7 +356,7 @@ def _sharded_hybrid_impl(x, mesh, axis_names, kw) -> _Impl:
                 True,
             )
 
-        return _Impl(plan, state0, patch)
+        return _Impl(plan, state0, patch, snapshot=snapshot, array=array)
 
     def patch(batch: DeltaBatch, prev):
         nonlocal x_host
@@ -270,7 +389,7 @@ def _sharded_hybrid_impl(x, mesh, axis_names, kw) -> _Impl:
             True,
         )
 
-    return _Impl(plan, state0, patch)
+    return _Impl(plan, state0, patch, snapshot=snapshot, array=array)
 
 
 _FACTORIES: Dict[str, Callable] = {
@@ -298,7 +417,17 @@ class OnlineEngine:
     refcounted.
     """
 
-    def __init__(self, name: str, x, *, mesh=None, axis_names=None, **build_kw):
+    def __init__(
+        self,
+        name: str,
+        x,
+        *,
+        mesh=None,
+        axis_names=None,
+        _snapshot=None,  # checkpoint leaves: restore path (see from_snapshot)
+        _first_vid: int = 0,  # version-id continuity across a restore
+        **build_kw,
+    ):
         spec = registry.get(name)
         if not spec.updatable:
             raise ValueError(
@@ -309,13 +438,21 @@ class OnlineEngine:
             raise ValueError(f"need a 1-D array, got shape {x.shape}")
         self.name = name
         self.spec = spec
-        impl = _FACTORIES[name](x, mesh, axis_names, build_kw)
+        impl = _FACTORIES[name](x, mesh, axis_names, build_kw, snap=_snapshot)
         self.plan = impl.plan
         self._dtype = np.dtype(x.dtype)
-        self.store = VersionStore()
+        # Pin the plan-resolved knobs: a snapshot restored with these kwargs
+        # re-plans to the exact same layout/threshold/mode deterministically.
+        self._build_kw = dict(build_kw)
+        for key in ("block_size", "threshold", "mode"):
+            val = self.plan.meta.get(key)
+            if val is not None:
+                self._build_kw[key] = int(val) if isinstance(val, (int, np.integer)) else val
+        self.store = VersionStore(first_vid=_first_vid)
         self._apply_lock = threading.Lock()
         self._failed: Optional[BaseException] = None
-        self.store.publish(impl.state0, x.shape[0])
+        self._failed_seq: Optional[int] = None
+        self.store.publish(impl.state0, x.shape[0], x_host=impl.array())
         # The store owns version 0 now; keeping state0 on the impl would pin
         # its arrays for the engine's whole lifetime.
         self._impl = impl._replace(state0=None)
@@ -334,6 +471,16 @@ class OnlineEngine:
     def current_vid(self) -> int:
         return self.store.current_vid
 
+    @property
+    def dtype(self) -> np.dtype:
+        """Value dtype (what ``DeltaLog.coalesce`` must target)."""
+        return self._dtype
+
+    @property
+    def poisoned(self) -> bool:
+        """True once a mid-patch failure fail-stopped the applier."""
+        return self._failed is not None
+
     def pin(self) -> Version:
         return self.store.pin()
 
@@ -343,6 +490,53 @@ class OnlineEngine:
     def query(self, state, l, r):
         """The registry conformance query against one pinned version's state."""
         return self.spec.query(state, l, r)
+
+    # -- checkpointing --------------------------------------------------------
+
+    def snapshot(self):
+        """``(arrays, meta)`` capturing the current version durably.
+
+        ``arrays`` holds host copies of the structure leaves (single-host
+        engines) or the logical array (mesh engines — restore rebuilds
+        through the BuildPlan, bit-identical by the patched==rebuilt
+        invariant); ``meta`` is the JSON-serializable identity
+        (engine/vid/n/dtype + plan-resolved build kwargs). Taken under the
+        apply lock so a snapshot never interleaves with a half-applied
+        patch; refuses on a poisoned engine (the mirrors may have diverged
+        from the published chain — exactly what a snapshot must never
+        persist).
+        """
+        with self._apply_lock:
+            if self._failed is not None:
+                raise EnginePoisoned(self.name, self._failed_seq, self._failed)
+            arrays = dict(self._impl.snapshot())
+            meta = {
+                "engine": self.name,
+                "vid": int(self.store.current_vid),
+                "n": int(self.n),
+                "dtype": str(self._dtype),
+                "build_kw": dict(self._build_kw),
+            }
+            return arrays, meta
+
+    @classmethod
+    def from_snapshot(cls, arrays, meta, *, mesh=None, axis_names=None):
+        """Reconstruct an engine from ``snapshot()`` output.
+
+        Version ids continue from the snapshot's vid (the restored initial
+        publish IS that version). Meshes are not serializable — the caller
+        supplies the current process's mesh for mesh engines.
+        """
+        x = jnp.asarray(np.ascontiguousarray(arrays["x"]))
+        return cls(
+            meta["engine"],
+            x,
+            mesh=mesh,
+            axis_names=axis_names,
+            _snapshot=arrays,
+            _first_vid=int(meta["vid"]),
+            **meta.get("build_kw", {}),
+        )
 
     # -- mutation -------------------------------------------------------------
 
@@ -358,7 +552,9 @@ class OnlineEngine:
 
     def _stage_publish(self, state: dict) -> dict:
         batch: DeltaBatch = state["deltas"]
-        vid = self.store.publish(state.pop("patched"), batch.n_new)
+        vid = self.store.publish(
+            state.pop("patched"), batch.n_new, x_host=self._impl.array()
+        )
         layout = self.plan.layout
         state["result"] = UpdateResult(
             version=vid,
@@ -395,27 +591,36 @@ class OnlineEngine:
         if batch.n_new != batch.n_old + batch.tail.size:
             raise ValueError(f"inconsistent batch lengths: {batch}")
 
-    def apply(self, deltas, *, observer: Optional[Callable] = None) -> UpdateResult:
+    def apply(
+        self,
+        deltas,
+        *,
+        observer: Optional[Callable] = None,
+        seq: Optional[int] = None,
+    ) -> UpdateResult:
         """Apply one update batch; returns the published ``UpdateResult``.
 
         ``deltas`` is a ``DeltaLog`` (coalesced here against the current
         length) or an already-coalesced ``DeltaBatch`` (validated before any
         mutation). Serialized: updates publish in apply order. Queries
-        against pinned versions proceed concurrently throughout.
+        against pinned versions proceed concurrently throughout. ``seq`` is
+        the batch's journal sequence number when the caller journals
+        (``fault.durable``) — recorded on failure so the poison error names
+        the exact lost update.
 
         Failure semantics are **fail-stop**: malformed batches are rejected
         up front with the engine untouched, but an exception raised mid-patch
         (device OOM, a bug) may leave the host mirrors inconsistent with the
         published chain — the engine marks itself failed and every later
-        ``apply`` raises, rather than silently publishing a diverged
-        version. Queries keep serving the already-published versions.
+        ``apply`` raises ``EnginePoisoned`` (carrying the original exception
+        and failing seq), rather than silently publishing a diverged version.
+        Queries keep serving the already-published versions; a journal-replay
+        restore yields a clean replacement engine.
         """
         with self._apply_lock:
             if self._failed is not None:
-                raise RuntimeError(
-                    f"online engine {self.name!r} is fail-stopped after an "
-                    f"apply error; rebuild it (queries still serve published "
-                    f"versions)"
+                raise EnginePoisoned(
+                    self.name, self._failed_seq, self._failed
                 ) from self._failed
             if isinstance(deltas, DeltaLog):
                 batch = deltas.coalesce(self.n, dtype=self._dtype)
@@ -427,6 +632,7 @@ class OnlineEngine:
                 res = build_mod.execute_update(self._uplan, batch, observer=observer)
             except BaseException as e:
                 self._failed = e
+                self._failed_seq = seq
                 raise
             return res._replace(seconds=time.perf_counter() - t0)
 

@@ -35,16 +35,29 @@ class Version(NamedTuple):
     vid: int  # publish sequence number (0 = the initial build)
     state: Any  # engine state (registry conformance contract)
     n: int  # logical array length at this version
+    # Host copy of the logical array at this version (None when the
+    # publisher doesn't track one). The crash-safety layer relies on it: the
+    # degraded pure-jnp fallback builds a correct engine for any pinned
+    # version from it, and oracle verification replays against it.
+    x_host: Any = None
 
 
 class VersionStore:
-    """Thread-safe pin/publish/retire over a chain of ``Version`` snapshots."""
+    """Thread-safe pin/publish/retire over a chain of ``Version`` snapshots.
 
-    def __init__(self):
+    ``first_vid`` seats the store mid-timeline: a restored engine's first
+    publish reuses the version id the checkpoint recorded, so version ids
+    stay continuous across a crash (a client's pinned-vid bookkeeping never
+    sees the numbering restart).
+    """
+
+    def __init__(self, first_vid: int = 0):
+        if first_vid < 0:
+            raise ValueError(f"first_vid must be >= 0, got {first_vid}")
         self._lock = threading.Lock()
         self._versions: Dict[int, Version] = {}
         self._pins: Dict[int, int] = {}
-        self._current = -1
+        self._current = int(first_vid) - 1
 
     @property
     def current_vid(self) -> int:
@@ -63,7 +76,7 @@ class VersionStore:
         with self._lock:
             return tuple(sorted(self._versions))
 
-    def publish(self, state, n: int) -> int:
+    def publish(self, state, n: int, x_host=None) -> int:
         """Install ``state`` as the next version; returns its id.
 
         Atomic: pins taken after return see the new version. Superseded
@@ -71,7 +84,7 @@ class VersionStore:
         """
         with self._lock:
             vid = self._current + 1
-            self._versions[vid] = Version(vid, state, int(n))
+            self._versions[vid] = Version(vid, state, int(n), x_host)
             self._current = vid
             self._retire_locked()
             return vid
