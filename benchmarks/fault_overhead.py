@@ -89,9 +89,10 @@ def journaled_apply():
     )
 
 
-def _serve_once(online, plan, *, fault_plan=None, max_retries=0):
+def _serve_once(online, plan, *, fault_plan=None, max_retries=0, requests=None):
     """One serve run: Poisson clients + concurrent update stream -> stats."""
-    n0, clients, requests, updates = _sizes()
+    n0, clients, default_requests, updates = _sizes()
+    requests = default_requests if requests is None else requests
     cfg = ServeConfig(
         deadline_s=1e-3,
         max_batch=1024,
@@ -182,12 +183,23 @@ def _factories():
     return plain, journaled
 
 
-def p99_gate(runs=4):
+def p99_gate(runs=5, requests=400):
     """tools/check.sh acceptance bar: best-of-`runs` request p99 with WAL
     journaling on vs off, no injected faults. Returns (plain_s, journaled_s).
+
+    Drives more requests per run than the recorded benchmark so the p99
+    estimate has enough tail samples to compare at a 10% tolerance, and
+    alternates the two configs so neither systematically runs on a colder
+    process (jit caches, page cache) than the other.
     """
     plain, journaled = _factories()
-    return _best_of(plain, runs=runs).p99_total_s, _best_of(journaled, runs=runs).p99_total_s
+    best = [float("inf"), float("inf")]
+    for _ in range(runs):
+        for i, make in enumerate((plain, journaled)):
+            best[i] = min(
+                best[i], _best_of(make, runs=1, requests=requests).p99_total_s
+            )
+    return best[0], best[1]
 
 
 def serve_overhead():
