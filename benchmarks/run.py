@@ -20,7 +20,7 @@ def main() -> None:
         default="",
         help="comma list: fig12,fig13,fig10,fig14,table2,build_mem,roofline,"
         "crossover,sharded_hybrid,serve_latency,update_throughput,"
-        "fault_overhead",
+        "fault_overhead,fleet_scaling",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -37,6 +37,7 @@ def main() -> None:
         batch_scaling,
         common,
         fault_overhead,
+        fleet_scaling,
         heatmap,
         hybrid_crossover,
         memory_usage,
@@ -63,6 +64,7 @@ def main() -> None:
         "serve_latency": serve_latency.run,
         "update_throughput": update_throughput.run,
         "fault_overhead": fault_overhead.run,
+        "fleet_scaling": fleet_scaling.run,
     }
     if only:
         unknown = only - set(suites)

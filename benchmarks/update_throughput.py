@@ -22,6 +22,7 @@ from __future__ import annotations
 import threading
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -74,6 +75,40 @@ def patch_vs_rebuild(sizes=None):
                 f"vs rebuild {rebuild_s*1e3:.1f}ms speedup={speedup:.1f}x",
             )
             common.emit(f"update_throughput/rebuild_{engine}_n{n}", rebuild_s)
+
+
+def publish_bytes():
+    """Windowed-COW publish cost: bytes uploaded per point write vs full state.
+
+    The publish path splices only the patched windows into the pinned device
+    structure; a single-point write must therefore upload a small fraction of
+    the full structure (asserted at < 25% — in practice it is orders of
+    magnitude less for large n, since only O(log n) windows are touched).
+    """
+    n = 1 << 12 if common.SMOKE else 1 << 16
+    rng = np.random.default_rng(7)
+    x = rng.random(n, dtype=np.float32)
+    for engine in _SWEEP_ENGINES:
+        kw = {"threshold": 64} if engine == "hybrid" else {}
+        online = update.make_online(engine, jnp.asarray(x), **kw)
+        full = sum(
+            leaf.nbytes
+            for leaf in jax.tree_util.tree_leaves(online.store.current.state)
+            if hasattr(leaf, "nbytes")
+        )
+        log = update.DeltaLog().point(int(rng.integers(0, n)), float(rng.random()))
+        t0 = time.perf_counter()
+        res = online.apply(log)
+        apply_s = time.perf_counter() - t0
+        assert 0 < res.publish_bytes < full // 4, (
+            f"{engine}: point publish uploaded {res.publish_bytes}B of "
+            f"{full}B full structure — windowed COW regressed to full upload"
+        )
+        common.emit(
+            f"update_throughput/publish_bytes_point_{engine}_n{n}",
+            apply_s,
+            f"{res.publish_bytes}B of {full}B full ({100.0 * res.publish_bytes / full:.2f}%)",
+        )
 
 
 def mutate_while_serving():
@@ -140,6 +175,7 @@ def mutate_while_serving():
 
 def run():
     patch_vs_rebuild()
+    publish_bytes()
     mutate_while_serving()
 
 

@@ -25,6 +25,10 @@ Sites (who calls ``check`` where):
   ``"crash"`` leaves torn bytes on disk (recovery stops at the last complete
   record); an ``"error"`` is rolled back to the pre-append offset and
   surfaces as a failed update.
+* ``rollout_apply`` — the fleet front door (``serve.fleet.RMQFleet``),
+  immediately before handing a rollout's update batch to one replica's
+  server: a replica crash mid-rollout, exercising the crash -> restore ->
+  rejoin-at-fleet-vid path.
 
 ``FaultSpec.at`` fires at exact 1-based invocation counts (fully
 deterministic regardless of thread interleaving); ``rate`` fires
@@ -46,6 +50,7 @@ SITES: Tuple[str, ...] = (
     "patch_apply",
     "checkpoint_write",
     "journal_append",
+    "rollout_apply",
 )
 
 _KINDS = ("error", "crash")

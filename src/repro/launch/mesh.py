@@ -15,7 +15,13 @@ try:  # jax >= 0.5: explicit axis types
 except ImportError:  # jax 0.4.x: no AxisType; make_mesh takes no axis_types
     AxisType = None
 
-__all__ = ["factor_2d", "make_production_mesh", "make_mesh", "set_mesh"]
+__all__ = [
+    "factor_2d",
+    "make_group_mesh",
+    "make_production_mesh",
+    "make_mesh",
+    "set_mesh",
+]
 
 
 def factor_2d(ndev: int):
@@ -46,6 +52,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/examples (e.g. (2, 4) on 8 fake devices)."""
     return _mk(tuple(shape), tuple(axes))
+
+
+def make_group_mesh(devices, axes=("shard",)):
+    """1-D mesh over an *explicit* device subset.
+
+    ``jax.make_mesh`` always spans every visible device; a replica fleet
+    (``serve.fleet``) instead carves the fleet into disjoint per-replica
+    groups, each serving a mesh engine on its own slice of the devices.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices, dtype=object), tuple(axes))
 
 
 def set_mesh(mesh):

@@ -114,6 +114,20 @@ def _parser() -> argparse.ArgumentParser:
     asy.add_argument("--workers", type=int, default=1, help="engine-pool threads")
     asy.add_argument("--max-pending", type=int, default=4096, help="admission-control bound")
     asy.add_argument(
+        "--replicas",
+        type=int,
+        default=1,
+        help="replica fleet size: >1 serves through serve.fleet's regime-"
+        "routing front door (updatable engines; mesh engines carve one "
+        "device group per replica)",
+    )
+    asy.add_argument(
+        "--max-lag",
+        type=int,
+        default=1,
+        help="fleet rollout barrier: max version spread between replicas",
+    )
+    asy.add_argument(
         "--mutate",
         type=int,
         default=0,
@@ -179,6 +193,16 @@ def _validate(ap: argparse.ArgumentParser, args, spec: registry.EngineSpec) -> N
                 f"--mutate requires an updatable engine; "
                 f"{args.engine} is not (have {registry.updatable_names()})"
             )
+    if args.replicas > 1:
+        if args.mode != "async":
+            ap.error("--replicas > 1 requires --mode async")
+        if not spec.updatable:
+            ap.error(
+                f"--replicas > 1 requires an updatable engine; "
+                f"{args.engine} is not (have {registry.updatable_names()})"
+            )
+        if args.chaos is not None:
+            ap.error("--chaos runs a single-engine soak; drop --replicas")
     if args.chaos is not None and not spec.updatable:
         ap.error(
             f"--chaos requires an updatable engine; "
@@ -360,6 +384,134 @@ def _run_async(args, spec, state, x, plan, online=None) -> bool:
     return ok
 
 
+def _run_fleet(args, spec, x) -> bool:
+    """Serve through a replica fleet (serve.fleet): regime-routed front door,
+    bounded-lag rollouts, per-version oracle verification — the multi-replica
+    twin of ``_run_async``."""
+    from repro.serve.fleet import FleetConfig, RMQFleet
+
+    scfg = ServeConfig(
+        deadline_s=args.deadline_ms * 1e-3,
+        max_batch=args.max_batch,
+        max_pending=args.max_pending,
+        workers=args.workers,
+        adaptive_deadline=args.adaptive_deadline,
+        max_retries=4,
+    )
+    fcfg = FleetConfig(replicas=args.replicas, max_version_lag=args.max_lag, server=scfg)
+    t0 = time.perf_counter()
+    fleet = RMQFleet.build(
+        args.engine,
+        jnp.asarray(x),
+        config=fcfg,
+        durable_root=args.restore,
+        **_build_kwargs(args, spec),
+    )
+    base_vid = fleet.head_vid
+    fleet.warmup()
+    print(
+        f"[{args.engine} x{args.replicas}] fleet build+warmup "
+        f"{(time.perf_counter() - t0)*1e3:.1f} ms (threshold {fleet.threshold}, "
+        f"lag bound {fcfg.max_version_lag}, "
+        f"affinities {list(fcfg.resolved_affinities())})"
+    )
+
+    upd_futs = []
+    sess = fleet.session()
+
+    def mutator():
+        # Same open-loop Poisson mutator as the single-server path, but each
+        # batch rolls out fleet-wide through the session (read-your-writes).
+        mrng = np.random.default_rng(77)
+        for i in range(args.mutate):
+            if args.mutate_rate > 0:
+                time.sleep(mrng.exponential(1.0 / args.mutate_rate))
+            cur_n = fleet.head_n
+            log = update_mod.DeltaLog()
+            for _ in range(3):
+                log.point(int(mrng.integers(0, cur_n)), float(mrng.random()))
+            if i % 3 == 1 and cur_n > 2:
+                a = int(mrng.integers(0, cur_n - 1))
+                log.fill(a, min(a + 63, cur_n - 1), float(mrng.random()))
+            if i % 4 == 3:
+                log.append(mrng.random(32, dtype=np.float32))
+            try:
+                upd_futs.append((log, fleet.submit_update(log, session=sess)))
+            except ServerOverloaded:
+                pass
+
+    with fleet:
+        t0 = time.perf_counter()
+        mut = None
+        if args.mutate:
+            mut = threading.Thread(target=mutator, name="mutator")
+            mut.start()
+        per_client = run_poisson_clients(
+            args.clients,
+            args.requests,
+            args.rate,
+            lambda rng, c: make_queries(rng, args.n, args.req_batch, args.dist),
+            fleet.submit,
+            seed=10_000,
+        )
+        if mut is not None:
+            mut.join()
+        done = []
+        dropped = 0
+        for out in per_client:
+            for (l, r), fut in out:
+                if fut is None:
+                    dropped += 1
+                else:
+                    done.append((l, r, fut.result(timeout=300)))
+        settled = fleet.wait_settled(timeout=300)
+        wall = time.perf_counter() - t0
+        st = fleet.stats()
+
+    # Per-version host oracles, exactly as _run_async: the fleet assigns vids
+    # in submission order, so the replay below matches every replica.
+    oracles = {base_vid: np.asarray(x)}
+    patched = rebuilt = 0
+    if upd_futs:
+        xm = np.asarray(x).copy()
+        for log, fut in upd_futs:
+            res = fut.result(timeout=300)
+            xm = log.coalesce(xm.shape[0], xm.dtype).apply_numpy(xm)
+            oracles[res.version] = xm.copy()
+            patched += res.patched
+            rebuilt += not res.patched
+
+    served = len(done)
+    mismatches = 0
+    for l, r, res in done:
+        ox = oracles[res.version if res.version is not None else base_vid]
+        gold = ref.rmq_ref(ox, l, r)
+        if not (np.array_equal(res.idx, gold) and np.array_equal(res.val, ox[gold])):
+            mismatches += 1
+
+    print(
+        f"[fleet {args.engine} x{args.replicas}] {args.clients} clients x "
+        f"{args.requests} reqs x {args.req_batch} RMQs ({args.dist} ranges, "
+        f"{args.rate:g} req/s/client) on {len(jax.devices())} device(s), "
+        f"{wall*1e3:.0f} ms wall"
+    )
+    print(f"  {st.summary()}")
+    if upd_futs:
+        print(
+            f"  mutate: {len(upd_futs)} rollouts ({patched} patched, {rebuilt} "
+            f"rebuilt), n {args.n} -> {fleet.head_n}, settled={settled}, "
+            f"session floor v{sess.last_vid}"
+        )
+    print(
+        f"  verify: {served - mismatches}/{served} requests bit-identical to the "
+        f"oracle of their pinned version; dropped {dropped}"
+    )
+    ok = mismatches == 0 and served > 0 and settled
+    if args.mutate:
+        ok = ok and len(upd_futs) > 0
+    return ok
+
+
 def main(argv=None) -> None:
     ap = _parser()
     args = ap.parse_args(argv)
@@ -390,6 +542,12 @@ def main(argv=None) -> None:
         )
         print(report.summary())
         if not report.ok:
+            raise SystemExit(1)
+        return
+    if args.replicas > 1:
+        # Outside any global mesh context: the fleet carves its own disjoint
+        # per-replica device groups (serve.fleet.RMQFleet.build).
+        if not _run_fleet(args, spec, x):
             raise SystemExit(1)
         return
     ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()

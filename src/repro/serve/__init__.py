@@ -27,13 +27,32 @@ from .server import (
     ServeStats,
     ServerClosed,
     ServerOverloaded,
+    StaleVersion,
 )
 from .workload import make_queries, poisson_interarrivals, run_poisson_clients
+
+# Fleet symbols resolve lazily (PEP 562): ``fleet`` is also a runnable soak
+# (``python -m repro.serve.fleet``), and importing it eagerly here would
+# double-import it under runpy.
+_FLEET_EXPORTS = ("FleetConfig", "FleetSession", "FleetStats", "RMQFleet")
+
+
+def __getattr__(name):
+    if name in _FLEET_EXPORTS:
+        from . import fleet
+
+        return getattr(fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "DeadlineExceeded",
     "EngineFailure",
+    "FleetConfig",
+    "FleetSession",
+    "FleetStats",
     "MicroBatch",
+    "RMQFleet",
     "RMQServer",
     "RequestResult",
     "RequestTiming",
@@ -41,6 +60,7 @@ __all__ = [
     "ServeStats",
     "ServerClosed",
     "ServerOverloaded",
+    "StaleVersion",
     "bucket",
     "coalesce",
     "make_queries",

@@ -44,8 +44,27 @@ class MicroBatch(NamedTuple):
 
 
 def coalesce(ls: Sequence[np.ndarray], rs: Sequence[np.ndarray]) -> MicroBatch:
-    """Concatenate per-request (l, r) in arrival order and pad to the bucket."""
-    sizes = [np.asarray(a).shape[0] for a in ls]
+    """Concatenate per-request (l, r) in arrival order and pad to the bucket.
+
+    Raises ``ValueError`` on a malformed request set: `ls`/`rs` of different
+    lengths, or any request whose l and r arrays are not equal-length 1-D.
+    Sizing the batch from `ls` alone while iterating ``zip(ls, rs)`` used to
+    turn such mismatches into zero-filled slots silently answered as (0, 0)
+    RMQs — wrong answers, not an error.
+    """
+    if len(ls) != len(rs):
+        raise ValueError(
+            f"coalesce: {len(ls)} l-arrays vs {len(rs)} r-arrays (must match)"
+        )
+    ls = [np.asarray(a) for a in ls]
+    rs = [np.asarray(a) for a in rs]
+    for i, (la, ra) in enumerate(zip(ls, rs)):
+        if la.ndim != 1 or ra.ndim != 1 or la.shape != ra.shape:
+            raise ValueError(
+                f"coalesce: request {i} l/r must be equal-length 1-D arrays, "
+                f"got shapes {la.shape} and {ra.shape}"
+            )
+    sizes = [a.shape[0] for a in ls]
     b = int(sum(sizes))
     bp = bucket(b)
     l = np.zeros(bp, np.int32)

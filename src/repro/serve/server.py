@@ -74,10 +74,19 @@ __all__ = [
     "ServeStats",
     "ServerClosed",
     "ServerOverloaded",
+    "StaleVersion",
 ]
 
 _INT32_MAX = np.iinfo(np.int32).max
 _STOP = object()
+
+# On the CPU host platform, two overlapping executions of a mesh-sharded
+# query deadlock: each run's cross-device AllReduce parks 8 rendezvous
+# participants on the shared intra-op pool and neither set can complete.
+# ONE process-wide gate — replica fleets run several servers over carved
+# device groups, and two *servers'* sharded launches deadlock exactly the
+# way two workers' do (the groups still share the host thread pool).
+_CPU_MESH_LAUNCH_GATE = threading.Lock()
 
 
 class ServerClosed(RuntimeError):
@@ -111,6 +120,14 @@ class DeadlineExceeded(RuntimeError):
     answered it (in queue, or across too many retries)."""
 
 
+class StaleVersion(RuntimeError):
+    """``submit(min_version=V)`` on a server still serving a version < V.
+
+    The read-your-writes signal: a fleet front door catches this and routes
+    the request to (or waits for) a replica that has published V.
+    """
+
+
 @dataclass(frozen=True)
 class ServeConfig:
     deadline_s: float = 2e-3  # max coalescing wait for the oldest request
@@ -132,6 +149,11 @@ class ServeConfig:
     breaker_cooldown_s: float = 0.05  # open time before a half-open health probe
     worker_backoff_s: float = 0.01  # first restart delay for a crashed worker
     worker_backoff_max_s: float = 1.0  # exponential backoff cap
+    # Fleet routing hint: which query regime this server's pool is hot for
+    # ("short" = blocked/kernel path, "long" = sparse-table path, None =
+    # no affinity). Warmup compiles the hot regime first, and the fleet
+    # front door routes matching batches here (DESIGN.md §11).
+    regime_affinity: Optional[str] = None
 
     def __post_init__(self):
         if self.deadline_s < 0 or self.max_batch < 1 or self.max_pending < 1 or self.workers < 1:
@@ -153,6 +175,10 @@ class ServeConfig:
             raise ValueError(f"invalid ServeConfig: {self}")
         if self.request_timeout_s is not None and self.request_timeout_s <= 0:
             raise ValueError(f"request_timeout_s must be > 0 or None: {self}")
+        if self.regime_affinity not in (None, "short", "long"):
+            raise ValueError(
+                f"regime_affinity must be None, 'short', or 'long': {self.regime_affinity!r}"
+            )
 
     def deadline_bounds(self) -> Tuple[float, float]:
         """(min, max) the adaptive deadline moves within."""
@@ -324,19 +350,17 @@ class RMQServer:
                 restore, mesh=mesh, axis_names=axis_names, fault=fault_plan
             )
         self._online = online
-        # On the CPU host platform, two overlapping executions of a
-        # mesh-sharded query deadlock: each run's cross-device AllReduce
-        # parks 8 rendezvous participants on the shared intra-op pool and
-        # neither set can complete. Serialize primary launches there —
-        # execution fully drains (np.asarray) before the gate releases.
-        # Real accelerators queue per-device and skip the gate.
+        # Serialize mesh-sharded launches on CPU through the process-wide
+        # gate (see _CPU_MESH_LAUNCH_GATE) — execution fully drains
+        # (np.asarray) before the gate releases. Real accelerators queue
+        # per-device and skip the gate.
         self._launch_gate: Optional[threading.Lock] = None
         spec = getattr(online, "spec", None)
         if spec is not None and getattr(spec, "needs_mesh", False):
             import jax
 
             if jax.default_backend() == "cpu":
-                self._launch_gate = threading.Lock()
+                self._launch_gate = _CPU_MESH_LAUNCH_GATE
         if online is not None:
             # Warmup / direct path: answer against the then-current version.
             def query_fn(l, r):
@@ -397,6 +421,17 @@ class RMQServer:
     @property
     def config(self) -> ServeConfig:
         return self._cfg
+
+    @property
+    def online(self):
+        """The OnlineEngine/DurableEngine this server serves (None for bare
+        query_fn servers). Fleet routing reads ``online.current_vid`` here."""
+        return self._online
+
+    @property
+    def affinity(self) -> Optional[str]:
+        """The regime this server's pool is hot for (``ServeConfig``)."""
+        return self._cfg.regime_affinity
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -478,7 +513,13 @@ class RMQServer:
         n = self._cfg.n
         for s in sizes:
             if self._warmup_bounds is not None:
-                for l, r in self._warmup_bounds(s):
+                probes = list(self._warmup_bounds(s))
+                if self._cfg.regime_affinity == "long":
+                    # Hot-pool affinity: compile the affinity regime first so
+                    # a replica's first real batch hits a warm cache even if
+                    # warmup is cut short. Probes come short-regime-first.
+                    probes.reverse()
+                for l, r in probes:
                     self._query_fn(l, r)
                 continue
             zeros = np.zeros(s, np.int32)
@@ -488,18 +529,33 @@ class RMQServer:
 
     # -- client API ---------------------------------------------------------
 
-    def submit(self, l, r) -> Future:
+    def submit(self, l, r, *, min_version: Optional[int] = None) -> Future:
         """Enqueue one client request of (l, r) query bounds -> Future.
 
         The future resolves to a ``RequestResult`` whose idx/val line up
         elementwise with the submitted bounds. Raises ``ServerOverloaded``
         when admission control rejects (backpressure), ``ServerClosed`` after
         ``close()``, and ``ValueError``/``TypeError`` on malformed bounds.
+
+        ``min_version`` (online servers) is the session token's floor: if
+        this server's engine has not yet published version ``min_version``,
+        raise ``StaleVersion`` instead of enqueueing. Version ids are
+        monotone and batches pin the version current at flush time, so
+        passing the check at submit time guarantees the response is answered
+        at a version >= ``min_version`` — including across automatic retries.
         """
         if self._closed:
             raise ServerClosed("submit() on a closed server")
         if not self._started:
             raise ServerClosed("submit() before start()")
+        if min_version is not None:
+            if self._online is None:
+                raise ValueError("min_version needs a server with an OnlineEngine")
+            cur = self._online.current_vid
+            if cur < min_version:
+                raise StaleVersion(
+                    f"server at version {cur}, request requires >= {min_version}"
+                )
         l = np.asarray(l)
         r = np.asarray(r)
         if l.shape != r.shape or l.ndim != 1:
@@ -563,7 +619,10 @@ class RMQServer:
             raise ServerClosed("submit_update() on a closed server")
         if not self._started:
             raise ServerClosed("submit_update() before start()")
-        if not len(deltas):
+        # Emptiness: DeltaBatch is a NamedTuple, so len() would count its
+        # *fields* (always truthy) — use the op count both types expose.
+        n_ops = getattr(deltas, "n_ops", None)
+        if not (len(deltas) if n_ops is None else n_ops):
             raise ValueError("submit_update() with an empty delta log")
         req = _UpdateReq(deltas, time.perf_counter())
         with self._lock:

@@ -80,7 +80,10 @@ def run_poisson_clients(
     out: List[List[Tuple[tuple, Optional[object]]]] = [[] for _ in range(n_clients)]
 
     def client(c: int) -> None:
-        rng = np.random.default_rng(seed + c)
+        # Sequence seeding: (seed, c) keys a distinct stream per (run, client).
+        # The old `seed + c` collides across runs — (seed=0, client=1) and
+        # (seed=1, client=0) replayed identical traffic.
+        rng = np.random.default_rng([seed, c])
         for gap in poisson_interarrivals(rng, rate_hz, requests):
             if gap > 0:
                 time.sleep(gap)

@@ -94,6 +94,10 @@ class UpdateResult(NamedTuple):
     n_appended: int  # appended elements
     seconds: float  # apply wall time (patch + publish material)
     touched_shards: int = 1  # structure shards owning >= 1 changed position
+    # Host->device bytes this publish uploaded (single-host engines with the
+    # windowed-COW publish; 0 = untracked — mesh engines scatter replicated
+    # (pos, val) arrays inside shard_map, already O(batch) upload).
+    publish_bytes: int = 0
 
 
 # Module-level jitted query closures for published hybrid versions: binding a
@@ -119,6 +123,136 @@ def _block_state(m: BlockMirror) -> BlockRMQ:
     )
 
 
+# --- windowed copy-on-write publish ------------------------------------------
+#
+# A publish installs fresh device leaves for the next MVCC version. Uploading
+# every host mirror in full costs ~O(n log n) host->device bytes for an
+# O(log n)-window point patch (the ROADMAP carried-forward); instead each
+# leaf keeps its current device array and a publish splices only the patched
+# windows into it with one fused jit of chained dynamic_update_slice ops.
+# The previous array is NOT donated — it belongs to a published version that
+# pinned queries may still hold — so XLA materializes the copy device-side:
+# COW is preserved while only the window bytes cross the host->device
+# boundary. Window lengths are padded to powers of two (the padding uploads
+# unchanged-but-correct mirror content) so the jit cache stays bounded at
+# ~log2(n) shapes per leaf.
+
+
+def _cow_splice(dev, wins, starts):
+    for w, st in zip(wins, starts):
+        dev = jax.lax.dynamic_update_slice(dev, w, st)
+    return dev
+
+
+_cow_splice_jit = jax.jit(_cow_splice)
+
+
+def _padded_span(a: int, b: int, m: int) -> Tuple[int, int]:
+    """Inclusive [a, b] -> (start, pow2 length), shifted left to fit in m."""
+    ln = b - a + 1
+    p = 1 << (ln - 1).bit_length()
+    if p >= m:
+        return 0, m
+    return min(a, m - p), p
+
+
+class _CowLeaf:
+    """One device-resident structure leaf published copy-on-write.
+
+    ``full(host)`` re-uploads the mirror (shape changed); ``splice`` /
+    ``splice_rows`` upload only the padded patch windows and splice them
+    into the previous device array. Either way the uploaded byte count
+    accumulates into the shared ``counter`` (an UpdateResult.publish_bytes
+    source) and ``dev`` is the leaf for the next version.
+    """
+
+    __slots__ = ("dev", "_counter")
+
+    def __init__(self, dev, counter):
+        self.dev = dev
+        self._counter = counter
+
+    def full(self, host):
+        self.dev = jnp.asarray(host)
+        self._counter["bytes"] += int(self.dev.nbytes)
+        return self.dev
+
+    def splice(self, host, spans):
+        """``spans``: (row, a, b) windows — row=None for a 1-D leaf."""
+        if not spans:
+            return self.dev
+        m = int(host.shape[-1])
+        wins, starts = [], []
+        for row, a, b in spans:
+            s, p = _padded_span(a, b, m)
+            if row is None:
+                w = jnp.asarray(host[s : s + p])
+                starts.append((np.int32(s),))
+            else:
+                w = jnp.asarray(host[row : row + 1, s : s + p])
+                starts.append((np.int32(row), np.int32(s)))
+            wins.append(w)
+            self._counter["bytes"] += int(w.nbytes)
+        self.dev = _cow_splice_jit(self.dev, tuple(wins), tuple(starts))
+        return self.dev
+
+    def splice_rows(self, host, runs):
+        """``runs``: inclusive (a, b) row ranges of a 2-D leaf (full width)."""
+        if not runs:
+            return self.dev
+        nrows = int(host.shape[0])
+        wins, starts = [], []
+        for a, b in runs:
+            s, p = _padded_span(a, b, nrows)
+            w = jnp.asarray(host[s : s + p])
+            wins.append(w)
+            starts.append((np.int32(s), np.int32(0)))
+            self._counter["bytes"] += int(w.nbytes)
+        self.dev = _cow_splice_jit(self.dev, tuple(wins), tuple(starts))
+        return self.dev
+
+
+class _BlockLeaves:
+    """The four device leaves of a ``BlockRMQ``, published copy-on-write."""
+
+    def __init__(self, m: BlockMirror, counter, state: Optional[BlockRMQ] = None):
+        if state is None:  # restore: seed from the mirror (no argmin rebuild)
+            bv = jnp.asarray(m.bmin_val)
+            state = BlockRMQ(
+                x_blocks=jnp.asarray(m.x_blocks),
+                bmin_val=bv,
+                bmin_gidx=jnp.asarray(m.bmin_gidx),
+                st=SparseTable(idx=jnp.asarray(m.st_idx), x=bv),
+            )
+        self.xb = _CowLeaf(state.x_blocks, counter)
+        self.bv = _CowLeaf(state.bmin_val, counter)
+        self.bg = _CowLeaf(state.bmin_gidx, counter)
+        self.bst = _CowLeaf(state.st.idx, counter)
+
+    def state(self) -> BlockRMQ:
+        return BlockRMQ(
+            x_blocks=self.xb.dev,
+            bmin_val=self.bv.dev,
+            bmin_gidx=self.bg.dev,
+            st=SparseTable(idx=self.bst.dev, x=self.bv.dev),
+        )
+
+    def publish(self, m: BlockMirror) -> BlockRMQ:
+        """Refresh the leaves from the just-patched mirror, windowed."""
+        if m.last_block_runs is None:  # block count grew: shapes changed
+            self.xb.full(m.x_blocks)
+            self.bv.full(m.bmin_val)
+            self.bg.full(m.bmin_gidx)
+            self.bst.full(m.st_idx)
+        else:
+            runs1d = [(None, a, b) for a, b in m.last_block_runs]
+            self.xb.splice_rows(m.x_blocks, m.last_block_runs)
+            self.bv.splice(m.bmin_val, runs1d)
+            self.bg.splice(m.bmin_gidx, runs1d)
+            self.bst.splice(m.st_idx, m.last_st_windows)
+        return self.state()
+
+
 class _Impl(NamedTuple):
     """One engine's online hooks: the resolved plan, the initial state,
     ``patch(batch, prev_state) -> (next_state, was_incremental)``, plus the
@@ -134,6 +268,9 @@ class _Impl(NamedTuple):
     patch: Callable
     snapshot: Optional[Callable] = None
     array: Optional[Callable] = None
+    # () -> int: host->device bytes the last patch's publish uploaded (the
+    # windowed-COW engines); None = untracked (UpdateResult reports 0).
+    publish_bytes: Optional[Callable] = None
 
 
 # --- single-host implementations --------------------------------------------
@@ -147,18 +284,30 @@ class _Impl(NamedTuple):
 
 def _sparse_table_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
     plan = build_mod.plan_for("sparse_table", x.shape[0])
+    pub = {"bytes": 0}
     if snap is None:
         state0 = build_mod.execute(plan, x)
         mirror = STMirror.from_state(state0[0])
+        idx_leaf = _CowLeaf(state0[0].idx, pub)
+        x_leaf = _CowLeaf(state0[1], pub)
     else:
         mirror = STMirror(snap["st_idx"], snap["x"])
-        xj = jnp.asarray(mirror.x)
-        state0 = (SparseTable(idx=jnp.asarray(mirror.idx), x=xj), xj)
+        idx_leaf = _CowLeaf(jnp.asarray(mirror.idx), pub)
+        x_leaf = _CowLeaf(jnp.asarray(mirror.x), pub)
+        state0 = (SparseTable(idx=idx_leaf.dev, x=x_leaf.dev), x_leaf.dev)
 
     def patch(batch: DeltaBatch, prev):
+        pub["bytes"] = 0
         mirror.patch(batch)
-        xj = jnp.asarray(mirror.x)
-        return (SparseTable(idx=jnp.asarray(mirror.idx), x=xj), xj), True
+        if mirror.last_idx_windows is None:  # grew: leaf shapes changed
+            xj = x_leaf.full(mirror.x)
+            ij = idx_leaf.full(mirror.idx)
+        else:
+            xj = x_leaf.splice(
+                mirror.x, [(None, a, b) for a, b in mirror.last_x_windows]
+            )
+            ij = idx_leaf.splice(mirror.idx, mirror.last_idx_windows)
+        return (SparseTable(idx=ij, x=xj), xj), True
 
     return _Impl(
         plan,
@@ -166,6 +315,7 @@ def _sparse_table_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
         patch,
         snapshot=lambda: {"x": mirror.x.copy(), "st_idx": mirror.idx.copy()},
         array=lambda: mirror.x.copy(),
+        publish_bytes=lambda: pub["bytes"],
     )
 
 
@@ -173,9 +323,11 @@ def _block_impl(block_size: int):
     def factory(x, mesh, axis_names, kw, snap=None) -> _Impl:
         bs = kw.get("block_size", block_size)
         plan = build_mod.plan_for("block", x.shape[0], block_size=bs)
+        pub = {"bytes": 0}
         if snap is None:
             state0 = build_mod.execute(plan, x)
             mirror = BlockMirror.from_state(state0, x.shape[0])
+            leaves = _BlockLeaves(mirror, pub, state=state0)
         else:
             mirror = BlockMirror(
                 snap["x_blocks"],
@@ -184,11 +336,13 @@ def _block_impl(block_size: int):
                 snap["st_idx"],
                 snap["x"].shape[0],
             )
-            state0 = _block_state(mirror)
+            leaves = _BlockLeaves(mirror, pub)
+            state0 = leaves.state()
 
         def patch(batch: DeltaBatch, prev):
+            pub["bytes"] = 0
             mirror.patch(batch)
-            return _block_state(mirror), True
+            return leaves.publish(mirror), True
 
         return _Impl(
             plan,
@@ -202,6 +356,7 @@ def _block_impl(block_size: int):
                 "st_idx": mirror.st_idx.copy(),
             },
             array=lambda: mirror.x_blocks.reshape(-1)[: mirror.n].copy(),
+            publish_bytes=lambda: pub["bytes"],
         )
 
     return factory
@@ -219,10 +374,9 @@ def _hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
         use_kernels=False,
     )
 
-    def _assemble(blocked_m: BlockMirror, st_m: STMirror, threshold) -> HybridRMQ:
-        xj = jnp.asarray(st_m.x)
-        blocked = _block_state(blocked_m)
-        table = SparseTable(idx=jnp.asarray(st_m.idx), x=xj)
+    pub = {"bytes": 0}
+
+    def _assemble(blocked: BlockRMQ, table: SparseTable, xj, threshold) -> HybridRMQ:
         return HybridRMQ(
             blocked=blocked,
             st=table,
@@ -237,6 +391,9 @@ def _hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
         state0 = build_mod.execute(plan, x)
         blocked_m = BlockMirror.from_state(state0.blocked, x.shape[0])
         st_m = STMirror.from_state(state0.st)
+        leaves = _BlockLeaves(blocked_m, pub, state=state0.blocked)
+        ti_leaf = _CowLeaf(state0.st.idx, pub)
+        x_leaf = _CowLeaf(state0.st.x, pub)
     else:
         blocked_m = BlockMirror(
             snap["b_x_blocks"],
@@ -246,14 +403,32 @@ def _hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
             snap["x"].shape[0],
         )
         st_m = STMirror(snap["st_idx"], snap["x"])
+        leaves = _BlockLeaves(blocked_m, pub)
+        ti_leaf = _CowLeaf(jnp.asarray(st_m.idx), pub)
+        x_leaf = _CowLeaf(jnp.asarray(st_m.x), pub)
         # The snapshot was taken under the plan's resolved threshold (the
         # restore kwargs pin it), so routing is identical to the live engine.
-        state0 = _assemble(blocked_m, st_m, plan.meta["threshold"])
+        state0 = _assemble(
+            leaves.state(),
+            SparseTable(idx=ti_leaf.dev, x=x_leaf.dev),
+            x_leaf.dev,
+            plan.meta["threshold"],
+        )
 
     def patch(batch: DeltaBatch, prev: HybridRMQ):
+        pub["bytes"] = 0
         blocked_m.patch(batch)
         st_m.patch(batch)
-        return _assemble(blocked_m, st_m, prev.threshold), True
+        blocked = leaves.publish(blocked_m)
+        if st_m.last_idx_windows is None:  # grew: full-array leaves changed shape
+            xj = x_leaf.full(st_m.x)
+            ti = ti_leaf.full(st_m.idx)
+        else:
+            xj = x_leaf.splice(
+                st_m.x, [(None, a, b) for a, b in st_m.last_x_windows]
+            )
+            ti = ti_leaf.splice(st_m.idx, st_m.last_idx_windows)
+        return _assemble(blocked, SparseTable(idx=ti, x=xj), xj, prev.threshold), True
 
     return _Impl(
         plan,
@@ -268,6 +443,7 @@ def _hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
             "b_st_idx": blocked_m.st_idx.copy(),
         },
         array=lambda: st_m.x.copy(),
+        publish_bytes=lambda: pub["bytes"],
     )
 
 
@@ -567,6 +743,11 @@ class OnlineEngine:
                 len(shard_batches(batch, layout.num_shards, layout.shard_len))
                 if layout.num_shards > 1
                 else 1
+            ),
+            publish_bytes=(
+                int(self._impl.publish_bytes())
+                if self._impl.publish_bytes is not None
+                else 0
             ),
         )
         return state

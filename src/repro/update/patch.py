@@ -27,7 +27,7 @@ grow new levels in full when ``n`` crosses a power of two.
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -77,7 +77,11 @@ def level_windows(touched: np.ndarray, w: int, m: int) -> List[Tuple[int, int]]:
 
 
 def patch_doubling(
-    idx: np.ndarray, values: np.ndarray, touched: np.ndarray, m_old: int
+    idx: np.ndarray,
+    values: np.ndarray,
+    touched: np.ndarray,
+    m_old: int,
+    windows: Optional[List[Tuple[int, int, int]]] = None,
 ) -> np.ndarray:
     """Windowed per-level repair of a doubling table's index rows.
 
@@ -87,6 +91,12 @@ def patch_doubling(
     Returns the patched (K_new, m_new) table — the same array patched in
     place when the length is unchanged, a grown copy otherwise. Bit-identical
     to ``sparse_table.build(values)``'s ``idx``.
+
+    ``windows`` (optional out-param) collects every recomputed cell range as
+    ``(k, a, b)`` inclusive column windows — the windowed-COW publish
+    (``update.engines``) uploads exactly these to the device instead of the
+    whole table. Rows that repeat the level below (``h >= m_new``) report
+    the sub-window where the level below changed.
     """
     m_new = int(values.shape[0])
     k_old = idx.shape[0]
@@ -103,6 +113,11 @@ def patch_doubling(
         h = 1 << (k - 1)
         if h >= m_new:  # window spans the whole array: rows repeat
             idx[k] = idx[k - 1]
+            if windows is not None:
+                # The repeated row differs from its old self only where the
+                # level below changed: entries at c > max(touched) cover no
+                # touched position, so [0, clamp(max touched)] suffices.
+                windows.append((k, 0, min(int(touched[-1]), m_new - 1)))
             continue
         # New levels (n crossed a power of two) have no old row: full window.
         wins = (
@@ -110,6 +125,8 @@ def patch_doubling(
             if k >= k_old
             else level_windows(touched, (1 << k) - 1, m_new)
         )
+        if windows is not None:
+            windows.extend((k, a, b) for a, b in wins)
         prev = idx[k - 1]
         for a, b in wins:
             c = np.arange(a, b + 1, dtype=np.int64)
@@ -122,11 +139,20 @@ def patch_doubling(
 
 
 class STMirror:
-    """Host mirror of a raw-array ``SparseTable`` (idx rows + values)."""
+    """Host mirror of a raw-array ``SparseTable`` (idx rows + values).
+
+    After each ``patch``, ``last_idx_windows`` / ``last_x_windows`` describe
+    which device cells a windowed-COW publish must refresh: per-level
+    ``(k, a, b)`` table windows and merged ``(a, b)`` value windows. ``None``
+    means the leaf shapes changed (the array grew) and the publish must
+    re-upload in full.
+    """
 
     def __init__(self, idx: np.ndarray, x: np.ndarray):
         self.idx = np.array(idx, np.int32)  # writable copy
         self.x = np.array(x)
+        self.last_idx_windows: Optional[List[Tuple[int, int, int]]] = None
+        self.last_x_windows: Optional[List[Tuple[int, int]]] = None
 
     @classmethod
     def from_state(cls, table) -> "STMirror":
@@ -140,7 +166,15 @@ class STMirror:
         if batch.tail.size:
             self.x = np.concatenate([self.x, batch.tail.astype(self.x.dtype)])
         self.x[batch.idx] = batch.val.astype(self.x.dtype)
-        self.idx = patch_doubling(self.idx, self.x, batch.touched(), batch.n_old)
+        grew = batch.tail.size > 0
+        wins: List[Tuple[int, int, int]] = []
+        self.idx = patch_doubling(
+            self.idx, self.x, batch.touched(), batch.n_old, windows=wins
+        )
+        self.last_idx_windows = None if grew else wins
+        self.last_x_windows = (
+            None if grew else level_windows(batch.idx, 0, self.x.shape[0])
+        )
 
 
 class BlockMirror:
@@ -157,6 +191,12 @@ class BlockMirror:
         self.bmin_gidx = np.array(bmin_gidx, np.int32)
         self.st_idx = np.array(st_idx, np.int32)
         self.n = int(n)  # logical (pre-padding) length
+        # Windowed-COW publish hints (see STMirror): merged runs of touched
+        # block rows + the block-level table's (k, a, b) windows; None when
+        # the block count grew (full re-upload). Appends *within* the padded
+        # capacity keep every leaf shape, so they stay windowed.
+        self.last_block_runs: Optional[List[Tuple[int, int]]] = None
+        self.last_st_windows: Optional[List[Tuple[int, int, int]]] = None
 
     @property
     def block_size(self) -> int:
@@ -199,5 +239,9 @@ class BlockMirror:
         lidx = np.argmin(rows, axis=1).astype(np.int32)  # leftmost, as jnp
         self.bmin_val[tb] = rows[np.arange(tb.size), lidx]
         self.bmin_gidx[tb] = (tb * bs).astype(np.int32) + lidx
-        self.st_idx = patch_doubling(self.st_idx, self.bmin_val, tb, nb_old)
+        wins: List[Tuple[int, int, int]] = []
+        self.st_idx = patch_doubling(self.st_idx, self.bmin_val, tb, nb_old, windows=wins)
+        grew = nb_new > nb_old
+        self.last_block_runs = None if grew else level_windows(tb, 0, nb_new)
+        self.last_st_windows = None if grew else wins
         self.n = batch.n_new

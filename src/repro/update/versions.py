@@ -24,9 +24,9 @@ staleness metric the serving stats report.
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, NamedTuple
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
-__all__ = ["Version", "VersionStore"]
+__all__ = ["RolloutTracker", "Version", "VersionStore"]
 
 
 class Version(NamedTuple):
@@ -113,3 +113,95 @@ class VersionStore:
         for vid in [v for v in self._versions if v != self._current]:
             if not self._pins.get(vid):
                 del self._versions[vid]
+
+
+class RolloutTracker:
+    """Min/max version-id tracking across a fleet of version stores.
+
+    Each replica registers under a key and notes every version it publishes;
+    the tracker maintains the fleet-wide min/max vid and implements the
+    **bounded-lag rollout barrier**: ``wait_to_publish(vid)`` blocks a
+    leader replica until publishing ``vid`` would keep the fleet spread
+    (max vid minus min vid) within ``max_lag``. Crashed replicas must
+    ``deregister`` so a dead store can never wedge the barrier; they
+    re-``register`` at their restored vid when they rejoin.
+
+    The front door shares the tracker's condition variable: ``wait_for``
+    lets the router sleep until some replica reaches a session's min vid
+    (read-your-writes) instead of spinning.
+    """
+
+    def __init__(self, max_lag: int = 1):
+        if max_lag < 1:
+            raise ValueError(f"max_lag must be >= 1, got {max_lag}")
+        self.max_lag = int(max_lag)
+        self._cv = threading.Condition(threading.Lock())
+        self._vids: Dict[Any, int] = {}
+        self._max_lag_seen = 0
+
+    def register(self, key, vid: int) -> None:
+        with self._cv:
+            self._vids[key] = int(vid)
+            self._record_spread_locked()
+            self._cv.notify_all()
+
+    def deregister(self, key) -> None:
+        with self._cv:
+            self._vids.pop(key, None)
+            self._cv.notify_all()
+
+    def note(self, key, vid: int) -> None:
+        """Record that replica ``key`` now serves ``vid`` (monotonic)."""
+        with self._cv:
+            if key not in self._vids:
+                return  # deregistered (crashed) mid-publish; rejoin re-seats
+            if vid > self._vids[key]:
+                self._vids[key] = int(vid)
+            self._record_spread_locked()
+            self._cv.notify_all()
+
+    def _record_spread_locked(self) -> None:
+        if self._vids:
+            spread = max(self._vids.values()) - min(self._vids.values())
+            if spread > self._max_lag_seen:
+                self._max_lag_seen = spread
+
+    @property
+    def max_lag_seen(self) -> int:
+        """Largest fleet spread ever observed (the measured version lag)."""
+        with self._cv:
+            return self._max_lag_seen
+
+    def min_vid(self) -> int:
+        with self._cv:
+            return min(self._vids.values()) if self._vids else -1
+
+    def max_vid(self) -> int:
+        with self._cv:
+            return max(self._vids.values()) if self._vids else -1
+
+    def vids(self) -> Dict[Any, int]:
+        with self._cv:
+            return dict(self._vids)
+
+    def wait_to_publish(self, vid: int, timeout: Optional[float] = None) -> bool:
+        """Block until publishing ``vid`` keeps the fleet spread <= max_lag.
+
+        Returns False on timeout. Deregistration of a trailing replica
+        unblocks waiters (its vid no longer counts toward the minimum).
+        """
+
+        def ok() -> bool:
+            if not self._vids:
+                return True
+            return vid - min(self._vids.values()) <= self.max_lag
+
+        with self._cv:
+            return self._cv.wait_for(ok, timeout)
+
+    def wait_for(
+        self, predicate: Callable[[Dict[Any, int]], bool], timeout: Optional[float] = None
+    ) -> bool:
+        """Block until ``predicate({key: vid})`` holds; False on timeout."""
+        with self._cv:
+            return self._cv.wait_for(lambda: predicate(dict(self._vids)), timeout)

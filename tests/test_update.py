@@ -553,3 +553,53 @@ def test_sharded_patch_bit_identical_on_8_device_mesh():
     from-scratch distributed build of the mutated array."""
     out = _run_child(_CHILD_SHARDED)
     assert "SHARDED_UPDATE_OK" in out.stdout, out.stderr[-3000:]
+
+
+def test_windowed_cow_publish_tracks_patch_windows():
+    """Publish-cost regression: a point write used to re-upload every leaf in
+    full. The windowed-COW publish must upload only the patched windows —
+    orders of magnitude less than the structure — while appends that grow the
+    leaves legitimately fall back to a full upload."""
+    n = 4096
+    x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+    for engine in ("sparse_table", "block128", "hybrid"):
+        online = update.make_online(engine, jnp.asarray(x))
+        full_bytes = sum(
+            leaf.nbytes
+            for leaf in jax.tree_util.tree_leaves(online.store.current.state)
+            if hasattr(leaf, "nbytes")
+        )
+        log = update.DeltaLog()
+        log.point(n // 2, -123.0)
+        res = online.apply(log)
+        assert res.patched
+        assert 0 < res.publish_bytes < full_bytes // 4, (
+            engine, res.publish_bytes, full_bytes,
+        )
+        # Growth changes leaf shapes: the publish re-uploads in full, and the
+        # byte count says so (no silent undercount).
+        log2 = update.DeltaLog()
+        log2.append(np.full(8, 9.0, np.float32))
+        res2 = online.apply(log2)
+        assert res2.publish_bytes > res.publish_bytes
+
+
+def test_windowed_cow_publish_preserves_old_versions():
+    """COW at the leaf level: a pinned old version must keep answering from
+    its own arrays after windowed publishes splice new ones."""
+    n = 1024
+    x = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    online = update.make_online("sparse_table", jnp.asarray(x))
+    ver0 = online.pin()
+    log = update.DeltaLog()
+    log.fill(0, 255, -50.0)
+    online.apply(log)
+    l = np.array([0], np.int32)
+    r = np.array([n - 1], np.int32)
+    idx0, _ = online.query(ver0.state, l, r)
+    assert int(idx0[0]) == int(np.argmin(x))  # pre-update oracle
+    ver1 = online.pin()
+    idx1, _ = online.query(ver1.state, l, r)
+    assert 0 <= int(idx1[0]) <= 255  # the fill owns the minimum now
+    online.release(ver0.vid)
+    online.release(ver1.vid)

@@ -33,13 +33,20 @@
 #    bit-identical to the live engine AND to a from-scratch rebuild —
 #    plus the journaling-overhead bar: <= 10% added request p99 with WAL
 #    journaling on vs off in the no-fault serve benchmark.
-# 8. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+# 8. fleet gate: the replicated-serving soak on 8 fake devices
+#    (repro.serve.fleet) — 3 sharded_hybrid replicas on disjoint device
+#    groups behind the regime-routing front door, mutate-while-serving
+#    under bounded-lag rollouts with a mid-run replica crash + durable
+#    restore; exits 1 unless every response is oracle-verified against its
+#    version, no request is lost, read-your-writes sessions never see a
+#    stale floor, and the observed version lag stays <= the bound.
+# 9. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
 #    CPU — Pallas kernels validate through the test suite; the smoke catches
 #    perf-path regressions like import errors, shape breaks, or a suite that
 #    stopped emitting rows).
 #
-# Perf baseline: BENCH_PR6.json (benchmarks/run.py --json; adds the
-# fault_overhead suite and records git rev + fault seed in _meta);
+# Perf baseline: BENCH_PR7.json (benchmarks/run.py --json; adds the
+# fleet_scaling suite and records git rev + fault seed in _meta);
 # refresh per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -140,6 +147,13 @@ print(f"serve p99: plain {plain*1e3:.2f} ms, journaled {journ*1e3:.2f} ms "
 assert over <= 0.10, f"journaling p99 overhead {over*100:+.1f}% above the 10% bar"
 PY
 
+echo "== fleet gate (8 fake devices, 3 replicas, bounded-lag rollouts + crash-restore) =="
+python -m pytest -q tests/test_fleet.py \
+    -k "lag_bound or read_your_writes or regime_routing or crash"
+XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 600 \
+    python -m repro.serve.fleet --engine sharded_hybrid --replicas 3 \
+    --n 4096 --requests 48 --updates 4 --max-lag 2
+
 echo "== perf smoke (fig12, smoke sizes) =="
 out=$(timeout 300 python -m benchmarks.run --only fig12 --smoke)
 echo "$out"
@@ -148,4 +162,4 @@ if [ "$rows" -lt 4 ]; then
     echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
     exit 1
 fi
-echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, chaos gate green, fig12 smoke emitted $rows rows"
+echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, chaos gate green, fleet gate green, fig12 smoke emitted $rows rows"
