@@ -1,0 +1,100 @@
+"""Kernel-autotuner suite: tuned vs default megakernel launch geometry.
+
+Sweeps the ``repro.kernels.tuning`` config product once per size, then
+reports the tuned winner against the deterministic default config **from the
+same sweep's measurements**, so the central claim — tuned is never slower
+than default — is checked on identical builds and query batches. A second
+pass exercises the persistent cache: the winner is stored, re-loaded under
+the read-only ``"cached"`` policy, and the re-load is asserted to perform
+zero timing sweeps (the cache-hit path is counted at the ``hybrid._measure``
+seam, the only place a sweep can time anything).
+
+Off-TPU the kernels run in interpret mode — absolute wall-clock is
+emulation, so sizes stay small and the tolerance is wide; the cache
+round-trip and the tuned<=default ordering are backend-independent.
+
+Every run records its cache hit/miss outcomes in ``CACHE_STATE`` so the
+harness can stamp them into the results JSON ``_meta``.
+"""
+
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+import jax
+
+from repro.core import calib_cache, hybrid
+from repro.kernels import tuning
+
+from . import common
+from .common import emit
+
+# name -> "hit" | "miss", refreshed per run(); run.py copies it into _meta.
+CACHE_STATE: dict = {}
+
+
+def run():
+    CACHE_STATE.clear()
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    # Interpret-mode grid steps cost milliseconds each, so off-TPU points
+    # stay tiny; the orderings under test are size-independent.
+    if common.SMOKE or not on_tpu:
+        points = [(1 << 12, 64)]
+        repeats = 1
+        block_size = 128  # pin: one build per point keeps smoke seconds-fast
+    else:
+        points = [(1 << 16, 4096), (1 << 20, 4096)]
+        repeats = 3
+        block_size = None  # full product, block sizes included
+    tol = 1.05 if on_tpu else 1.25
+
+    with tempfile.TemporaryDirectory() as td:
+        cache = Path(td) / "calibration.json"
+        for n, batch in points:
+            results = tuning.sweep(
+                n, batch, block_size=block_size, repeats=repeats, interpret=interpret
+            )
+            best_cfg, best_t = min(results, key=lambda cv: cv[1])
+            bs = block_size if block_size is not None else 128
+            default = tuning.default_config(bs)
+            resolved = default._replace(fetch=tuning.resolve_fetch("auto", -(-n // bs)))
+            default_t = dict(results)[resolved]
+
+            tag = f"tile={best_cfg.tile}/fetch={best_cfg.fetch}/bs={best_cfg.block_size}"
+            verdict = "PASS" if best_t <= default_t * tol else "FAIL"
+            emit(f"kernel_tuning/default/n={n}", default_t / batch, "")
+            emit(
+                f"kernel_tuning/tuned/n={n}",
+                best_t / batch,
+                f"{tag}_vs_default_{verdict}",
+            )
+
+            # Cache lifecycle: store the winner, then prove the cached policy
+            # re-loads it with zero timing sweeps.
+            key = tuning.tuning_key(n, batch)
+            CACHE_STATE[key] = (
+                "hit" if calib_cache.load_entry(key, cache) is not None else "miss"
+            )
+            calib_cache.store_entry(key, dict(best_cfg._asdict()), cache)
+            sweeps = []
+            orig = hybrid._measure
+            hybrid._measure = lambda *a, **k: sweeps.append(a) or orig(*a, **k)
+            try:
+                cached = tuning.get_config(
+                    n, batch, policy="cached", block_size=block_size, path=cache
+                )
+            finally:
+                hybrid._measure = orig
+            ok = cached == best_cfg and not sweeps
+            CACHE_STATE[key] = "hit" if ok else CACHE_STATE[key]
+            emit(
+                f"kernel_tuning/cache/n={n}",
+                0.0,
+                f"roundtrip={'PASS' if ok else 'FAIL'}_retimings={len(sweeps)}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -20,7 +20,7 @@ def main() -> None:
         default="",
         help="comma list: fig12,fig13,fig10,fig14,table2,build_mem,roofline,"
         "crossover,sharded_hybrid,serve_latency,update_throughput,"
-        "fault_overhead,fleet_scaling",
+        "fault_overhead,fleet_scaling,kernel_tuning",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -40,6 +40,7 @@ def main() -> None:
         fleet_scaling,
         heatmap,
         hybrid_crossover,
+        kernel_tuning,
         memory_usage,
         mesh_scaling,
         roofline_report,
@@ -65,6 +66,7 @@ def main() -> None:
         "update_throughput": update_throughput.run,
         "fault_overhead": fault_overhead.run,
         "fleet_scaling": fleet_scaling.run,
+        "kernel_tuning": kernel_tuning.run,
     }
     if only:
         unknown = only - set(suites)
@@ -81,18 +83,25 @@ def main() -> None:
         for name, us in common.RESULTS.items():
             suite, _, rest = name.partition("/")
             by_suite.setdefault(suite, {})[rest or suite] = us
-        # Provenance: which tree produced these numbers and which fault
-        # schedule the injected-fault measurements used.
+        # Provenance: which tree and backend produced these numbers, which
+        # fault schedule the injected-fault measurements used, and whether
+        # the autotune cache was warm (a hit means zero timing sweeps ran).
         try:
             rev = subprocess.run(
                 ["git", "rev-parse", "HEAD"], capture_output=True, text=True, timeout=10
             ).stdout.strip() or None
         except OSError:
             rev = None
+        import jax
+
         by_suite["_meta"] = {
             "git_rev": rev,
             "fault_seed": fault_overhead.FAULT_SEED,
             "smoke": bool(args.smoke),
+            "backend": jax.default_backend(),
+            "device_count": len(jax.devices()),
+            "jax_version": jax.__version__,
+            "autotune_cache": dict(kernel_tuning.CACHE_STATE) or None,
         }
         with open(args.json, "w") as f:
             json.dump(by_suite, f, indent=2, sort_keys=True)

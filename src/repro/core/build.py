@@ -160,6 +160,23 @@ def _resolve_threshold(
     )
 
 
+def _resolve_kernel_config(kernel_config, n: int, block_size: int | None = None):
+    """The megakernel launch-geometry policy (mirrors ``_resolve_threshold``).
+
+    ``None`` -> the deterministic default config (never touches machine
+    state); ``"cached"`` -> the persistent cache, default fallback, never
+    measuring; ``"tuned"`` -> the cache, sweeping via ``tuning.autotune``
+    only on a miss; a ``tuning.KernelConfig`` (or compatible tuple) pins it.
+    ``block_size`` pins that knob when the caller's structure already
+    committed to one.
+    """
+    from repro.kernels import tuning  # deferred: keep core importable alone
+
+    if kernel_config is None or isinstance(kernel_config, str):
+        return tuning.get_config(n, policy=kernel_config, block_size=block_size)
+    return tuning.KernelConfig(*kernel_config)
+
+
 # --- pipeline execution -----------------------------------------------------
 
 
@@ -342,23 +359,51 @@ def _plan_exhaustive(n, *, mesh=None, axis_names=None):
 
 
 @_planner("fused")
-def _plan_fused(n, *, mesh=None, axis_names=None, block_size=128):
+def _plan_fused(n, *, mesh=None, axis_names=None, block_size=None, kernel_config=None):
+    cfg = _resolve_kernel_config(kernel_config, n, block_size)
+    # A tuned config may carry its own block size; an explicit block_size
+    # pins the sweep, so the two can never disagree.
+    bs = block_size if block_size is not None else cfg.block_size
+
     def build_fn(x):
         from repro import kernels
 
-        return kernels.ops.build(x, block_size)
+        return kernels.ops.build(x, bs)
 
-    return _single_host_plan("fused", n, build_fn, meta={"block_size": block_size})
+    def fin(state):
+        state["result"] = (state["built"], cfg)
+        return state
+
+    plan = _single_host_plan(
+        "fused", n, build_fn, meta={"block_size": bs, "kernel_config": cfg}
+    )
+    stages = tuple(
+        BuildStage("finalize", fin) if s.name == "finalize" else s for s in plan.stages
+    )
+    return plan._replace(stages=stages)
 
 
 @_planner("hybrid")
 def _plan_hybrid(
-    n, *, mesh=None, axis_names=None, block_size=128, threshold=None, use_kernels=None
+    n,
+    *,
+    mesh=None,
+    axis_names=None,
+    block_size=128,
+    threshold=None,
+    use_kernels=None,
+    kernel_config=None,
 ):
     if use_kernels is None:
         use_kernels = jax.default_backend() == "tpu"
     thr = _resolve_threshold(
         threshold, n, block_size, calibrate_kw={"use_kernels": use_kernels}
+    )
+    # The megakernel's launch geometry, swept within this build's block size
+    # (the hybrid's structures are committed to it). Resolved only when the
+    # short path actually runs the kernels.
+    cfg = (
+        _resolve_kernel_config(kernel_config, n, block_size) if use_kernels else None
     )
     layout = ShardLayout(n=n, n_pad=n, num_shards=1, shard_len=n)
 
@@ -380,7 +425,8 @@ def _plan_hybrid(
         if use_kernels:
             from repro import kernels
 
-            short_fn = lambda l, r: kernels.ops.query(blocked, l, r)  # jitted inside
+            # jitted inside; closes over the tuned launch geometry
+            short_fn = lambda l, r: kernels.ops.query(blocked, l, r, config=cfg)
         else:
             short_fn = jax.jit(lambda l, r: block_rmq.query(blocked, l, r))
 
@@ -407,7 +453,12 @@ def _plan_hybrid(
             BuildStage("local_build", local),
             BuildStage("finalize", fin),
         ),
-        {"block_size": block_size, "threshold": thr, "use_kernels": bool(use_kernels)},
+        {
+            "block_size": block_size,
+            "threshold": thr,
+            "use_kernels": bool(use_kernels),
+            "kernel_config": cfg,
+        },
     )
 
 

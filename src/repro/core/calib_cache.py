@@ -1,4 +1,4 @@
-"""Persistent calibration-threshold cache (ROADMAP's calibration-cache item).
+"""Persistent measurement cache: calibration thresholds + tuned kernel configs.
 
 ``hybrid.calibrate`` measures the blocked-vs-sparse-table crossover by timing
 both constituent paths — seconds of wall-clock per (n, block_size) point.
@@ -9,12 +9,21 @@ hit the cache and only a first-ever configuration pays the measurement.
 
 File format (atomic rename on write):
 
-    {"version": 1, "entries": {"n=1048576/bs=128/backend=tpu/ndev=8": 1024}}
+    {"version": 2, "entries": {"n=1048576/bs=128/backend=tpu/ndev=8": 1024,
+                               "kernel/n=65536/batch=4096/backend=tpu/ndev=8":
+                                   {"tile": 8, "fetch": "dma", "block_size": 128}}}
 
 Key v2: sharded measurements additionally carry the distribution mode and
 mesh shape (``.../ndev=8/mode=shard_2d/mesh=2x4``) so modes no longer share
-one threshold slot per mesh size; the file format is unchanged, and
-single-host builds keep their v1 keys (old entries stay readable).
+one threshold slot per mesh size.
+
+Cache v2 (file ``version`` 2): entries are arbitrary JSON values, not just
+int thresholds. The megakernel autotuner (``repro.kernels.tuning``) stores
+winning ``(tile, fetch, block_size)`` configs as dicts under a ``kernel/``
+key-namespace prefix, sharing the same file, atomic-write discipline, and
+staleness rules as thresholds. ``load``/``store`` stay int-typed for
+threshold callers; ``load_entry``/``store_entry`` are the generic seam.
+The version bump marks every v1 entry stale (thresholds re-measure once).
 
 A version mismatch marks every entry stale: ``load`` misses, and the next
 ``store`` drops the old entries wholesale. Corrupt or unreadable files are
@@ -40,10 +49,12 @@ __all__ = [
     "default_path",
     "get_threshold",
     "load",
+    "load_entry",
     "store",
+    "store_entry",
 ]
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
 ENV_VAR = "RMQ_CALIB_CACHE"
 
 
@@ -97,19 +108,18 @@ def _read(path: Path) -> dict:
     return entries if isinstance(entries, dict) else {}
 
 
-def load(key: str, path: str | Path | None = None) -> int | None:
-    """Cached threshold for ``key``, or None on miss/stale/corrupt."""
+def load_entry(key: str, path: str | Path | None = None):
+    """Cached JSON value for ``key``, or None on miss/stale/corrupt."""
     entries = _read(Path(path) if path is not None else default_path())
-    val = entries.get(key)
-    return int(val) if val is not None else None
+    return entries.get(key)
 
 
-def store(key: str, threshold: int, path: str | Path | None = None) -> None:
-    """Persist ``key -> threshold``, keeping other same-version entries."""
+def store_entry(key: str, value, path: str | Path | None = None) -> None:
+    """Persist ``key -> value`` (any JSON value), keeping same-version entries."""
     p = Path(path) if path is not None else default_path()
     p.parent.mkdir(parents=True, exist_ok=True)
     entries = _read(p)  # drops stale-version/corrupt content wholesale
-    entries[key] = int(threshold)
+    entries[key] = value
     fd, tmp = tempfile.mkstemp(dir=p.parent, suffix=".tmp")
     try:
         with os.fdopen(fd, "w") as f:
@@ -121,6 +131,17 @@ def store(key: str, threshold: int, path: str | Path | None = None) -> None:
         except OSError:
             pass
         raise
+
+
+def load(key: str, path: str | Path | None = None) -> int | None:
+    """Cached threshold for ``key``, or None on miss/stale/corrupt."""
+    val = load_entry(key, path)
+    return int(val) if val is not None else None
+
+
+def store(key: str, threshold: int, path: str | Path | None = None) -> None:
+    """Persist ``key -> threshold``, keeping other same-version entries."""
+    store_entry(key, int(threshold), path)
 
 
 def get_threshold(

@@ -69,6 +69,7 @@ def build(
     *,
     threshold: int | str | None = None,
     use_kernels: bool | None = None,
+    kernel_config=None,
 ) -> HybridRMQ:
     """Build both constituent engines (via the staged ``core.build`` plan).
 
@@ -77,11 +78,19 @@ def build(
     (``calib_cache``) with the sqrt(n) fallback, never measuring;
     ``"calibrated"`` -> the cache, measuring via ``calibrate`` only on a
     miss, so repeated builds of the same configuration never re-measure.
+    ``kernel_config`` is the megakernel launch-geometry policy for the
+    kernelized short path (None | "cached" | "tuned" | a
+    ``kernels.tuning.KernelConfig``), same cache lifecycle as thresholds.
     """
     from . import build as build_mod  # deferred: build.py hosts the planner
 
     return build_mod.build(
-        "hybrid", x, block_size=block_size, threshold=threshold, use_kernels=use_kernels
+        "hybrid",
+        x,
+        block_size=block_size,
+        threshold=threshold,
+        use_kernels=use_kernels,
+        kernel_config=kernel_config,
     )
 
 

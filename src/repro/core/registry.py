@@ -114,18 +114,39 @@ def _simple_serve_plan(planner: str, **fixed):
     return serve_plan
 
 
-def _kernels_engine(block_size: int) -> EngineSpec:
-    def query(s, l, r):
+def _kernels_engine(block_size: int, kernel_config=None, doc: str = "") -> EngineSpec:
+    """The fused-megakernel engine: state is ``(FusedRMQ, KernelConfig)``.
+
+    ``kernel_config`` pins the conformance-build launch geometry (the
+    ``fused128_dma`` variant forces the DMA fetch strategy so it rides every
+    oracle sweep); serving resolves the policy through the plan instead
+    (``kernel_config="cached"`` — tuned geometry with zero re-timing).
+    """
+
+    def query(state, l, r):
         from repro import kernels
 
-        return kernels.ops.query(s, l, r)
+        s, cfg = state
+        return kernels.ops.query(s, l, r, config=cfg)
+
+    def serve_plan(n, mesh, axis_names, **kw):
+        # A pinned variant serves its pin — the CLI's cached/tuned policy
+        # must not silently unpin the forced fetch strategy.
+        if kernel_config is not None:
+            kw["kernel_config"] = kernel_config
+        else:
+            kw.setdefault("kernel_config", "cached")
+        kw.setdefault("block_size", block_size)
+        return build_mod.plan_for("fused", n, mesh=mesh, axis_names=axis_names, **kw)
 
     return EngineSpec(
-        lambda x: build_mod.build("fused", x, block_size=block_size),
+        lambda x: build_mod.build(
+            "fused", x, block_size=block_size, kernel_config=kernel_config
+        ),
         query,
-        build_kwargs=frozenset({"block_size"}),
-        serve_plan=_simple_serve_plan("fused", block_size=block_size),
-        doc="fused tiled Pallas megakernel (interpret mode off-TPU)",
+        build_kwargs=frozenset({"block_size", "kernel_config"}),
+        serve_plan=serve_plan,
+        doc=doc or "fused tiled Pallas megakernel (interpret mode off-TPU)",
     )
 
 
@@ -188,14 +209,23 @@ ENGINES: dict = {
         serveable=False,
         doc="O(n)-per-query scan oracle",
     ),
-    # Fused tiled Pallas megakernel (interpret mode off-TPU).
+    # Fused tiled Pallas megakernel (interpret mode off-TPU). The _dma
+    # variant forces the bounded-VMEM per-query window fetch strategy, so
+    # both megakernel fetch paths ride every oracle sweep.
     "fused128": _kernels_engine(128),
+    "fused128_dma": _kernels_engine(
+        128,
+        kernel_config=(8, "dma", 128),  # (tile, fetch, block_size) pinned
+        doc="fused megakernel, DMA window fetch (bounded VMEM, any nb)",
+    ),
     # Range-adaptive dispatcher over blocked + sparse-table paths.
     "hybrid": EngineSpec(
         lambda x: build_mod.build("hybrid", x, block_size=128),
         hybrid.query,
-        build_kwargs=frozenset({"block_size", "threshold"}),
-        serve_plan=_simple_serve_plan("hybrid", block_size=128, threshold="cached"),
+        build_kwargs=frozenset({"block_size", "threshold", "kernel_config"}),
+        serve_plan=_simple_serve_plan(
+            "hybrid", block_size=128, threshold="cached", kernel_config="cached"
+        ),
         updatable=True,
         doc="range-adaptive blocked/sparse-table crossover dispatcher",
     ),

@@ -1,34 +1,47 @@
-"""Pallas TPU megakernel: tiled, fully-fused blocked-RMQ query.
+"""Pallas TPU megakernel v2: tiled, fully-fused blocked-RMQ query.
 
 One ``pallas_call`` answers a query batch end-to-end — left partial, right
 partial, *and* the O(1) sparse-table interior candidate — emitting the final
 ``(idx, val)``. This collapses the previous three dispatches (partials
 kernel, XLA sparse-table gathers, XLA merge) into a single kernel launch.
 
-Tiling: the grid is ``(B // tile,)`` and each grid step answers ``tile``
-queries at once. Per query the step pulls three data-dependent rows via
-scalar-prefetch index maps (the same "program the DMA with the block id"
-trick as ``rmq_query.py``):
+Grid: ``(B // tile, tile)``. The minor axis walks the queries of a tile; each
+minor step DMAs exactly the rows *that one query* needs via scalar-prefetch
+index maps and stages them into ``(tile, bs)`` VMEM scratch accumulators. At
+the last minor step the whole tile merges vectorized — one VPU masked min per
+partial side — and writes the revisited ``(tile, 1)`` output block. Compared
+to v1 (a 1D grid whose pallas_call repeated every operand ``tile`` times so
+each slot could carry its own index map), operand count is constant in
+``tile``: one operand per logical input, with the minor grid id selecting the
+per-query row. That keeps lowering time flat while the autotuner sweeps
+larger tiles.
 
-  * ``x_blocks[bl[q]]``       — left partial block,
-  * ``x_blocks[br[q]]``       — right partial block,
-  * ``st.idx[k[q], :]``       — the doubling-table level row, where
-    ``k = floor(log2(interior_len))`` is precomputed on the host side of the
-    dispatch; both interior gathers (``ilo`` and ``ihi - 2^k + 1``) read from
-    this one row, so the whole sparse-table query costs one row DMA plus four
-    scalar VMEM loads.
+Two fetch strategies share the kernel body (``fetch=``):
 
-The partial scans run vectorized on ``(tile, bs)`` VMEM tiles (one VPU masked
-min per side for the whole tile) instead of ``(1, bs)`` rows, amortizing both
-DMA issue and grid overhead. The per-block min arrays (``bmin_val`` /
-``bmin_gidx``) ride along as constant whole-array VMEM residents — they are
-DMA'd once, not per step.
+  * ``"resident"`` — the per-block min arrays (``bmin_val``/``bmin_gidx``)
+    ride along as constant whole-array VMEM residents and the level-k
+    doubling-table row ``st.idx[k[q], :]`` is DMA'd per query. Per-step DMA
+    volume grows with nb (the row is ``(1, nb)``), which caps this path at
+    nb ~ 2^13 blocks.
+  * ``"dma"`` — nothing nb-sized touches VMEM. The doubling table is
+    *value-augmented* at build time (``st_val[k, p] = bmin_val[st.idx[k, p]]``
+    and ``st_gidx`` likewise, see :func:`interior_tables`), so the interior
+    candidate needs only the two table cells at ``(k, ilo)`` and
+    ``(k, bpos)``. Each query DMAs four ``(1, 128)`` lane-aligned windows
+    (value + gidx at each of the two positions) — bounded VMEM for
+    arbitrarily large nb.
+
+``fetch="auto"`` picks per the nb ceiling (``tuning.RESIDENT_NB_CEILING``).
+Both strategies are bit-identical to the oracle: the lo window starts at or
+before the hi window (``ilo <= bpos``), so preferring lo on value ties is
+exactly the leftmost rule ``sparse_table._pick_left`` applies to the
+resident tables.
 
 Correctness: the merge keeps the exact leftmost-tie rule of
 ``kernels/ops.py`` — partial candidates are merged left-over-right
 (``lv <= rv``), then preferred over the interior only when strictly smaller
 or when the partial index lies left of the interior's block range
-(``pi < (bl + 1) * bs``). See DESIGN.md §4.
+(``pi < (bl + 1) * bs``). See DESIGN.md §4 and §12.
 """
 
 from __future__ import annotations
@@ -43,80 +56,123 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.block_rmq import maxval
 from repro.core.sparse_table import exact_log2
 
-from .tiling import pad_to_tiles, row_spec, scalar_col, tile_out_specs
-from .tuning import DEFAULT_TILE
+from .tiling import (
+    pad_to_tiles,
+    scalar_col,
+    tiled2_out_specs,
+    tiled2_row_spec,
+    tiled2_window_spec,
+)
+from .tuning import DEFAULT_TILE, RESIDENT_NB_CEILING, resolve_fetch
 
-__all__ = ["fused_query", "DEFAULT_TILE"]
+__all__ = ["fused_query", "interior_tables", "DEFAULT_TILE"]
 
+# DMA window width: one lane-aligned VREG row per fetched table cell.
+_W = 128
 
 # Scalar-prefetch operand order (SMEM, available to index maps + kernel).
-_N_PREFETCH = 9  # bl, br, ls, le, re, k, ilo, bpos, hasint
+_N_PREFETCH = 11  # bl, br, ls, le, re, k, ilo, bpos, hasint, wlo, whi
 
 
-def _kernel(tile, *refs):
+def _kernel(tile, fetch, *refs):
     (bl_ref, br_ref, ls_ref, le_ref, re_ref,
-     k_ref, ilo_ref, bpos_ref, hasint_ref) = refs[:_N_PREFETCH]
+     k_ref, ilo_ref, bpos_ref, hasint_ref, wlo_ref, whi_ref) = refs[:_N_PREFETCH]
     body = refs[_N_PREFETCH:]
-    xl_refs = body[0:tile]
-    xr_refs = body[tile : 2 * tile]
-    st_refs = body[2 * tile : 3 * tile]
-    bv_ref, bg_ref = body[3 * tile], body[3 * tile + 1]
-    val_ref, idx_ref = body[3 * tile + 2], body[3 * tile + 3]
+    xl_ref, xr_ref = body[0], body[1]
+    if fetch == "resident":
+        st_ref, bv_ref, bg_ref = body[2:5]
+        val_ref, idx_ref = body[5:7]
+        xl_acc, xr_acc, iv_acc, ii_acc = body[7:11]
+    else:
+        lov_ref, hiv_ref, log_ref, hig_ref = body[2:6]
+        val_ref, idx_ref = body[6:8]
+        xl_acc, xr_acc, iv_acc, ii_acc = body[8:12]
 
     i = pl.program_id(0)
-    q0 = i * tile
-    bs = xl_refs[0].shape[1]
-    big = maxval(xl_refs[0].dtype)
-    big_i = jnp.int32(bs)
-    lanes = jax.lax.broadcasted_iota(jnp.int32, (tile, bs), 1)
+    t = pl.program_id(1)
+    q = i * tile + t
+    bs = xl_ref.shape[1]
+    big = maxval(xl_ref.dtype)
 
-    def col(ref):  # (tile,) vector of per-query scalars from SMEM
-        return scalar_col(ref, q0, tile)
+    # Stage this query's partial-block rows into the tile accumulators.
+    xl_acc[pl.ds(t, 1)] = xl_ref[...]
+    xr_acc[pl.ds(t, 1)] = xr_ref[...]
 
-    bl, br, ls, le, re = col(bl_ref), col(br_ref), col(ls_ref), col(le_ref), col(re_ref)
-
-    # Left partials, whole tile at once: (tile, bs) masked min + leftmost idx.
-    xl = jnp.concatenate([r[...] for r in xl_refs], axis=0)
-    ml = jnp.where((lanes >= ls[:, None]) & (lanes <= le[:, None]), xl, big)
-    lv = jnp.min(ml, axis=1)
-    li = jnp.min(jnp.where(ml == lv[:, None], lanes, big_i), axis=1)
-    lg = bl * bs + li
-
-    # Right partials (masked off for single-block queries).
-    xr = jnp.concatenate([r[...] for r in xr_refs], axis=0)
-    mr = jnp.where(lanes <= re[:, None], xr, big)
-    rv = jnp.min(mr, axis=1)
-    rv = jnp.where(br > bl, rv, big)
-    ri = jnp.min(jnp.where(mr == rv[:, None], lanes, big_i), axis=1)
-    rg = br * bs + ri
-
-    take_l = lv <= rv  # left candidate has smaller indices: leftmost ties
-    pv = jnp.where(take_l, lv, rv)
-    pi = jnp.where(take_l, lg, rg)
-
-    # Interior sparse-table candidate: two scalar gathers from the prefetched
-    # level-k row, leftmost-tie pick via the block-min values.
-    ivs, iis = [], []
-    for t in range(tile):
-        a = st_refs[t][0, ilo_ref[q0 + t]]
-        b = st_refs[t][0, bpos_ref[q0 + t]]
+    # This query's interior candidate -> SMEM slots; the merge step reads
+    # them back as a (tile,) vector.
+    if fetch == "resident":
+        a = st_ref[0, ilo_ref[q]]
+        b = st_ref[0, bpos_ref[q]]
         av = bv_ref[0, a]
         bv = bv_ref[0, b]
-        bi = jnp.where(av <= bv, a, b)
-        ivs.append(jnp.where(hasint_ref[q0 + t] == 1, jnp.minimum(av, bv), big))
-        iis.append(bg_ref[0, bi])
-    iv = jnp.stack(ivs)
-    ii = jnp.stack(iis)
+        ai = bg_ref[0, a]
+        bi = bg_ref[0, b]
+    else:
+        off_lo = ilo_ref[q] - wlo_ref[q] * _W
+        off_hi = bpos_ref[q] - whi_ref[q] * _W
+        av = lov_ref[0, off_lo]
+        bv = hiv_ref[0, off_hi]
+        ai = log_ref[0, off_lo]
+        bi = hig_ref[0, off_hi]
+    # Leftmost tie: the lo cell covers [ilo, ilo+2^k) which starts at or
+    # before the hi cell's [bpos, ihi], so prefer lo on equal values.
+    iv_acc[t] = jnp.where(hasint_ref[q] == 1, jnp.minimum(av, bv), big)
+    ii_acc[t] = jnp.where(av <= bv, ai, bi)
 
-    # Final merge, exact leftmost: prefer the partial only when strictly
-    # smaller, or tied with an index left of the interior block range.
-    int_start = (bl + 1) * bs
-    prefer_partial = (pv < iv) | ((pv == iv) & (pi < int_start))
-    val_ref[...] = jnp.where(prefer_partial, pv, iv)[:, None]
-    idx_ref[...] = jnp.where(prefer_partial, pi, ii)[:, None]
+    @pl.when(t == tile - 1)
+    def _merge():
+        big_i = jnp.int32(bs)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (tile, bs), 1)
+        q0 = i * tile
+
+        def col(ref):  # (tile,) vector of per-query scalars from SMEM
+            return scalar_col(ref, q0, tile)
+
+        bl, br, ls, le, re = col(bl_ref), col(br_ref), col(ls_ref), col(le_ref), col(re_ref)
+
+        # Left partials, whole tile at once: (tile, bs) masked min + leftmost.
+        xl = xl_acc[...]
+        ml = jnp.where((lanes >= ls[:, None]) & (lanes <= le[:, None]), xl, big)
+        lv = jnp.min(ml, axis=1)
+        li = jnp.min(jnp.where(ml == lv[:, None], lanes, big_i), axis=1)
+        lg = bl * bs + li
+
+        # Right partials (masked off for single-block queries).
+        xr = xr_acc[...]
+        mr = jnp.where(lanes <= re[:, None], xr, big)
+        rv = jnp.min(mr, axis=1)
+        rv = jnp.where(br > bl, rv, big)
+        ri = jnp.min(jnp.where(mr == rv[:, None], lanes, big_i), axis=1)
+        rg = br * bs + ri
+
+        take_l = lv <= rv  # left candidate has smaller indices: leftmost ties
+        pv = jnp.where(take_l, lv, rv)
+        pi = jnp.where(take_l, lg, rg)
+
+        iv = scalar_col(iv_acc, 0, tile)
+        ii = scalar_col(ii_acc, 0, tile)
+
+        # Final merge, exact leftmost: prefer the partial only when strictly
+        # smaller, or tied with an index left of the interior block range.
+        int_start = (bl + 1) * bs
+        prefer_partial = (pv < iv) | ((pv == iv) & (pi < int_start))
+        val_ref[...] = jnp.where(prefer_partial, pv, iv)[:, None]
+        idx_ref[...] = jnp.where(prefer_partial, pi, ii)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def interior_tables(bmin_val: jax.Array, bmin_gidx: jax.Array, st_idx: jax.Array):
+    """Value-augmented doubling tables for the DMA fetch strategy.
+
+    ``st_val[k, p] = bmin_val[st_idx[k, p]]`` and ``st_gidx`` likewise, so
+    the in-kernel interior lookup is two direct cell reads instead of an
+    index hop through the resident block-min arrays. Computed once at build
+    (XLA gathers are fine here — this is O(K * nb) build work, keeping the
+    per-query jaxpr gather-free).
+    """
+    return bmin_val[st_idx], bmin_gidx[st_idx]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "fetch", "interpret"))
 def fused_query(
     x_blocks: jax.Array,  # (nb, bs)
     bmin_val: jax.Array,  # (nb,)
@@ -125,18 +181,26 @@ def fused_query(
     l: jax.Array,  # (B,)
     r: jax.Array,  # (B,)
     *,
+    st_val: jax.Array | None = None,  # (K, nb) value-augmented table (dma)
+    st_gidx: jax.Array | None = None,  # (K, nb) int32 gidx-augmented table (dma)
     tile: int = DEFAULT_TILE,
+    fetch: str = "auto",
     interpret: bool | None = None,
 ):
     """End-to-end fused blocked RMQ. Returns (idx (B,) int32, value (B,)).
 
     Single kernel dispatch per batch; ``tile`` queries per grid step.
+    ``fetch`` selects the table strategy ("resident" | "dma" | "auto", see
+    module docstring); the augmented tables are derived on the fly when a
+    DMA-strategy call does not pass them (build-time callers precompute via
+    :func:`interior_tables` to keep the query jaxpr gather-free).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     nb, bs = x_blocks.shape
     b = l.shape[0]
     big = maxval(x_blocks.dtype)
+    fetch = resolve_fetch(fetch, nb)
     l = l.astype(jnp.int32)
     r = r.astype(jnp.int32)
 
@@ -152,9 +216,11 @@ def fused_query(
     ihi = jnp.maximum(jnp.clip(br - 1, 0, nb - 1), ilo)
     k = exact_log2(ihi - ilo + 1)
     bpos = ihi - jnp.left_shift(jnp.int32(1), k) + 1
+    wlo = ilo // _W  # lane-aligned window ids for the dma fetch strategy
+    whi = bpos // _W
 
     # Pad the batch to a whole number of tiles with trivial (0, 0) queries.
-    scalars = [bl, br, ls, le, re, k, ilo, bpos, hasint]
+    scalars = [bl, br, ls, le, re, k, ilo, bpos, hasint, wlo, whi]
     scalars, bp = pad_to_tiles(scalars, b, tile)
 
     # Lane-align the per-block tables (last dim multiple of 128 for VMEM).
@@ -163,41 +229,56 @@ def fused_query(
     # by XLA; a misaligned nb implies a small nb, so the copy is sub-VREG
     # noise. Keeping the pad here avoids widening the shared BlockRMQ pytree
     # (whose field layout distributed.py's PartitionSpecs mirror).
-    nbp = -(-nb // 128) * 128
-    bv2 = jnp.pad(bmin_val, (0, nbp - nb), constant_values=big)[None, :]
-    bg2 = jnp.pad(bmin_gidx, (0, nbp - nb))[None, :]
-    st2 = jnp.pad(st_idx, ((0, 0), (0, nbp - nb)))
+    nbp = -(-nb // _W) * _W
+    grid = (bp // tile, tile)
+    xl_spec = tiled2_row_spec((1, bs), 0, tile)  # x_blocks[bl[q]]
+    xr_spec = tiled2_row_spec((1, bs), 1, tile)  # x_blocks[br[q]]
+    if fetch == "resident":
+        bv2 = jnp.pad(bmin_val, (0, nbp - nb), constant_values=big)[None, :]
+        bg2 = jnp.pad(bmin_gidx, (0, nbp - nb))[None, :]
+        st2 = jnp.pad(st_idx, ((0, 0), (0, nbp - nb)))
+        in_specs = [
+            xl_spec,
+            xr_spec,
+            tiled2_row_spec((1, nbp), 5, tile),  # st.idx[k[q], :]
+            pl.BlockSpec((1, nbp), lambda i, t, *s: (0, 0)),  # bmin_val (resident)
+            pl.BlockSpec((1, nbp), lambda i, t, *s: (0, 0)),  # bmin_gidx (resident)
+        ]
+        operands = (x_blocks, x_blocks, st2, bv2, bg2)
+    else:
+        if st_val is None or st_gidx is None:
+            st_val, st_gidx = interior_tables(bmin_val, bmin_gidx, st_idx)
+        sv2 = jnp.pad(st_val, ((0, 0), (0, nbp - nb)), constant_values=big)
+        sg2 = jnp.pad(st_gidx, ((0, 0), (0, nbp - nb)))
+        in_specs = [
+            xl_spec,
+            xr_spec,
+            tiled2_window_spec(_W, 5, 9, tile),  # st_val[k[q], ilo window]
+            tiled2_window_spec(_W, 5, 10, tile),  # st_val[k[q], bpos window]
+            tiled2_window_spec(_W, 5, 9, tile),  # st_gidx[k[q], ilo window]
+            tiled2_window_spec(_W, 5, 10, tile),  # st_gidx[k[q], bpos window]
+        ]
+        operands = (x_blocks, x_blocks, sv2, sv2, sg2, sg2)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=_N_PREFETCH,
-        grid=(bp // tile,),
-        in_specs=(
-            # data-dependent rows: x_blocks[bl[q]], x_blocks[br[q]], and the
-            # doubling-table level row st.idx[k[q], :] (k is prefetch slot 5)
-            [row_spec((1, bs), 0, t, tile) for t in range(tile)]
-            + [row_spec((1, bs), 1, t, tile) for t in range(tile)]
-            + [row_spec((1, nbp), 5, t, tile) for t in range(tile)]
-            + [
-                pl.BlockSpec((1, nbp), lambda i, *s: (0, 0)),  # bmin_val (resident)
-                pl.BlockSpec((1, nbp), lambda i, *s: (0, 0)),  # bmin_gidx (resident)
-            ]
-        ),
-        out_specs=tile_out_specs(tile),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tiled2_out_specs(tile),
+        scratch_shapes=[
+            pltpu.VMEM((tile, bs), x_blocks.dtype),  # xl accumulator
+            pltpu.VMEM((tile, bs), x_blocks.dtype),  # xr accumulator
+            pltpu.SMEM((tile,), x_blocks.dtype),  # interior values
+            pltpu.SMEM((tile,), jnp.int32),  # interior indices
+        ],
     )
     val, idx = pl.pallas_call(
-        functools.partial(_kernel, tile),
+        functools.partial(_kernel, tile, fetch),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((bp, 1), x_blocks.dtype),
             jax.ShapeDtypeStruct((bp, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(
-        *scalars,
-        *([x_blocks] * tile),
-        *([x_blocks] * tile),
-        *([st2] * tile),
-        bv2,
-        bg2,
-    )
+    )(*scalars, *operands)
     return idx[:b, 0], val[:b, 0]

@@ -5,11 +5,17 @@ through the Pallas kernels (validated in interpret mode on CPU, compiled for
 TPU on real hardware). ``query`` dispatches the *fused tiled megakernel*
 (``fused_query.py``): one kernel launch answers the whole batch end-to-end —
 partials, sparse-table interior, and final merge — ``tile`` queries per grid
-step. The legacy two-pass path (partials kernel + XLA interior/merge) remains
+step, with the launch geometry (tile, table fetch strategy) taken from a
+``tuning.KernelConfig``. ``build`` returns a ``FusedRMQ``: the shared
+``BlockRMQ`` fields plus the value-augmented doubling tables the DMA fetch
+strategy reads, precomputed once so the per-query jaxpr stays gather-free.
+The legacy two-pass path (partials kernel + XLA interior/merge) remains
 available via ``query(..., fused=False)`` for A/B benchmarking.
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -18,11 +24,13 @@ from repro.core import block_rmq, sparse_table
 from repro.core.block_rmq import BlockRMQ, maxval, _pick
 
 from .block_min import block_min
-from .fused_query import DEFAULT_TILE, fused_query
+from .fused_query import DEFAULT_TILE, fused_query, interior_tables
 from .lane_query import lane_partials
 from .rmq_query import rmq_partials
+from .tuning import KernelConfig
 
 __all__ = [
+    "FusedRMQ",
     "build",
     "query",
     "block_min",
@@ -33,8 +41,24 @@ __all__ = [
 ]
 
 
-def build(x: jax.Array, block_size: int, *, interpret: bool | None = None) -> BlockRMQ:
-    """Kernelized build: Pallas per-block minima + doubling table."""
+class FusedRMQ(NamedTuple):
+    """Megakernel state: ``BlockRMQ``'s fields + the DMA-strategy tables.
+
+    A separate type (rather than widening ``BlockRMQ``) because
+    ``distributed.py``'s PartitionSpecs mirror ``BlockRMQ``'s field layout;
+    the augmented tables are single-host kernel state only.
+    """
+
+    x_blocks: jax.Array  # (nb, bs)
+    bmin_val: jax.Array  # (nb,)
+    bmin_gidx: jax.Array  # (nb,) int32
+    st: sparse_table.SparseTable  # doubling table over bmin_val
+    st_val: jax.Array  # (K, nb): bmin_val[st.idx] (DMA fetch strategy)
+    st_gidx: jax.Array  # (K, nb) int32: bmin_gidx[st.idx]
+
+
+def build(x: jax.Array, block_size: int, *, interpret: bool | None = None) -> FusedRMQ:
+    """Kernelized build: Pallas per-block minima + doubling tables."""
     if block_size % 128 != 0:
         raise ValueError(f"block_size must be a multiple of 128, got {block_size}")
     n = x.shape[0]
@@ -45,28 +69,52 @@ def build(x: jax.Array, block_size: int, *, interpret: bool | None = None) -> Bl
     bmin_val, lidx = block_min(xb, interpret=interpret)
     bmin_gidx = jnp.arange(nb, dtype=jnp.int32) * block_size + lidx
     st = sparse_table.build(bmin_val)
-    return BlockRMQ(x_blocks=xb, bmin_val=bmin_val, bmin_gidx=bmin_gidx, st=st)
+    st_val, st_gidx = interior_tables(bmin_val, bmin_gidx, st.idx)
+    return FusedRMQ(
+        x_blocks=xb,
+        bmin_val=bmin_val,
+        bmin_gidx=bmin_gidx,
+        st=st,
+        st_val=st_val,
+        st_gidx=st_gidx,
+    )
 
 
 def query(
-    s: BlockRMQ,
+    s,
     l: jax.Array,
     r: jax.Array,
     *,
-    tile: int = DEFAULT_TILE,
+    config: KernelConfig | None = None,
+    tile: int | None = None,
+    fetch: str | None = None,
     fused: bool = True,
     interpret: bool | None = None,
 ):
     """Kernelized batched query. Returns (leftmost argmin idx int32, value).
 
+    ``s`` is a ``FusedRMQ`` (or a bare ``BlockRMQ``, in which case the DMA
+    strategy derives its augmented tables on the fly). ``config`` carries the
+    tuned launch geometry (its build-time ``block_size`` knob is ignored here
+    — the structure is already committed to one); ``tile``/``fetch`` override
+    the individual knobs for direct A/B calls.
+
     ``fused=True`` (default): single megakernel dispatch (fused_query.py).
     ``fused=False``: legacy two-pass path — tiled partials kernel, then the
     XLA sparse-table interior + merge (kept for A/B benchmarking).
     """
+    if config is None:
+        config = KernelConfig()
+    if tile is None:
+        tile = config.tile
+    if fetch is None:
+        fetch = config.fetch
     if fused:
         return fused_query(
             s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx, l, r,
-            tile=tile, interpret=interpret,
+            st_val=getattr(s, "st_val", None),
+            st_gidx=getattr(s, "st_gidx", None),
+            tile=tile, fetch=fetch, interpret=interpret,
         )
     bs = s.x_blocks.shape[1]
     nb = s.x_blocks.shape[0]

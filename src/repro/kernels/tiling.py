@@ -1,10 +1,17 @@
 """Shared scaffolding for the tiled query kernels.
 
-All three query kernels (``rmq_query``, ``lane_query``, ``fused_query``) use
-the same grid layout — ``tile`` queries per grid step, scalar-prefetch-driven
-data-dependent row DMAs — so the batch padding, the per-query row BlockSpec
-(with its ``t=t`` default-arg closure capture), the SMEM scalar stacking, and
-the (tile, 1) output specs live here once.
+Two grid generations coexist here:
+
+* v1 — a 1D grid ``(B // tile,)`` where every data-dependent row needs its
+  own pallas_call operand slot, so callers repeat each operand ``tile``
+  times, one ``row_spec`` (with its ``t=t`` default-arg closure capture) per
+  slot. ``rmq_query`` and ``lane_query`` still use this idiom.
+* v2 — a 2D grid ``(B // tile, tile)`` whose minor axis walks the queries of
+  a tile, so ONE operand with a ``tiled2_*`` index map serves every slot and
+  dispatch arg count stays constant in ``tile``. ``fused_query`` uses this
+  (see its module docstring for the scratch-accumulator merge protocol).
+
+The batch padding and SMEM scalar stacking are shared by both.
 """
 
 from __future__ import annotations
@@ -12,7 +19,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pad_to_tiles", "row_spec", "scalar_col", "tile_out_specs"]
+__all__ = [
+    "pad_to_tiles",
+    "row_spec",
+    "scalar_col",
+    "tile_out_specs",
+    "tiled2_out_specs",
+    "tiled2_row_spec",
+    "tiled2_window_spec",
+]
 
 
 def pad_to_tiles(args, b: int, tile: int):
@@ -49,4 +64,39 @@ def tile_out_specs(tile: int):
     return [
         pl.BlockSpec((tile, 1), lambda i, *s: (i, 0)),
         pl.BlockSpec((tile, 1), lambda i, *s: (i, 0)),
+    ]
+
+
+def tiled2_row_spec(block_shape, sel: int, tile: int) -> pl.BlockSpec:
+    """2D-grid BlockSpec fetching one data-dependent row per minor step.
+
+    The minor grid id ``t`` selects the query within the tile, so a single
+    operand serves all tile slots: row id = ``prefetch[sel][i * tile + t]``.
+    """
+    return pl.BlockSpec(
+        block_shape, lambda i, t, *s, sel=sel: (s[sel][i * tile + t], 0)
+    )
+
+
+def tiled2_window_spec(w: int, rsel: int, wsel: int, tile: int) -> pl.BlockSpec:
+    """2D-grid BlockSpec fetching a (1, w) window of a 2D table per minor step.
+
+    Row id from ``prefetch[rsel]``, window (column-block) id from
+    ``prefetch[wsel]`` — both indexed by the query slot ``i * tile + t``. The
+    window id is in block coordinates: element offset = id * w.
+    """
+    return pl.BlockSpec(
+        (1, w),
+        lambda i, t, *s, rsel=rsel, wsel=wsel: (
+            s[rsel][i * tile + t],
+            s[wsel][i * tile + t],
+        ),
+    )
+
+
+def tiled2_out_specs(tile: int):
+    """The two (tile, 1) outputs on the 2D grid (block revisited across t)."""
+    return [
+        pl.BlockSpec((tile, 1), lambda i, t, *s: (i, 0)),
+        pl.BlockSpec((tile, 1), lambda i, t, *s: (i, 0)),
     ]

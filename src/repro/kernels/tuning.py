@@ -1,9 +1,263 @@
-"""Shared kernel tunables (single source of truth for the query kernels).
+"""Persistent autotuner for the fused megakernel's launch geometry.
 
-``DEFAULT_TILE``: queries answered per grid step by the tiled query kernels
-(``rmq_query``, ``lane_query``, ``fused_query``). 8 packs a full sublane and
-was validated in interpret mode; ROADMAP carries the item to autotune it per
-(block_size, batch) on real TPU hardware.
+The megakernel has three static knobs — ``tile`` (queries per grid step),
+``fetch`` (table strategy: VMEM-resident vs per-query DMA windows, see
+``fused_query.py``), and ``block_size`` — and the right setting is a property
+of (problem size, batch, machine), not of the code. This module sweeps the
+config product, times each candidate with the same measurement seam
+``hybrid.calibrate`` uses (``hybrid._measure``, monkeypatchable in tests),
+and persists winners in the calibration JSON cache (``core.calib_cache``)
+under a ``kernel/`` key namespace:
+
+    kernel/n=65536/batch=4096/backend=tpu/ndev=8
+        -> {"tile": 8, "fetch": "dma", "block_size": 128}
+
+so serving and benchmarks load tuned configs with zero re-timing. Policy
+resolution (``get_config``):
+
+* ``None``      — the deterministic default config. Never touches the cache
+  or any machine state: same answer on every host, before and after any
+  cache write.
+* ``"cached"``  — read-only cache lookup, default fallback on miss. Never
+  measures.
+* ``"tuned"``   — cache lookup; sweeps + persists on a miss, so repeated
+  builds of one configuration time the product exactly once per machine.
+
+The exemplar is the TVM/AttentionEngine autotuner shape (config product ->
+timed best -> cached); the cache lifecycle (atomic writes, version staleness,
+corrupt-file tolerance) is inherited from ``calib_cache``.
 """
 
+from __future__ import annotations
+
+import itertools
+from typing import NamedTuple
+
+__all__ = [
+    "DEFAULT_TILE",
+    "DEFAULT_TUNE_BATCH",
+    "FETCH_STRATEGIES",
+    "KernelConfig",
+    "RESIDENT_NB_CEILING",
+    "autotune",
+    "candidate_configs",
+    "config_from_entry",
+    "default_config",
+    "get_config",
+    "resolve_fetch",
+    "sweep",
+    "tuning_key",
+]
+
+# Queries answered per grid step by the tiled query kernels. 8 packs a full
+# sublane; the autotuner below replaces this guess per (n, batch, machine).
 DEFAULT_TILE = 8
+
+# Table fetch strategies fused_query implements (module docstring there).
+FETCH_STRATEGIES = ("resident", "dma")
+
+# Above this many blocks the resident strategy's per-step (1, nb) doubling
+# row DMA (plus the resident bmin planes) stops fitting the VMEM budget;
+# "auto" switches to the bounded-VMEM dma strategy. See DESIGN.md §12.
+RESIDENT_NB_CEILING = 1 << 13
+
+# Swept values. Small on purpose: each candidate costs a build + timed
+# queries, and the product is per (n, batch, backend, ndev) cache entry.
+TUNE_TILES = (4, 8, 16)
+TUNE_BLOCK_SIZES = (128, 256)
+DEFAULT_TUNE_BATCH = 4096
+
+
+class KernelConfig(NamedTuple):
+    """Static launch geometry for the fused megakernel."""
+
+    tile: int = DEFAULT_TILE
+    fetch: str = "auto"  # "resident" | "dma" | "auto" (resolve by nb)
+    block_size: int = 128
+
+
+def resolve_fetch(fetch: str, nb: int) -> str:
+    """Concrete fetch strategy for ``nb`` blocks ("auto" -> by the ceiling)."""
+    if fetch == "auto":
+        return "dma" if nb > RESIDENT_NB_CEILING else "resident"
+    if fetch not in FETCH_STRATEGIES:
+        raise ValueError(f"unknown fetch strategy {fetch!r} (want {FETCH_STRATEGIES})")
+    return fetch
+
+
+def default_config(block_size: int = 128) -> KernelConfig:
+    """The untuned config: machine-independent, deterministic."""
+    return KernelConfig(tile=DEFAULT_TILE, fetch="auto", block_size=block_size)
+
+
+def candidate_configs(n: int, block_size: int | None = None):
+    """The swept config product for an ``n``-element array.
+
+    ``block_size`` pins that knob (hybrid builds tune within their block
+    size; fused builds sweep it). Resident candidates past the nb ceiling
+    are excluded — they are exactly the configs the ceiling exists to avoid.
+    The default config's resolution is always a member, so the tuned winner
+    can never be slower than the default on the sweep's own measurements.
+    """
+    sizes = (block_size,) if block_size is not None else TUNE_BLOCK_SIZES
+    out = []
+    for bs, fetch, tile in itertools.product(sizes, FETCH_STRATEGIES, TUNE_TILES):
+        if fetch == "resident" and -(-n // bs) > RESIDENT_NB_CEILING:
+            continue
+        out.append(KernelConfig(tile=tile, fetch=fetch, block_size=bs))
+    for bs in sizes:  # the resolved default, if the product missed it
+        d = KernelConfig(DEFAULT_TILE, resolve_fetch("auto", -(-n // bs)), bs)
+        if d not in out:
+            out.append(d)
+    return out
+
+
+def tuning_key(
+    n: int,
+    batch: int = DEFAULT_TUNE_BATCH,
+    *,
+    backend: str | None = None,
+    n_devices: int | None = None,
+) -> str:
+    """Cache key for a tuned config: ``kernel/`` namespace + (n, batch,
+    backend, ndev) — disjoint from the threshold keys in the same file."""
+    import jax
+
+    if backend is None:
+        backend = jax.default_backend()
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    return f"kernel/n={n}/batch={batch}/backend={backend}/ndev={n_devices}"
+
+
+def config_from_entry(entry) -> KernelConfig | None:
+    """KernelConfig from a cached JSON entry; None if malformed (treated as
+    a miss — a cache must never turn into a crash)."""
+    if not isinstance(entry, dict):
+        return None
+    try:
+        cfg = KernelConfig(
+            tile=int(entry["tile"]),
+            fetch=str(entry["fetch"]),
+            block_size=int(entry["block_size"]),
+        )
+    except (KeyError, TypeError, ValueError):
+        return None
+    if cfg.fetch not in FETCH_STRATEGIES + ("auto",):
+        return None
+    if cfg.tile < 1 or cfg.block_size % 128 != 0:
+        return None
+    return cfg
+
+
+def sweep(
+    n: int,
+    batch: int = DEFAULT_TUNE_BATCH,
+    *,
+    block_size: int | None = None,
+    candidates=None,
+    seed: int = 0,
+    repeats: int = 3,
+    interpret: bool | None = None,
+):
+    """Time every candidate config. Returns ``[(KernelConfig, seconds)]``.
+
+    One mixed-length query batch (seeded, so the sweep is reproducible) is
+    timed through the fused megakernel per candidate, via the exact
+    measurement seam ``hybrid.calibrate`` uses (``hybrid._measure`` — tests
+    monkeypatch it to make sweeps deterministic and to assert a warm cache
+    performs zero of them). Builds are shared across the candidates of a
+    block size.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import hybrid
+
+    from . import ops
+
+    if candidates is None:
+        candidates = candidate_configs(n, block_size)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(n, dtype=np.float32))
+    a = rng.integers(0, n, batch)
+    b = rng.integers(0, n, batch)
+    lj = jnp.asarray(np.minimum(a, b))
+    rj = jnp.asarray(np.maximum(a, b))
+
+    results = []
+    built = {}
+    for cfg in candidates:
+        if cfg.block_size not in built:
+            built[cfg.block_size] = ops.build(x, cfg.block_size, interpret=interpret)
+        s = built[cfg.block_size]
+
+        def fn(l, r, s=s, cfg=cfg):
+            return ops.query(s, l, r, config=cfg, interpret=interpret)
+
+        kind = f"kernel/tile={cfg.tile}/fetch={cfg.fetch}/bs={cfg.block_size}"
+        results.append((cfg, hybrid._measure(kind, fn, lj, rj, repeats)))
+    return results
+
+
+def autotune(
+    n: int,
+    batch: int = DEFAULT_TUNE_BATCH,
+    *,
+    block_size: int | None = None,
+    candidates=None,
+    seed: int = 0,
+    repeats: int = 3,
+    interpret: bool | None = None,
+) -> KernelConfig:
+    """Sweep the config product and return the fastest candidate.
+
+    Ties break toward the earliest candidate in the (deterministic) product
+    order, so a fake-measure test pins the winner exactly.
+    """
+    results = sweep(
+        n,
+        batch,
+        block_size=block_size,
+        candidates=candidates,
+        seed=seed,
+        repeats=repeats,
+        interpret=interpret,
+    )
+    best_cfg, _ = min(results, key=lambda cv: cv[1])
+    return best_cfg
+
+
+def get_config(
+    n: int,
+    batch: int = DEFAULT_TUNE_BATCH,
+    *,
+    policy: str | None = None,
+    block_size: int | None = None,
+    backend: str | None = None,
+    n_devices: int | None = None,
+    path=None,
+    **tune_kw,
+) -> KernelConfig:
+    """Resolve the kernel config for an (n, batch) point under ``policy``.
+
+    See the module docstring for the three policies. ``block_size`` pins the
+    sweep (and the default's block size) when the caller's structure is
+    already committed to one.
+    """
+    if policy is None:
+        return default_config(block_size if block_size is not None else 128)
+    if policy not in ("cached", "tuned"):
+        raise ValueError(f"unknown kernel-config policy {policy!r}")
+
+    from repro.core import calib_cache
+
+    key = tuning_key(n, batch, backend=backend, n_devices=n_devices)
+    cfg = config_from_entry(calib_cache.load_entry(key, path))
+    if cfg is not None:
+        return cfg
+    if policy == "cached":
+        return default_config(block_size if block_size is not None else 128)
+    cfg = autotune(n, batch, block_size=block_size, **tune_kw)
+    calib_cache.store_entry(key, dict(cfg._asdict()), path)
+    return cfg

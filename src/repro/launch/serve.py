@@ -95,6 +95,14 @@ def _parser() -> argparse.ArgumentParser:
         help="routing threshold from the calibration cache, measuring once per "
         "configuration (engines declaring a 'threshold' build kwarg)",
     )
+    ap.add_argument(
+        "--tune",
+        action="store_true",
+        help="megakernel launch geometry (tile, fetch, block size) from the "
+        "autotune cache, sweeping once per configuration (engines declaring "
+        "a 'kernel_config' build kwarg; without --tune, cached winners are "
+        "still loaded read-only)",
+    )
     one = ap.add_argument_group("oneshot")
     one.add_argument("--batch", type=int, default=4096, help="queries per batch")
     one.add_argument("--batches", type=int, default=8, help="batches to serve")
@@ -185,6 +193,11 @@ def _validate(ap: argparse.ArgumentParser, args, spec: registry.EngineSpec) -> N
             f"--block-size requires an engine with a 'block_size' build kwarg; "
             f"{args.engine} declares {sorted(spec.build_kwargs) or '()'}"
         )
+    if args.tune and "kernel_config" not in spec.build_kwargs:
+        ap.error(
+            f"--tune requires an engine with a 'kernel_config' build kwarg; "
+            f"{args.engine} declares {sorted(spec.build_kwargs) or '()'}"
+        )
     if args.mutate:
         if args.mode != "async":
             ap.error("--mutate requires --mode async")
@@ -218,6 +231,8 @@ def _build_kwargs(args, spec: registry.EngineSpec) -> dict:
         kw["block_size"] = args.block_size
     if "threshold" in spec.build_kwargs:
         kw["threshold"] = "calibrated" if args.calibrate else "cached"
+    if "kernel_config" in spec.build_kwargs:
+        kw["kernel_config"] = "tuned" if args.tune else "cached"
     if args.qshard is not None:
         kw["mode"] = _QSHARD_MODES[args.qshard]
     return kw
@@ -610,10 +625,16 @@ def main(argv=None) -> None:
         t0 = time.perf_counter()
         state = build_mod.execute(plan, jnp.asarray(x))
         _block_on_state(state)
+        kcfg = plan.meta.get("kernel_config")
+        kmsg = (
+            f", kernel tile={kcfg.tile} fetch={kcfg.fetch} bs={kcfg.block_size}"
+            if kcfg is not None
+            else ""
+        )
         print(
             f"[{args.engine}] build {((time.perf_counter() - t0))*1e3:.1f} ms "
             f"(n={args.n}, {plan.layout.num_shards} structure shard(s) x "
-            f"{plan.layout.shard_len} cols)"
+            f"{plan.layout.shard_len} cols{kmsg})"
         )
 
         if args.mode == "oneshot":

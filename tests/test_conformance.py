@@ -113,6 +113,51 @@ def test_engine_conformance(engine, scenario):
     np.testing.assert_array_equal(val, x[gold], err_msg=f"{engine}/{scenario}")
 
 
+def test_fused_dma_past_resident_ceiling():
+    """The DMA fetch strategy must stay bit-identical to the oracle at an nb
+    8x past the resident-table VMEM ceiling (the whole point of megakernel
+    v2), through the single ``fused_query`` entry point.
+
+    The structure is built with the pure-jnp builder (the Pallas block_min
+    kernel's per-block grid would take minutes in interpret mode at this
+    size); the query path under test is exactly the megakernel.
+    """
+    from repro.core import block_rmq
+    from repro.kernels import tuning
+    from repro.kernels.fused_query import fused_query
+
+    bs = 128
+    nb = 8 * tuning.RESIDENT_NB_CEILING  # 2^16 blocks, n = 2^23
+    n = nb * bs
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.integers(0, 5, n).astype(np.float32))  # dense ties
+    s = block_rmq.build(x, bs)
+    assert s.x_blocks.shape[0] == nb > tuning.RESIDENT_NB_CEILING
+
+    a = rng.integers(0, n, 24)
+    b = rng.integers(0, n, 24)
+    l, r = np.minimum(a, b), np.maximum(a, b)
+    # Ranges that stress the interior tables at this scale, plus the edges.
+    l = np.concatenate([l, [0, 0, n - 1, 5]])
+    r = np.concatenate([r, [n - 1, bs, n - 1, n - 5]])
+    xh = np.asarray(x)
+    gold = ref.rmq_ref(xh, l, r)
+
+    qi, qv = fused_query(
+        s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx,
+        jnp.asarray(l), jnp.asarray(r), fetch="dma", interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(qi), gold)
+    np.testing.assert_array_equal(np.asarray(qv), xh[gold])
+    # "auto" must resolve to the dma strategy past the ceiling and agree.
+    ai, av = fused_query(
+        s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx,
+        jnp.asarray(l), jnp.asarray(r), fetch="auto", interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(ai), gold)
+    np.testing.assert_array_equal(np.asarray(av), xh[gold])
+
+
 def test_sharded_hybrid_modes_match_single_device():
     """Both distribution modes agree with the oracle on a 1-device mesh."""
     from repro.core import sharded_hybrid

@@ -3,7 +3,9 @@
 Seeded generator loops (hypothesis-style, no dependency) against
 ``repro.core.ref``: leftmost-tie stress (constant arrays, repeated minima
 spanning block boundaries), degenerate queries (l == r, full range), batch
-sizes not divisible by the tile, and several tile widths.
+sizes not divisible by the tile, several tile widths — and both table fetch
+strategies (VMEM-resident vs per-query DMA windows) through the single
+``fused_query`` entry point.
 """
 
 import jax.numpy as jnp
@@ -14,12 +16,14 @@ from repro.core import block_rmq, ref
 from repro.kernels import ops
 from repro.kernels.fused_query import fused_query
 
+FETCHES = ["resident", "dma"]
 
-def _fused(x, l, r, bs=128, tile=8):
+
+def _fused(x, l, r, bs=128, tile=8, fetch="auto"):
     s = block_rmq.build(jnp.asarray(x), bs)
     idx, val = fused_query(
         s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx,
-        jnp.asarray(l), jnp.asarray(r), tile=tile, interpret=True,
+        jnp.asarray(l), jnp.asarray(r), tile=tile, fetch=fetch, interpret=True,
     )
     return np.asarray(idx), np.asarray(val)
 
@@ -33,7 +37,8 @@ def _check(x, l, r, **kw):
     np.testing.assert_allclose(val, np.asarray(x)[gold])
 
 
-def test_constant_array_prefers_leftmost():
+@pytest.mark.parametrize("fetch", FETCHES)
+def test_constant_array_prefers_leftmost(fetch):
     """All-equal values: every query must return l (hardest tie case)."""
     n = 700
     rng = np.random.default_rng(0)
@@ -41,11 +46,12 @@ def test_constant_array_prefers_leftmost():
     a = rng.integers(0, n, 57)  # deliberately not a multiple of the tile
     b = rng.integers(0, n, 57)
     l, r = np.minimum(a, b), np.maximum(a, b)
-    idx, _ = _fused(x, l, r)
+    idx, _ = _fused(x, l, r, fetch=fetch)
     np.testing.assert_array_equal(idx, l)
 
 
-def test_repeated_minima_spanning_block_boundaries():
+@pytest.mark.parametrize("fetch", FETCHES)
+def test_repeated_minima_spanning_block_boundaries(fetch):
     """A tied global minimum planted in every block, including boundary lanes."""
     bs, nb = 128, 6
     n = bs * nb
@@ -59,7 +65,7 @@ def test_repeated_minima_spanning_block_boundaries():
     a = rng.integers(0, n, 100)
     b = rng.integers(0, n, 100)
     l, r = np.minimum(a, b), np.maximum(a, b)
-    _check(x, l, r)
+    _check(x, l, r, fetch=fetch)
 
 
 def test_point_and_full_range_queries():
@@ -82,19 +88,21 @@ def test_batch_not_divisible_by_tile(batch):
     _check(x, np.minimum(a, b), np.maximum(a, b), tile=8)
 
 
+@pytest.mark.parametrize("fetch", FETCHES)
 @pytest.mark.parametrize("tile", [1, 2, 4, 16])
-def test_tile_widths(tile):
+def test_tile_widths(tile, fetch):
     rng = np.random.default_rng(tile)
     n = 2000
     x = rng.integers(0, 6, n).astype(np.float32)
     a = rng.integers(0, n, 40)
     b = rng.integers(0, n, 40)
-    _check(x, np.minimum(a, b), np.maximum(a, b), tile=tile)
+    _check(x, np.minimum(a, b), np.maximum(a, b), tile=tile, fetch=fetch)
 
 
 @pytest.mark.parametrize("dtype", [np.float32, np.int32])
 def test_property_sweep(dtype):
-    """Random arrays with dense ties, random batches, several sizes."""
+    """Random arrays with dense ties, random batches, several sizes, both
+    fetch strategies bit-identical to the oracle and to each other."""
     rng = np.random.default_rng(42)
     for _ in range(6):
         n = int(rng.integers(1, 1500))
@@ -102,7 +110,31 @@ def test_property_sweep(dtype):
         q = int(rng.integers(1, 48))
         a = rng.integers(0, n, q)
         b = rng.integers(0, n, q)
-        _check(x, np.minimum(a, b), np.maximum(a, b))
+        l, r = np.minimum(a, b), np.maximum(a, b)
+        _check(x, l, r, fetch="resident")
+        _check(x, l, r, fetch="dma")
+
+
+def test_dma_uses_precomputed_augmented_tables():
+    """The FusedRMQ state path: precomputed st_val/st_gidx must give the
+    same bits as the derive-on-the-fly path."""
+    rng = np.random.default_rng(9)
+    n = 4000
+    x = rng.integers(-3, 4, n).astype(np.float32)
+    a = rng.integers(0, n, 64)
+    b = rng.integers(0, n, 64)
+    l, r = np.minimum(a, b), np.maximum(a, b)
+    s = ops.build(jnp.asarray(x), 128, interpret=True)
+    i1, v1 = fused_query(
+        s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx,
+        jnp.asarray(l), jnp.asarray(r),
+        st_val=s.st_val, st_gidx=s.st_gidx, fetch="dma", interpret=True,
+    )
+    i2, v2 = _fused(x, l, r, fetch="dma")
+    np.testing.assert_array_equal(np.asarray(i1), i2)
+    np.testing.assert_array_equal(np.asarray(v1), v2)
+    gold = ref.rmq_ref(x, l, r)
+    np.testing.assert_array_equal(np.asarray(i1), gold)
 
 
 def test_ops_query_routes_through_fused_and_matches_legacy():

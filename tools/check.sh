@@ -40,14 +40,19 @@
 #    restore; exits 1 unless every response is oracle-verified against its
 #    version, no request is lost, read-your-writes sessions never see a
 #    stale floor, and the observed version lag stays <= the bound.
-# 9. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+# 9. autotune gate: a tiny interpret-mode kernel-config sweep against a
+#    throwaway cache path — the tuned winner must round-trip through the
+#    persistent cache, a second tuned run must perform ZERO timing sweeps
+#    (counted at the hybrid._measure seam, the only place a sweep can
+#    time), and the policy=None default path must never touch the cache.
+# 10. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
 #    CPU — Pallas kernels validate through the test suite; the smoke catches
 #    perf-path regressions like import errors, shape breaks, or a suite that
 #    stopped emitting rows).
 #
-# Perf baseline: BENCH_PR7.json (benchmarks/run.py --json; adds the
-# fleet_scaling suite and records git rev + fault seed in _meta);
-# refresh per PR.
+# Perf baseline: BENCH_PR8.json (benchmarks/run.py --json; adds the
+# kernel_tuning suite and records backend/device-count/jax-version and
+# autotune-cache hit state in _meta); refresh per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -154,6 +159,48 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 600 \
     python -m repro.serve.fleet --engine sharded_hybrid --replicas 3 \
     --n 4096 --requests 48 --updates 4 --max-lag 2
 
+echo "== autotune gate (tiny sweep, cache round-trip, zero re-timings) =="
+python - <<'PY'
+# Acceptance bar: the kernel autotuner persists its winner, a warm cache
+# performs zero timing sweeps, and the untuned default never touches the
+# cache or any machine state.
+import tempfile
+from pathlib import Path
+from repro.core import calib_cache, hybrid
+from repro.kernels import tuning
+
+n, batch = 1 << 12, 64
+with tempfile.TemporaryDirectory() as td:
+    cache = Path(td) / "calibration.json"
+    sweeps = []
+    orig = hybrid._measure
+    hybrid._measure = lambda *a, **k: sweeps.append(a[0]) or orig(*a, **k)
+    try:
+        won = tuning.get_config(n, batch, policy="tuned", block_size=128,
+                                path=cache, interpret=True)
+    finally:
+        hybrid._measure = orig
+    assert sweeps, "tuned policy on a cold cache ran no timing sweeps"
+    entry = calib_cache.load_entry(tuning.tuning_key(n, batch), cache)
+    assert tuning.config_from_entry(entry) == won, \
+        f"winner {won} did not round-trip the cache: {entry}"
+
+    def boom(*a, **k):
+        raise AssertionError("timing sweep ran on a warm cache")
+    hybrid._measure = boom
+    try:
+        again = tuning.get_config(n, batch, policy="tuned", block_size=128,
+                                  path=cache)
+        assert again == won, (again, won)
+        # The default path: deterministic, cache-blind, measurement-free.
+        assert tuning.get_config(n, batch, policy=None) == tuning.default_config(128)
+    finally:
+        hybrid._measure = orig
+print(f"autotune gate: {len(sweeps)} cold sweeps, winner "
+      f"tile={won.tile} fetch={won.fetch} bs={won.block_size} round-tripped, "
+      f"warm run re-timed 0 candidates")
+PY
+
 echo "== perf smoke (fig12, smoke sizes) =="
 out=$(timeout 300 python -m benchmarks.run --only fig12 --smoke)
 echo "$out"
@@ -162,4 +209,4 @@ if [ "$rows" -lt 4 ]; then
     echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
     exit 1
 fi
-echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, chaos gate green, fleet gate green, fig12 smoke emitted $rows rows"
+echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, chaos gate green, fleet gate green, autotune gate green, fig12 smoke emitted $rows rows"
