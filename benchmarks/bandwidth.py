@@ -1,0 +1,133 @@
+"""Bytes-moved accounting for the packed (value, index) structures (§13).
+
+RMQ at serving batch sizes is bandwidth-bound (the roofline suite pins every
+engine far left of the ridge), so the packed layouts' claim is a *traffic*
+claim: fused words halve the long-path query's touched bytes and the
+distributed doubling merge's halo traffic. This suite derives the byte
+counts from the **built structures themselves** — leaf dtypes, plane counts,
+level counts — so the numbers move if the layouts do, and cross-checks with
+a wall-clock measurement of both query paths on the same batch.
+
+Accounting (per RMQ, from the real leaf dtypes):
+
+* sparse-table long path — unpacked touches two ``idx`` cells and gathers
+  two candidate values (+ the final value lookup shares one of them);
+  packed touches two fused words, full stop. quantized adds two raw-value
+  gathers only on bucket ties (upper-bounded here as always-taken).
+* blocked short path — both layouts scan two partial blocks; unpacked adds
+  two (idx, val) interior cells, packed two words. The scan dominates, so
+  the short-path win is marginal by construction — the hybrid's routing is
+  why the long-path win matters.
+* doubling merge — per level the unpacked halo exchange ships an index
+  plane AND a value plane; packed ships one word plane. Counted over the
+  levels/width of the actually-built tables.
+
+Gate (tools/check.sh): at n=2**16 with packed32-fitting data, packed
+bytes/query <= 60% of unpacked on the long path (>= 1.67x reduction; the
+ISSUE bar is 1.5x) and packed merge traffic <= 60% of unpacked.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, sparse_table
+
+from . import common
+from .common import emit, make_queries, time_fn
+
+N_GATE = 1 << 16
+
+# Set by run(): the last byte-accounting report, stamped into the harness's
+# ``_meta`` JSON so BENCH_*.json records which layouts the tree ships and
+# what their measured byte ratios were.
+LAST_REPORT: dict = {}
+
+
+def _st_query_bytes_unpacked(t: sparse_table.SparseTable) -> int:
+    # Two doubling-table cells, two candidate-value gathers.
+    return 2 * t.idx.dtype.itemsize + 2 * t.x.dtype.itemsize
+
+
+def _st_query_bytes_packed(t: sparse_table.PackedSparseTable) -> int:
+    b = 2 * t.words.dtype.itemsize
+    if t.x is not None:  # quantized: exact fallback gathers (tie upper bound)
+        b += 2 * t.x.dtype.itemsize
+    return b
+
+
+def _merge_bytes_unpacked(t: sparse_table.SparseTable) -> int:
+    # Per doubling level the merge reads a shifted index plane and gathers a
+    # value plane; the distributed build ships exactly these two planes per
+    # level across shard boundaries.
+    levels, width = t.idx.shape
+    return levels * width * (t.idx.dtype.itemsize + t.x.dtype.itemsize)
+
+
+def _merge_bytes_packed(t: sparse_table.PackedSparseTable) -> int:
+    levels, width = t.words.shape
+    return levels * width * t.words.dtype.itemsize
+
+
+def report(n: int = N_GATE) -> dict:
+    """Byte accounting for layouts over packed32-fitting data (the gate)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-1000, 1000, size=n).astype(np.int32))
+    un = sparse_table.build(x)
+    out = {"n": int(n), "unpacked_query_bytes": _st_query_bytes_unpacked(un),
+           "unpacked_merge_bytes": _merge_bytes_unpacked(un)}
+    for layout in ("packed32", "packed64", "quantized"):
+        t, spec = sparse_table.build_packed(x, layout=layout)
+        out[f"{layout}_query_bytes"] = _st_query_bytes_packed(t)
+        out[f"{layout}_merge_bytes"] = _merge_bytes_packed(t)
+        out[f"{layout}_resolved"] = spec.layout
+    out["gate_query_ratio"] = out["packed32_query_bytes"] / out["unpacked_query_bytes"]
+    out["gate_merge_ratio"] = out["packed32_merge_bytes"] / out["unpacked_merge_bytes"]
+    return out
+
+
+def run():
+    n = 1 << 12 if common.SMOKE else N_GATE
+    rep = report(n)
+    LAST_REPORT.clear()
+    LAST_REPORT.update(rep)
+    for layout in ("packed32", "packed64", "quantized"):
+        q, m = rep[f"{layout}_query_bytes"], rep[f"{layout}_merge_bytes"]
+        emit(
+            f"bandwidth/query_bytes/{layout}/n={n}",
+            0.0,
+            f"{q}B_vs_unpacked_{rep['unpacked_query_bytes']}B"
+            f"_x{rep['unpacked_query_bytes'] / q:.2f}",
+        )
+        emit(
+            f"bandwidth/merge_bytes/{layout}/n={n}",
+            0.0,
+            f"{m}B_vs_unpacked_{rep['unpacked_merge_bytes']}B"
+            f"_x{rep['unpacked_merge_bytes'] / m:.2f}",
+        )
+
+    # Wall-clock cross-check: the same long-range batch through both layouts.
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-1000, 1000, size=n).astype(np.int32))
+    batch = 1 << 10 if common.SMOKE else 1 << 14
+    l, r = make_queries(rng, n, batch, "large")
+    lj, rj = jnp.asarray(l), jnp.asarray(r)
+    un = sparse_table.build(x)
+
+    def q_unpacked(lq, rq):
+        idx = sparse_table.query(un, lq, rq)
+        return idx, un.x[idx]
+
+    q_unpacked_jit = jax.jit(q_unpacked)
+    t_un = time_fn(q_unpacked_jit, lj, rj)
+    emit(f"bandwidth/st_query_unpacked/n={n}", t_un / batch, f"batch={batch}")
+    for layout in ("packed32", "packed64"):
+        t, spec = sparse_table.build_packed(x, layout=layout)
+        t_pk = time_fn(lambda a, b: sparse_table.query_packed(t, spec, a, b), lj, rj)
+        emit(
+            f"bandwidth/st_query_{layout}/n={n}",
+            t_pk / batch,
+            f"x{t_un / t_pk:.2f}_vs_unpacked",
+        )

@@ -20,7 +20,7 @@ def main() -> None:
         default="",
         help="comma list: fig12,fig13,fig10,fig14,table2,build_mem,roofline,"
         "crossover,sharded_hybrid,serve_latency,update_throughput,"
-        "fault_overhead,fleet_scaling,kernel_tuning",
+        "fault_overhead,fleet_scaling,kernel_tuning,bandwidth",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -34,6 +34,7 @@ def main() -> None:
             ap.error(f"--json {args.json}: {e}")
 
     from . import (
+        bandwidth,
         batch_scaling,
         common,
         fault_overhead,
@@ -67,6 +68,7 @@ def main() -> None:
         "fault_overhead": fault_overhead.run,
         "fleet_scaling": fleet_scaling.run,
         "kernel_tuning": kernel_tuning.run,
+        "bandwidth": bandwidth.run,
     }
     if only:
         unknown = only - set(suites)
@@ -94,6 +96,8 @@ def main() -> None:
             rev = None
         import jax
 
+        from repro.core import packing
+
         by_suite["_meta"] = {
             "git_rev": rev,
             "fault_seed": fault_overhead.FAULT_SEED,
@@ -102,6 +106,10 @@ def main() -> None:
             "device_count": len(jax.devices()),
             "jax_version": jax.__version__,
             "autotune_cache": dict(kernel_tuning.CACHE_STATE) or None,
+            # Packed-layout stamp: which fused-word layouts this tree ships
+            # and the measured byte ratios (populated when `bandwidth` ran).
+            "layouts": ["unpacked"] + list(packing.PACKED_LAYOUTS),
+            "bandwidth_report": dict(bandwidth.LAST_REPORT) or None,
         }
         with open(args.json, "w") as f:
             json.dump(by_suite, f, indent=2, sort_keys=True)

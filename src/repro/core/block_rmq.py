@@ -19,14 +19,24 @@ kernel path; ``repro.core.lane_rmq`` is the beyond-paper O(1) gather variant.
 
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from . import sparse_table
+from . import packing, sparse_table
 
-__all__ = ["BlockRMQ", "build", "query", "maxval"]
+__all__ = [
+    "BlockRMQ",
+    "PackedBlockRMQ",
+    "build",
+    "build_packed",
+    "maxval",
+    "query",
+    "query_packed",
+    "query_words",
+]
 
 
 def maxval(dtype):
@@ -127,3 +137,159 @@ def query(s: BlockRMQ, l: jax.Array, r: jax.Array) -> Tuple[jax.Array, jax.Array
     v, i = _pick(lv, li, iv, ii)
     v, i = _pick(v, i, rv, ri)
     return i, v
+
+
+# --- packed variant ---------------------------------------------------------
+#
+# One word plane per tier (DESIGN.md §13): the partial-block scan, the
+# interior doubling lookup, and the three-way merge all become plain word
+# mins — no argmin/take_along_axis, no bmin_gidx plane, no select chains.
+# Level 0 of ``stw`` *is* the per-block-minimum plane, so the blocked
+# structure is exactly two planes: (nb, bs) words + (K, nb) words.
+
+
+class PackedBlockRMQ(NamedTuple):
+    """Blocked RMQ over packed (value, index) words.
+
+    ``blocks`` holds the packed element words (global indices; pads are
+    ``pad_word``) for the exact layouts, or the *raw* padded values for the
+    quantized layout (partial scans must stay exact — only the interior
+    doubling tier quantizes). ``stw`` is the packed doubling table over
+    per-block minima; its index fields are exact in every layout.
+    """
+
+    blocks: jax.Array  # (nb, bs): packed words, or raw values when quantized
+    stw: jax.Array  # (K, nb) packed words over per-block leftmost minima
+
+
+def _doubling_min(words: jax.Array) -> jax.Array:
+    """Doubling table over packed words: plain ``minimum`` per level."""
+    n = words.shape[0]
+    k_levels = max(1, (n - 1).bit_length() + 1) if n > 1 else 1
+    cur = words
+    rows = [cur]
+    for k in range(1, k_levels):
+        h = 1 << (k - 1)
+        if h >= n:
+            rows.append(cur)
+            continue
+        shifted = jnp.concatenate([cur[h:], jnp.broadcast_to(cur[-1], (h,))])
+        cur = jnp.minimum(cur, shifted)
+        rows.append(cur)
+    return jnp.stack(rows)
+
+
+def build_packed(x: jax.Array, block_size: int, spec=None, layout: str = "auto"):
+    """Packed blocked build; returns ``(PackedBlockRMQ, spec)``.
+
+    Elements pack with *global* indices before padding, so pads are the
+    reserved ``pad_word`` (always lose a min) rather than packed maxval —
+    this is what lets packed32 keep its fit even though the raw pad value
+    (int-max / +inf) would blow the measured key range.
+    """
+    if block_size % 128 != 0:
+        raise ValueError(f"block_size must be a multiple of 128, got {block_size}")
+    n = x.shape[0]
+    if spec is None:
+        spec = packing.spec_for(x, n, layout)
+    nb = -(-n // block_size)
+    pad = nb * block_size - n
+    if spec.layout == "quantized":
+        # Exact partial tiers + quantized interior: raw blocks, exact
+        # per-block argmins, then bucket-encode the exact doubling table.
+        s = build(x, block_size)
+        stw = packing.pack(spec, s.bmin_val[s.st.idx], s.bmin_gidx[s.st.idx])
+        return PackedBlockRMQ(blocks=s.x_blocks, stw=stw), spec
+    xw = packing.pack(spec, x, jnp.arange(n, dtype=jnp.int32))
+    xw = jnp.pad(xw, (0, pad), constant_values=packing.pad_word(spec))
+    xwb = xw.reshape(nb, block_size)
+    stw = _doubling_min(jnp.min(xwb, axis=1))
+    return PackedBlockRMQ(blocks=xwb, stw=stw), spec
+
+
+def _scan_words(wb: jax.Array, blk, lo, hi, pad):
+    """Masked word-min of wb[blk, lo:hi+1] per query; ``pad`` when empty."""
+    bs = wb.shape[1]
+    rows = jnp.take(wb, blk, axis=0)
+    lanes = jnp.arange(bs, dtype=jnp.int32)[None, :]
+    inside = (lanes >= lo[:, None]) & (lanes <= hi[:, None])
+    return jnp.min(jnp.where(inside, rows, pad), axis=1)
+
+
+def _interior_words(stw, bl, br, nb):
+    """The fully-covered-blocks candidate as (wa, wb) doubling cells."""
+    ilo = jnp.clip(bl + 1, 0, nb - 1)
+    ihi = jnp.clip(br - 1, 0, nb - 1)
+    ihi = jnp.maximum(ihi, ilo)
+    k = sparse_table.exact_log2(ihi - ilo + 1)
+    wa = stw[k, ilo]
+    wb = stw[k, ihi - jnp.left_shift(jnp.int32(1), k) + 1]
+    return wa, wb
+
+
+def query_words(spec, blocks, stw, l, r):
+    """Exact-layout blocked query -> the packed min *word* per query.
+
+    The merge core shared by the single-host packed query and the
+    distributed single-pmin merge (``core.distributed``): callers unpack,
+    or pmin across shards first — the word stays the unit of exchange.
+    """
+    bs = blocks.shape[1]
+    nb = blocks.shape[0]
+    pad = jnp.asarray(packing.pad_word(spec), packing.word_dtype(spec))
+    bl = l // bs
+    br = r // bs
+    ll = l - bl * bs
+    rl = r - br * bs
+    lend = jnp.where(bl == br, rl, bs - 1)
+    has_interior = (br - bl) >= 2
+    wa, wb = _interior_words(stw, bl, br, nb)
+    lw = _scan_words(blocks, bl, ll, lend, pad)
+    rw = _scan_words(blocks, br, jnp.zeros_like(rl), rl, pad)
+    rw = jnp.where(br > bl, rw, pad)
+    iw = jnp.where(has_interior, jnp.minimum(wa, wb), pad)
+    return jnp.minimum(jnp.minimum(lw, iw), rw)
+
+
+@partial(jax.jit, static_argnums=0)
+def _query_packed_jit(spec, blocks, stw, l, r):
+    bs = blocks.shape[1]
+    nb = blocks.shape[0]
+    if spec.layout != "quantized":
+        w = query_words(spec, blocks, stw, l, r)
+        return packing.unpack_idx(spec, w), packing.unpack_val(spec, w)
+
+    big = maxval(blocks.dtype)
+    bl = l // bs
+    br = r // bs
+    ll = l - bl * bs
+    rl = r - br * bs
+    lend = jnp.where(bl == br, rl, bs - 1)
+    has_interior = (br - bl) >= 2
+    wa, wb = _interior_words(stw, bl, br, nb)
+
+    # Quantized: exact partial scans over raw blocks; interior cells break
+    # bucket ties with exact value gathers from the flat raw plane.
+    lv, li = _block_scan(blocks, bl, ll, lend)
+    rv, ri = _block_scan(blocks, br, jnp.zeros_like(rl), rl)
+    rv = jnp.where(br > bl, rv, big)
+    flat = blocks.reshape(-1)
+    ia = packing.unpack_idx(spec, wa)
+    ib = packing.unpack_idx(spec, wb)
+    va = flat[ia]
+    vb = flat[ib]
+    collide = (wa >> spec.idx_bits) == (wb >> spec.idx_bits)
+    take_a = jnp.where(collide, va <= vb, wa <= wb)
+    iv = jnp.where(take_a, va, vb)
+    ii = jnp.where(take_a, ia, ib)
+    iv = jnp.where(has_interior, iv, big)
+    v, i = _pick(lv, li, iv, ii)
+    v, i = _pick(v, i, rv, ri)
+    return i, v
+
+
+def query_packed(s: PackedBlockRMQ, spec, l: jax.Array, r: jax.Array):
+    """Batched packed RMQ -> ``(idx int32, val)``, exact leftmost ties."""
+    return _query_packed_jit(
+        spec, s.blocks, s.stw, l.astype(jnp.int32), r.astype(jnp.int32)
+    )

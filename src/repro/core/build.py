@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import block_rmq, calib_cache, distributed, lane_rmq, lca, sparse_table
+from . import block_rmq, calib_cache, distributed, lane_rmq, lca, packing, sparse_table
 
 __all__ = [
     "BuildPlan",
@@ -118,6 +118,7 @@ def _resolve_threshold(
     calibrate_kw: Optional[dict] = None,
     key_mode: Optional[str] = None,
     key_mesh_shape=None,
+    layout: Optional[str] = None,
 ) -> int:
     """The routing-threshold policy, shared by both hybrid planners.
 
@@ -129,7 +130,9 @@ def _resolve_threshold(
 
     Sharded planners pass ``key_mode``/``key_mesh_shape`` (cache key v2) so
     every (mode, mesh factoring) owns its own cached threshold; single-host
-    planners omit them and keep reading their v1 entries.
+    planners omit them and keep reading their v1 entries. ``layout`` (cache
+    key v3) scopes the measurement to a packed word layout — the crossover
+    moves when both tiers read packed planes.
     """
     from . import hybrid  # deferred: hybrid lowers its build through here
 
@@ -139,7 +142,12 @@ def _resolve_threshold(
         return int(threshold)
     if threshold == "cached":
         key = calib_cache.cache_key(
-            n, block_size, n_devices=n_devices, mode=key_mode, mesh_shape=key_mesh_shape
+            n,
+            block_size,
+            n_devices=n_devices,
+            mode=key_mode,
+            mesh_shape=key_mesh_shape,
+            layout=layout,
         )
         hit = calib_cache.load(key, path=cache_path)
         if hit is not None:
@@ -153,6 +161,7 @@ def _resolve_threshold(
             mode=key_mode,
             mesh_shape=key_mesh_shape,
             path=cache_path,
+            layout=layout,
             **(calibrate_kw or {}),
         )
     raise ValueError(
@@ -175,6 +184,30 @@ def _resolve_kernel_config(kernel_config, n: int, block_size: int | None = None)
     if kernel_config is None or isinstance(kernel_config, str):
         return tuning.get_config(n, policy=kernel_config, block_size=block_size)
     return tuning.KernelConfig(*kernel_config)
+
+
+def _norm_packed(packed) -> Optional[str]:
+    """Normalise the ``packed=`` build kwarg to a layout request or ``None``.
+
+    ``None``/``False`` -> unpacked structures (the historical default);
+    ``True`` -> ``"auto"``; otherwise one of ``packing.LAYOUTS`` or
+    ``"auto"``. The request is resolved to a concrete ``PackSpec`` only at
+    execute time (``packing.spec_for``) — the winning layout depends on the
+    data's key range, which a plan (static, pre-``x``) cannot see.
+    """
+    if packed is None or packed is False:
+        return None
+    if packed is True:
+        return "auto"
+    packed = str(packed)
+    if packed == "unpacked":
+        return None
+    if packed != "auto" and packed not in packing.PACKED_LAYOUTS:
+        raise ValueError(
+            f"packed must be one of {('auto',) + packing.PACKED_LAYOUTS}, "
+            f"a bool, or None; got {packed!r}"
+        )
+    return packed
 
 
 # --- pipeline execution -----------------------------------------------------
@@ -329,17 +362,36 @@ def _single_host_plan(engine, n, build_fn, *, with_x=False, meta=None) -> BuildP
 
 
 @_planner("sparse_table")
-def _plan_sparse_table(n, *, mesh=None, axis_names=None):
-    return _single_host_plan("sparse_table", n, sparse_table.build, with_x=True)
+def _plan_sparse_table(n, *, mesh=None, axis_names=None, packed=None):
+    layout = _norm_packed(packed)
+    if layout is None:
+        return _single_host_plan("sparse_table", n, sparse_table.build, with_x=True)
+    # Packed state is ``((PackedSparseTable, PackSpec), x)`` — the registry
+    # query wrapper dispatches on the tuple shape.
+    return _single_host_plan(
+        "sparse_table",
+        n,
+        lambda x: sparse_table.build_packed(x, layout=layout),
+        with_x=True,
+        meta={"packed": layout},
+    )
 
 
 @_planner("block")
-def _plan_block(n, *, mesh=None, axis_names=None, block_size=128):
+def _plan_block(n, *, mesh=None, axis_names=None, block_size=128, packed=None):
+    layout = _norm_packed(packed)
+    if layout is None:
+        return _single_host_plan(
+            "block",
+            n,
+            lambda x: block_rmq.build(x, block_size),
+            meta={"block_size": block_size},
+        )
     return _single_host_plan(
         "block",
         n,
-        lambda x: block_rmq.build(x, block_size),
-        meta={"block_size": block_size},
+        lambda x: block_rmq.build_packed(x, block_size, layout=layout),
+        meta={"block_size": block_size, "packed": layout},
     )
 
 
@@ -359,23 +411,41 @@ def _plan_exhaustive(n, *, mesh=None, axis_names=None):
 
 
 @_planner("fused")
-def _plan_fused(n, *, mesh=None, axis_names=None, block_size=None, kernel_config=None):
+def _plan_fused(
+    n, *, mesh=None, axis_names=None, block_size=None, kernel_config=None, packed=None
+):
+    layout = _norm_packed(packed)
     cfg = _resolve_kernel_config(kernel_config, n, block_size)
     # A tuned config may carry its own block size; an explicit block_size
-    # pins the sweep, so the two can never disagree.
+    # pins the sweep, so the two can never disagree. A tuned layout rides
+    # along the same way: the config's own layout field wins unless the
+    # caller pins one via ``packed=``.
     bs = block_size if block_size is not None else cfg.block_size
+    if layout is None and cfg.layout != "unpacked":
+        layout = cfg.layout
+    if layout == "packed64":
+        raise ValueError(
+            "packed64 words are int64 — outside the TPU kernel vocabulary; "
+            "use the XLA engines (sparse_table/block/hybrid with packed=) "
+            "or packed32/quantized for the fused kernels"
+        )
 
     def build_fn(x):
         from repro import kernels
 
-        return kernels.ops.build(x, bs)
+        if layout is None:
+            return kernels.ops.build(x, bs)
+        return kernels.ops.build_packed(x, bs, layout=layout)
 
     def fin(state):
         state["result"] = (state["built"], cfg)
         return state
 
     plan = _single_host_plan(
-        "fused", n, build_fn, meta={"block_size": bs, "kernel_config": cfg}
+        "fused",
+        n,
+        build_fn,
+        meta={"block_size": bs, "kernel_config": cfg, "packed": layout},
     )
     stages = tuple(
         BuildStage("finalize", fin) if s.name == "finalize" else s for s in plan.stages
@@ -393,11 +463,17 @@ def _plan_hybrid(
     threshold=None,
     use_kernels=None,
     kernel_config=None,
+    packed=None,
 ):
+    pack_layout = _norm_packed(packed)
     if use_kernels is None:
         use_kernels = jax.default_backend() == "tpu"
     thr = _resolve_threshold(
-        threshold, n, block_size, calibrate_kw={"use_kernels": use_kernels}
+        threshold,
+        n,
+        block_size,
+        calibrate_kw={"use_kernels": use_kernels},
+        layout=pack_layout,
     )
     # The megakernel's launch geometry, swept within this build's block size
     # (the hybrid's structures are committed to it). Resolved only when the
@@ -409,6 +485,24 @@ def _plan_hybrid(
 
     def local(state):
         x = state["x"]
+        if pack_layout is not None:
+            # One spec for both tiers: blocked and doubling structures pack
+            # against the same (key bias, idx width), so cross-tier merges in
+            # ``dispatch_by_length`` compare words from one total order.
+            spec = packing.spec_for(x, n, pack_layout)
+            state["spec"] = spec
+            if use_kernels and spec.layout in ("packed32", "quantized"):
+                from repro import kernels
+
+                state["blocked"], _ = kernels.ops.build_packed(
+                    x, block_size, spec=spec
+                )
+            else:
+                # packed64 (int64 words) lives outside the TPU kernel
+                # vocabulary; XLA packed structures serve it.
+                state["blocked"], _ = block_rmq.build_packed(x, block_size, spec=spec)
+            state["st"], _ = sparse_table.build_packed(x, spec=spec)
+            return state
         if use_kernels:
             from repro import kernels
 
@@ -422,17 +516,34 @@ def _plan_hybrid(
         from . import hybrid
 
         x, blocked, table = state["x"], state["blocked"], state["st"]
-        if use_kernels:
+        spec = state.get("spec")
+        if spec is not None:
+            if use_kernels and spec.layout in ("packed32", "quantized"):
+                from repro import kernels
+
+                short_fn = lambda l, r: kernels.ops.query_packed(
+                    blocked, spec, l, r, config=cfg
+                )
+            else:
+                short_fn = lambda l, r: block_rmq.query_packed(blocked, spec, l, r)
+            long_fn = lambda l, r: sparse_table.query_packed(table, spec, l, r)
+        elif use_kernels:
             from repro import kernels
 
             # jitted inside; closes over the tuned launch geometry
             short_fn = lambda l, r: kernels.ops.query(blocked, l, r, config=cfg)
+            long_fn = None
         else:
             short_fn = jax.jit(lambda l, r: block_rmq.query(blocked, l, r))
+            long_fn = None
 
-        def _long(l, r):
-            idx = sparse_table.query(table, l, r)
-            return idx, x[idx]
+        if long_fn is None:
+
+            def _long(l, r):
+                idx = sparse_table.query(table, l, r)
+                return idx, x[idx]
+
+            long_fn = jax.jit(_long)
 
         state["result"] = hybrid.HybridRMQ(
             blocked=blocked,
@@ -441,7 +552,7 @@ def _plan_hybrid(
             threshold=thr,
             use_kernels=bool(use_kernels),
             short_fn=short_fn,
-            long_fn=jax.jit(_long),
+            long_fn=long_fn,
         )
         return state
 
@@ -458,6 +569,7 @@ def _plan_hybrid(
             "threshold": thr,
             "use_kernels": bool(use_kernels),
             "kernel_config": cfg,
+            "packed": pack_layout,
         },
     )
 
@@ -526,7 +638,14 @@ def _plan_sharded_st(n, *, mesh=None, axis_names=None):
 
 
 @_planner("distributed")
-def _plan_distributed(n, *, mesh=None, axis_names=None, block_size=1024):
+def _plan_distributed(n, *, mesh=None, axis_names=None, block_size=1024, packed=None):
+    pack_layout = _norm_packed(packed)
+    if pack_layout == "quantized":
+        raise ValueError(
+            "quantized packing is single-host only: its exact-fallback gather "
+            "needs the raw blocks resident, which the sharded merge does not "
+            "ship; use packed32/packed64/auto for mesh engines"
+        )
     mesh, axis_names = _mesh_or_default(mesh, axis_names)
     num = distributed.num_shards(mesh, axis_names)
     chunk = num * block_size
@@ -534,13 +653,25 @@ def _plan_distributed(n, *, mesh=None, axis_names=None, block_size=1024):
     layout = ShardLayout(n=n, n_pad=n_pad, num_shards=num, shard_len=n_pad // num)
 
     def local(state):
-        state["blocked"] = distributed.build_sharded(
-            state["x"], mesh, axis_names, block_size
-        )
+        if pack_layout is not None:
+            # auto resolves to packed32/packed64 only, never quantized.
+            spec = packing.spec_for(state["x"], n, pack_layout)
+            state["spec"] = spec
+            state["blocked"] = distributed.build_sharded_packed(
+                state["x"], mesh, axis_names, block_size, spec
+            )
+        else:
+            state["blocked"] = distributed.build_sharded(
+                state["x"], mesh, axis_names, block_size
+            )
         return state
 
     def fin(state):
-        state["result"] = (state["blocked"], distributed.make_query_fn(mesh, axis_names))
+        if "spec" in state:
+            qfn = distributed.make_packed_query_fn(mesh, axis_names, state["spec"])
+        else:
+            qfn = distributed.make_query_fn(mesh, axis_names)
+        state["result"] = (state["blocked"], qfn)
         return state
 
     return BuildPlan(
@@ -551,7 +682,12 @@ def _plan_distributed(n, *, mesh=None, axis_names=None, block_size=1024):
             BuildStage("local_build", local),
             BuildStage("finalize", fin),
         ),
-        {"block_size": block_size, "mesh": mesh, "axis_names": axis_names},
+        {
+            "block_size": block_size,
+            "mesh": mesh,
+            "axis_names": axis_names,
+            "packed": pack_layout,
+        },
     )
 
 
@@ -578,11 +714,19 @@ def _plan_sharded_hybrid(
     threshold=None,
     mode="shard_structure",
     cache_path=None,
+    packed=None,
 ):
     from . import sharded_hybrid
 
     if mode not in sharded_hybrid.MODES:
         raise ValueError(f"unknown mode {mode!r}; have {sharded_hybrid.MODES}")
+    pack_layout = _norm_packed(packed)
+    if pack_layout == "quantized":
+        raise ValueError(
+            "quantized packing is single-host only: its exact-fallback gather "
+            "needs the raw blocks resident, which the sharded merge does not "
+            "ship; use packed32/packed64/auto for mesh engines"
+        )
     mesh, axis_names = _mesh_or_default(mesh, axis_names)
     num = distributed.num_shards(mesh, axis_names)
     struct_axes, batch_axes = _mode_axes(mode, axis_names)
@@ -598,6 +742,7 @@ def _plan_sharded_hybrid(
         # Cache key v2: the measurement varies per (mode, mesh factoring).
         key_mode=mode,
         key_mesh_shape=tuple(mesh.shape[a] for a in mesh.axis_names),
+        layout=pack_layout,
     )
     num_struct = distributed.num_shards(mesh, struct_axes) if struct_axes else 1
     layout = _st_layout(n, num_struct)
@@ -606,37 +751,108 @@ def _plan_sharded_hybrid(
     if struct_axes:
         lay, st_local, st_halo = _sharded_st_stages(mesh, struct_axes, layout)
 
-        def local(state):
-            state["blocked"] = distributed.build_sharded(
-                state["x"], mesh, struct_axes, block_size
-            )
-            return st_local(state)
+        if pack_layout is not None:
 
-        stages.append(BuildStage("shard_layout", lay))
-        stages.append(BuildStage("local_build", local))
-        stages.append(BuildStage("halo_exchange", st_halo))
-        short_fn = distributed.make_query_fn(
-            mesh, struct_axes, batch_axes=batch_axes or None
-        )
-        long_fn = distributed.make_st_query_fn(
-            mesh, struct_axes, batch_axes=batch_axes or None
-        )
+            def local(state):
+                x = state["x"]
+                # One spec for both tiers (same key bias / idx width), so
+                # the packed halo recurrence and the blocked merge share a
+                # total order. Words carry GLOBAL indices — merges need no
+                # per-shard offsetting and ship ONE plane per level.
+                spec = packing.spec_for(x, n, pack_layout)
+                state["spec"] = spec
+                state["blocked"] = distributed.build_sharded_packed(
+                    x, mesh, struct_axes, block_size, spec
+                )
+                state["st_w0"] = distributed.pack_global(x, spec, layout.n_pad)
+                return state
+
+            def halo(state):
+                spec = state["spec"]
+                words = distributed.st_halo_doubling_packed(
+                    state.pop("st_w0"), mesh, struct_axes, spec
+                )
+                state["st"] = sparse_table.PackedSparseTable(words=words)
+                return state
+
+            stages.append(BuildStage("shard_layout", lambda state: state))
+            stages.append(BuildStage("local_build", local))
+            stages.append(BuildStage("halo_exchange", halo))
+        else:
+
+            def local(state):
+                state["blocked"] = distributed.build_sharded(
+                    state["x"], mesh, struct_axes, block_size
+                )
+                return st_local(state)
+
+            stages.append(BuildStage("shard_layout", lay))
+            stages.append(BuildStage("local_build", local))
+            stages.append(BuildStage("halo_exchange", st_halo))
     else:  # shard_batch: replicated structures, no halo stage
 
-        def local(state):
-            state["blocked"] = distributed.build_replicated(
-                state["x"], mesh, block_size
-            )
-            state["st"] = distributed.build_replicated_st(state["x"], mesh)
-            return state
+        if pack_layout is not None:
+
+            def local(state):
+                x = state["x"]
+                spec = packing.spec_for(x, n, pack_layout)
+                state["spec"] = spec
+                state["blocked"] = distributed.build_replicated_packed(
+                    x, mesh, block_size, spec
+                )
+                state["st"] = distributed.build_replicated_st_packed(x, mesh, spec)
+                return state
+
+        else:
+
+            def local(state):
+                state["blocked"] = distributed.build_replicated(
+                    state["x"], mesh, block_size
+                )
+                state["st"] = distributed.build_replicated_st(state["x"], mesh)
+                return state
 
         stages.append(BuildStage("shard_layout", lambda state: state))
         stages.append(BuildStage("local_build", local))
-        short_fn = distributed.make_query_fn(mesh, axis_names, batch_sharded=True)
-        long_fn = distributed.make_st_query_fn(mesh, axis_names, batch_sharded=True)
+
+    def _query_fns(spec):
+        """Query closures, resolved at finalize time: the packed variants
+        close over the data-dependent ``PackSpec`` a plan cannot know."""
+        if spec is not None:
+            if struct_axes:
+                return (
+                    distributed.make_packed_query_fn(
+                        mesh, struct_axes, spec, batch_axes=batch_axes or None
+                    ),
+                    distributed.make_packed_st_query_fn(
+                        mesh, struct_axes, spec, batch_axes=batch_axes or None
+                    ),
+                )
+            return (
+                distributed.make_packed_query_fn(
+                    mesh, axis_names, spec, batch_sharded=True
+                ),
+                distributed.make_packed_st_query_fn(
+                    mesh, axis_names, spec, batch_sharded=True
+                ),
+            )
+        if struct_axes:
+            return (
+                distributed.make_query_fn(
+                    mesh, struct_axes, batch_axes=batch_axes or None
+                ),
+                distributed.make_st_query_fn(
+                    mesh, struct_axes, batch_axes=batch_axes or None
+                ),
+            )
+        return (
+            distributed.make_query_fn(mesh, axis_names, batch_sharded=True),
+            distributed.make_st_query_fn(mesh, axis_names, batch_sharded=True),
+        )
 
     def fin(state):
         x = state["x"]
+        short_fn, long_fn = _query_fns(state.get("spec"))
         state["result"] = sharded_hybrid.ShardedHybridRMQ(
             blocked=state["blocked"],
             st=state["st"],
@@ -663,5 +879,6 @@ def _plan_sharded_hybrid(
             "axis_names": axis_names,
             "struct_axes": struct_axes,
             "batch_axes": batch_axes,
+            "packed": pack_layout,
         },
     )

@@ -25,9 +25,19 @@ staleness rules as thresholds. ``load``/``store`` stay int-typed for
 threshold callers; ``load_entry``/``store_entry`` are the generic seam.
 The version bump marks every v1 entry stale (thresholds re-measure once).
 
-A version mismatch marks every entry stale: ``load`` misses, and the next
-``store`` drops the old entries wholesale. Corrupt or unreadable files are
-treated as empty — a cache must never turn into a crash.
+Cache v3: the packed-structure ``layout`` joins the key schema. A
+measurement on packed words is a different measurement (one plane moved,
+one collective, different fetch volume), so ``cache_key``/the autotuner's
+``tuning_key`` append ``/layout=<name>`` — but only for non-default
+layouts, keeping every existing unpacked key byte-identical. v2 files are
+*migrated*, not dropped: every v2 entry was measured on unpacked
+structures, which is exactly what the unchanged unpacked keys mean, so
+``_read`` keeps them (annotating ``kernel/`` config dicts with
+``layout: "unpacked"``) and the next store persists the file as v3.
+
+A pre-v2 version mismatch marks every entry stale: ``load`` misses, and
+the next ``store`` drops the old entries wholesale. Corrupt or unreadable
+files are treated as empty — a cache must never turn into a crash.
 
 Path resolution: explicit ``path`` argument > ``RMQ_CALIB_CACHE`` env var >
 ``~/.cache/rtxrmq-tpu/calibration.json``.
@@ -54,8 +64,12 @@ __all__ = [
     "store_entry",
 ]
 
-CACHE_VERSION = 2
+CACHE_VERSION = 3
 ENV_VAR = "RMQ_CALIB_CACHE"
+
+# v2 -> v3 is key-schema growth, not a measurement change: every v2 entry
+# maps 1:1 onto a v3 unpacked-layout entry.
+_MIGRATABLE_VERSIONS = (2,)
 
 
 def default_path() -> Path:
@@ -73,6 +87,7 @@ def cache_key(
     n_devices: int | None = None,
     mode: str | None = None,
     mesh_shape=None,
+    layout: str | None = None,
 ) -> str:
     """The cache key: array size, block size, backend, and device count.
 
@@ -83,6 +98,10 @@ def cache_key(
     configuration first owned the threshold for every mode on that mesh
     size (the ROADMAP bug). Single-host builds pass neither and keep the
     v1 key, so their existing entries stay valid.
+
+    Key v3 (packed structures): a packed build's crossover is measured on
+    word planes, so ``layout`` extends the key. The default (None or
+    ``"unpacked"``) appends nothing — migrated v2 entries keep matching.
     """
     if backend is None:
         backend = jax.default_backend()
@@ -92,20 +111,49 @@ def cache_key(
     if mode is not None:
         shape = "x".join(str(int(s)) for s in mesh_shape) if mesh_shape else "?"
         key += f"/mode={mode}/mesh={shape}"
+    if layout is not None and layout != "unpacked":
+        key += f"/layout={layout}"
     return key
 
 
+def _migrate(version, entries: dict) -> dict:
+    """Lift a prior-version entries dict into the current schema.
+
+    v2 -> v3: every v2 measurement was taken on unpacked structures and v3
+    left unpacked keys unchanged, so the keys carry over verbatim; only the
+    ``kernel/`` config dicts gain an explicit ``layout: "unpacked"`` stamp
+    (threshold ints need none — their key IS the layout marker).
+    """
+    out = {}
+    for key, value in entries.items():
+        if key.startswith("kernel/") and isinstance(value, dict):
+            value = {**value, "layout": value.get("layout", "unpacked")}
+        out[key] = value
+    return out
+
+
 def _read(path: Path) -> dict:
-    """Entries dict, or {} on missing / corrupt / stale-version files."""
+    """Entries dict, or {} on missing / corrupt / stale-version files.
+
+    Migratable prior versions (v2) are lifted in-memory; the file itself is
+    rewritten as the current version on the next ``store``.
+    """
     try:
         with open(path) as f:
             data = json.load(f)
     except (OSError, ValueError):
         return {}
-    if not isinstance(data, dict) or data.get("version") != CACHE_VERSION:
-        return {}  # stale format: every entry is a miss
+    if not isinstance(data, dict):
+        return {}
     entries = data.get("entries")
-    return entries if isinstance(entries, dict) else {}
+    if not isinstance(entries, dict):
+        return {}
+    version = data.get("version")
+    if version == CACHE_VERSION:
+        return entries
+    if version in _MIGRATABLE_VERSIONS:
+        return _migrate(version, entries)
+    return {}  # stale format: every entry is a miss
 
 
 def load_entry(key: str, path: str | Path | None = None):
@@ -152,6 +200,7 @@ def get_threshold(
     n_devices: int | None = None,
     mode: str | None = None,
     mesh_shape=None,
+    layout: str | None = None,
     path: str | Path | None = None,
     **calibrate_kw,
 ) -> int:
@@ -159,7 +208,9 @@ def get_threshold(
 
     ``mode``/``mesh_shape`` extend the key for sharded measurements (key v2)
     and ``mode`` is forwarded to the calibration itself; single-host callers
-    omit both and keep hitting their v1 entries.
+    omit both and keep hitting their v1 entries. ``layout`` (key v3) does
+    the same for packed builds: it extends the key and makes the miss-path
+    measurement time the packed constituents.
     """
     key = cache_key(
         n,
@@ -168,6 +219,7 @@ def get_threshold(
         n_devices=n_devices,
         mode=mode,
         mesh_shape=mesh_shape,
+        layout=layout,
     )
     hit = load(key, path)
     if hit is not None:
@@ -176,6 +228,8 @@ def get_threshold(
 
     if mode is not None:
         calibrate_kw["mode"] = mode
+    if layout is not None and layout != "unpacked":
+        calibrate_kw["layout"] = layout
     thr = hybrid.calibrate(n, block_size=block_size, **calibrate_kw)
     store(key, thr, path)
     return thr

@@ -67,23 +67,33 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
 
 from typing import NamedTuple
 
-from . import block_rmq, sparse_table
-from .block_rmq import BlockRMQ, maxval
-from .sparse_table import SparseTable
+from . import block_rmq, packing, sparse_table
+from .block_rmq import BlockRMQ, PackedBlockRMQ, maxval
+from .sparse_table import PackedSparseTable, SparseTable
 
 __all__ = [
     "ShardedSparseTable",
     "build_replicated",
+    "build_replicated_packed",
     "build_replicated_st",
+    "build_replicated_st_packed",
     "build_sharded",
+    "build_sharded_packed",
     "build_sharded_st",
+    "build_sharded_st_packed",
+    "make_packed_query_fn",
+    "make_packed_st_query_fn",
     "make_query_fn",
     "make_st_query_fn",
     "num_shards",
+    "pack_global",
     "pad_to_shards",
     "patch_sharded",
+    "patch_sharded_packed",
     "patch_sharded_st",
+    "patch_sharded_st_packed",
     "st_halo_doubling",
+    "st_halo_doubling_packed",
     "st_levels",
     "st_local_level0",
 ]
@@ -772,3 +782,477 @@ def make_st_query_fn(
         return idx[:b], val[:b]
 
     return jax.jit(fn)
+
+
+# --- packed (single-word-plane) distributed tier ----------------------------
+#
+# Every structure above moves an (idx, val) PAIR through its halos, pmins,
+# and patches. The packed tier (DESIGN.md §13) moves ONE plane of
+# order-isomorphic words (``core.packing``): the two-pmin leftmost merge
+# collapses to a single pmin, the level-k halo exchange ships half the
+# bytes (packed32) or half the collectives (packed64), and the patch
+# kernels repair one plane. Exact layouts only — the quantized layout's
+# bucket-tie fallback needs value gathers that would cross shards, so
+# planners reject it for mesh engines.
+
+
+def pack_global(x: jax.Array, spec, n_pad: int) -> jax.Array:
+    """Pack ``x`` with *global* indices and pad to ``n_pad`` with pad words.
+
+    Packing precedes padding so pads are the reserved ``pad_word`` (always
+    lose a min) rather than an encodable maxval element — this is also what
+    keeps packed32's measured key-range fit independent of padding.
+    """
+    n = x.shape[0]
+    xw = packing.pack(spec, x, jnp.arange(n, dtype=jnp.int32))
+    return jnp.pad(xw, (0, n_pad - n), constant_values=packing.pad_word(spec))
+
+
+def _pad_word_arr(spec):
+    return jnp.asarray(packing.pad_word(spec), packing.word_dtype(spec))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_build_packed_fn(mesh: Mesh, axis_names: Tuple[str, ...], block_size: int, spec):
+    def local_build(w_local):
+        wb = w_local[0].reshape(-1, block_size)
+        return PackedBlockRMQ(
+            blocks=wb, stw=block_rmq._doubling_min(jnp.min(wb, axis=1))
+        )
+
+    out_specs = PackedBlockRMQ(blocks=P(axis_names), stw=P(None, axis_names))
+    return jax.jit(
+        shard_map(
+            local_build,
+            mesh=mesh,
+            in_specs=P(axis_names),
+            out_specs=out_specs,
+            check_vma=False,
+        )
+    )
+
+
+def build_sharded_packed(
+    x: jax.Array, mesh: Mesh, axis_names: Sequence[str], block_size: int, spec
+) -> PackedBlockRMQ:
+    """Per-shard packed blocked structures (one word plane per tier).
+
+    Words carry global indices, so shard merges need no index offsetting —
+    the min word across shards is already the global answer.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    chunk = num * block_size
+    n_pad = -(-x.shape[0] // chunk) * chunk
+    xw = pack_global(x, spec, n_pad)
+    return _sharded_build_packed_fn(mesh, axis_names, block_size, spec)(
+        xw.reshape(num, -1)
+    )
+
+
+def build_replicated_packed(
+    x: jax.Array, mesh: Mesh, block_size: int, spec
+) -> PackedBlockRMQ:
+    """Full packed blocked structure replicated on every device."""
+    s, _ = block_rmq.build_packed(x, block_size, spec=spec)
+    return jax.device_put(s, jax.sharding.NamedSharding(mesh, P()))
+
+
+def make_packed_query_fn(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    spec,
+    *,
+    batch_sharded: bool = False,
+    batch_axes: Sequence[str] | None = None,
+):
+    """Jitted packed distributed query: (PackedBlockRMQ, l, r) -> (idx, val).
+
+    Mirrors ``make_query_fn``'s three modes; the structure-sharded merge is
+    ONE pmin over packed words instead of the two-pmin (value, then index)
+    reduction — half the collectives, and exact leftmost ties by word order.
+    """
+    axis_names = tuple(axis_names)
+    batch_axes = _check_batch_axes(axis_names, batch_axes, batch_sharded)
+    pad = packing.pad_word(spec)
+
+    if batch_sharded:
+        num = num_shards(mesh, axis_names)
+
+        def local_bs(s: PackedBlockRMQ, l, r):
+            w = block_rmq.query_words(spec, s.blocks, s.stw, l, r)
+            return packing.unpack_idx(spec, w), packing.unpack_val(spec, w)
+
+        inner = shard_map(
+            local_bs,
+            mesh=mesh,
+            in_specs=(
+                PackedBlockRMQ(blocks=P(), stw=P()),
+                P(axis_names),
+                P(axis_names),
+            ),
+            out_specs=(P(axis_names), P(axis_names)),
+            check_vma=False,
+        )
+
+        def fn(s: PackedBlockRMQ, l, r):
+            lp, rp, b = _pad_batch(l, r, num)
+            idx, val = inner(s, lp, rp)
+            return idx[:b], val[:b]
+
+        return jax.jit(fn)
+
+    def local_query(s: PackedBlockRMQ, l, r):
+        bs = s.blocks.shape[1]
+        local_n = s.blocks.shape[0] * bs
+        off = _flat_axis_index(axis_names) * local_n
+
+        has = (r >= off) & (l <= off + local_n - 1)
+        ql = jnp.clip(l - off, 0, local_n - 1)
+        qr = jnp.clip(r - off, 0, local_n - 1)
+        w = block_rmq.query_words(spec, s.blocks, s.stw, ql, qr)
+        w = jnp.where(has, w, pad)
+        # Exact leftmost merge with ONE min all-reduce over ICI.
+        wmin = jax.lax.pmin(w, axis_names)
+        return packing.unpack_idx(spec, wmin), packing.unpack_val(spec, wmin)
+
+    spec_b = P(batch_axes) if batch_axes else P()
+    inner = shard_map(
+        local_query,
+        mesh=mesh,
+        in_specs=(
+            PackedBlockRMQ(blocks=P(axis_names), stw=P(None, axis_names)),
+            spec_b,
+            spec_b,
+        ),
+        out_specs=(spec_b, spec_b),
+        check_vma=False,
+    )
+    if not batch_axes:
+        return jax.jit(inner)
+    nb = num_shards(mesh, batch_axes)
+
+    def fn(s: PackedBlockRMQ, l, r):
+        lp, rp, b = _pad_batch(l, r, nb)
+        idx, val = inner(s, lp, rp)
+        return idx[:b], val[:b]
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _st_halo_packed_fn(mesh: Mesh, axis_names: Tuple[str, ...], n_pad: int, num: int, spec):
+    shard_len = n_pad // num
+    k_levels = st_levels(n_pad)
+    pad = packing.pad_word(spec)
+
+    def local(w):
+        flat = _flat_axis_index(axis_names)
+        cols = jnp.arange(shard_len, dtype=jnp.int32)
+        is_last = flat == num - 1
+        rows = [w]
+        for k in range(1, k_levels):
+            h = 1 << (k - 1)
+            if h >= n_pad:
+                rows.append(w)
+                continue
+            # Same transport as st_halo_doubling, HALF the planes: one
+            # word array rides each _flat_shift instead of an (idx, val)
+            # pair, and the tail clamp is one pmin broadcast (the last
+            # shard's word beats every non-contributor's pad filler).
+            d, r = divmod(h, shard_len)
+            ww = _flat_shift(w, mesh, axis_names, d)
+            if r:
+                bw = _flat_shift(w, mesh, axis_names, d + 1)
+                ww = jnp.concatenate([ww[r:], bw[:r]])
+            g = flat * shard_len + h + cols
+            last_w = jax.lax.pmin(
+                jnp.where(is_last, w[-1], jnp.asarray(pad, w.dtype)), axis_names
+            )
+            ww = jnp.where(g >= n_pad, last_w, ww)
+            w = jnp.minimum(w, ww)  # leftmost-tie is free: word order
+            rows.append(w)
+        return jnp.stack(rows)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=P(axis_names),
+            out_specs=P(None, axis_names),
+            check_vma=False,
+        )
+    )
+
+
+def st_halo_doubling_packed(
+    w0: jax.Array, mesh: Mesh, axis_names: Sequence[str], spec
+) -> jax.Array:
+    """Packed distributed doubling: the halo recurrence on ONE word plane.
+
+    ``w0`` is the shard-divisible packed level-0 row (``pack_global``).
+    Bit-identical (after unpacking) to ``st_halo_doubling`` on the same
+    data — the leftmost-tie pick is subsumed by word ``minimum``.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    return _st_halo_packed_fn(mesh, axis_names, w0.shape[0], num, spec)(w0)
+
+
+def build_sharded_st_packed(
+    x: jax.Array, mesh: Mesh, axis_names: Sequence[str], spec
+) -> PackedSparseTable:
+    """Distributed build of the column-sharded packed doubling table."""
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    n_pad = -(-max(x.shape[0], 1) // num) * num
+    return PackedSparseTable(
+        words=st_halo_doubling_packed(pack_global(x, spec, n_pad), mesh, axis_names, spec)
+    )
+
+
+def build_replicated_st_packed(x: jax.Array, mesh: Mesh, spec) -> PackedSparseTable:
+    """Full packed doubling table replicated on every device."""
+    t, _ = sparse_table.build_packed(x, spec=spec)
+    return jax.device_put(t, jax.sharding.NamedSharding(mesh, P()))
+
+
+def make_packed_st_query_fn(
+    mesh: Mesh,
+    axis_names: Sequence[str],
+    spec,
+    *,
+    batch_sharded: bool = False,
+    batch_axes: Sequence[str] | None = None,
+):
+    """Jitted packed distributed sparse-table query -> (idx, val).
+
+    The owner-column merge is one pmin over a (2, B) word stack, and the
+    left/right window pick is a plain word ``minimum`` — no value/index
+    plane pair, no tie select.
+    """
+    axis_names = tuple(axis_names)
+    batch_axes = _check_batch_axes(axis_names, batch_axes, batch_sharded)
+    pad = packing.pad_word(spec)
+
+    if batch_sharded:
+        num = num_shards(mesh, axis_names)
+
+        def local_st(t: PackedSparseTable, l, r):
+            return sparse_table.query_packed(t, spec, l, r)
+
+        inner = shard_map(
+            local_st,
+            mesh=mesh,
+            in_specs=(
+                PackedSparseTable(words=P(), x=None),
+                P(axis_names),
+                P(axis_names),
+            ),
+            out_specs=(P(axis_names), P(axis_names)),
+            check_vma=False,
+        )
+
+        def fn(t: PackedSparseTable, l, r):
+            lp, rp, b = _pad_batch(l, r, num)
+            idx, val = inner(t, lp, rp)
+            return idx[:b], val[:b]
+
+        return jax.jit(fn)
+
+    def local_query(t: PackedSparseTable, l, r):
+        cols = t.words.shape[1]
+        c0 = _flat_axis_index(axis_names) * cols
+        l = l.astype(jnp.int32)
+        r = r.astype(jnp.int32)
+        k = sparse_table.exact_log2(r - l + 1)
+        cand = jnp.stack([l, r - jnp.left_shift(jnp.int32(1), k) + 1])  # (2, B)
+        owned = (cand >= c0) & (cand < c0 + cols)
+        cl = jnp.clip(cand - c0, 0, cols - 1)
+        kk = jnp.broadcast_to(k[None, :], cand.shape)
+        w = jnp.where(owned, t.words[kk, cl], jnp.asarray(pad, t.words.dtype))
+        w = jax.lax.pmin(w, axis_names)  # one collective, was two
+        wm = jnp.minimum(w[0], w[1])  # leftmost-tie by word order
+        return packing.unpack_idx(spec, wm), packing.unpack_val(spec, wm)
+
+    spec_b = P(batch_axes) if batch_axes else P()
+    inner = shard_map(
+        local_query,
+        mesh=mesh,
+        in_specs=(
+            PackedSparseTable(words=P(None, axis_names), x=None),
+            spec_b,
+            spec_b,
+        ),
+        out_specs=(spec_b, spec_b),
+        check_vma=False,
+    )
+    if not batch_axes:
+        return jax.jit(inner)
+    nb = num_shards(mesh, batch_axes)
+
+    def fn(t: PackedSparseTable, l, r):
+        lp, rp, b = _pad_batch(l, r, nb)
+        idx, val = inner(t, lp, rp)
+        return idx[:b], val[:b]
+
+    return jax.jit(fn)
+
+
+def _pad_updates_packed(upd_pos, upd_val, spec):
+    """Pad (positions, packed update words) to a power of two.
+
+    Packs host-side — a packed32 spec that cannot encode a new value raises
+    ``OverflowError`` here, *before* any device state mutates, so callers
+    can fall back to a structural rebuild with a fresh spec.
+    """
+    upd_pos = np.asarray(upd_pos, np.int64)
+    if upd_pos.size == 0:
+        raise ValueError("patch called with no updates")
+    words = packing.pack_np(spec, upd_val, upd_pos.astype(np.int32))
+    p = 1 << (upd_pos.size - 1).bit_length() if upd_pos.size > 1 else 1
+    pos = np.full(p, -1, np.int32)
+    wrd = np.full(p, packing.pad_word(spec), packing.word_dtype_np(spec))
+    pos[: upd_pos.size] = upd_pos
+    wrd[: words.size] = words
+    return jnp.asarray(pos), jnp.asarray(wrd)
+
+
+@functools.lru_cache(maxsize=None)
+def _st_patch_packed_fn(mesh: Mesh, axis_names: Tuple[str, ...], n_pad: int, num: int, p: int, spec):
+    shard_len = n_pad // num
+    k_levels = st_levels(n_pad)
+    pad = packing.pad_word(spec)
+
+    def local(words, upd_pos, upd_w):
+        flat = _flat_axis_index(axis_names)
+        c0 = flat * shard_len
+        cols = jnp.arange(shard_len, dtype=jnp.int32)
+        is_last = flat == num - 1
+        mn, mx = _window_hull(upd_pos)
+        lp = upd_pos - c0
+        owned = (upd_pos >= 0) & (lp >= 0) & (lp < shard_len)
+        cur = words[0].at[jnp.where(owned, lp, shard_len)].set(
+            upd_w.astype(words.dtype), mode="drop"
+        )
+        rows = [cur]
+        for k in range(1, k_levels):
+            h = 1 << (k - 1)
+            if h >= n_pad:
+                rows.append(cur)
+                continue
+            d, r = divmod(h, shard_len)
+            ww = _flat_shift(cur, mesh, axis_names, d)
+            if r:
+                bw = _flat_shift(cur, mesh, axis_names, d + 1)
+                ww = jnp.concatenate([ww[r:], bw[:r]])
+            g = c0 + h + cols
+            last_w = jax.lax.pmin(
+                jnp.where(is_last, cur[-1], jnp.asarray(pad, cur.dtype)), axis_names
+            )
+            ww = jnp.where(g >= n_pad, last_w, ww)
+            cand = jnp.minimum(cur, ww)
+            # Level-k containment: an entry at column c covers [c, c + 2^k).
+            gc = c0 + cols
+            in_win = (gc >= mn - ((1 << k) - 1)) & (gc <= mx)
+            cur = jnp.where(in_win, cand, words[k])
+            rows.append(cur)
+        return jnp.stack(rows)
+
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(None, axis_names), P(), P()),
+            out_specs=P(None, axis_names),
+            check_vma=False,
+        )
+    )
+
+
+def patch_sharded_st_packed(
+    t: PackedSparseTable, upd_pos, upd_val, mesh: Mesh, axis_names: Sequence[str], spec
+) -> PackedSparseTable:
+    """Windowed patch of the column-sharded packed doubling table.
+
+    One plane rides the halo transport (the unpacked patch ships two);
+    bit-identical to ``build_sharded_st_packed`` on the mutated array.
+    Raises ``OverflowError`` before touching device state when a packed32
+    spec cannot encode a new value.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    n_pad = t.words.shape[1]
+    pos, wrd = _pad_updates_packed(upd_pos, upd_val, spec)
+    words = _st_patch_packed_fn(mesh, axis_names, n_pad, num, pos.shape[0], spec)(
+        t.words, pos, wrd
+    )
+    return PackedSparseTable(words=words)
+
+
+@functools.lru_cache(maxsize=None)
+def _blocked_patch_packed_fn(
+    mesh: Mesh, axis_names: Tuple[str, ...], nb_local: int, bs: int, p: int, spec
+):
+    local_n = nb_local * bs
+    k_levels = st_levels(nb_local) if nb_local > 1 else 1
+
+    def local(s: PackedBlockRMQ, upd_pos, upd_w):
+        flat = _flat_axis_index(axis_names)
+        off = flat * local_n
+        lp = upd_pos - off
+        owned = (upd_pos >= 0) & (lp >= 0) & (lp < local_n)
+        wf = s.blocks.reshape(-1)
+        wf = wf.at[jnp.where(owned, lp, local_n)].set(
+            upd_w.astype(wf.dtype), mode="drop"
+        )
+        wb = wf.reshape(nb_local, bs)
+        blk = jnp.clip(lp // bs, 0, nb_local - 1)
+        neww = jnp.min(jnp.take(wb, blk, axis=0), axis=1)  # O(bs) block repair
+        tgt = jnp.where(owned, blk, nb_local)
+        cur = s.stw[0].at[tgt].set(neww, mode="drop")
+        mnb = jnp.min(jnp.where(owned, blk, _INT_BIG))
+        mxb = jnp.max(jnp.where(owned, blk, -1))
+        cols = jnp.arange(nb_local, dtype=jnp.int32)
+        rows_out = [cur]
+        for k in range(1, k_levels):
+            h = 1 << (k - 1)
+            if h >= nb_local:
+                rows_out.append(cur)
+                continue
+            shifted = jnp.concatenate([cur[h:], jnp.broadcast_to(cur[-1], (h,))])
+            cand = jnp.minimum(cur, shifted)
+            in_win = (cols >= mnb - ((1 << k) - 1)) & (cols <= mxb)
+            cur = jnp.where(in_win, cand, s.stw[k])
+            rows_out.append(cur)
+        return PackedBlockRMQ(blocks=wb, stw=jnp.stack(rows_out))
+
+    specs = PackedBlockRMQ(blocks=P(axis_names), stw=P(None, axis_names))
+    return jax.jit(
+        shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(specs, P(), P()),
+            out_specs=specs,
+            check_vma=False,
+        )
+    )
+
+
+def patch_sharded_packed(
+    s: PackedBlockRMQ, upd_pos, upd_val, mesh: Mesh, axis_names: Sequence[str], spec
+) -> PackedBlockRMQ:
+    """Windowed patch of the mesh-sharded packed blocked structure.
+
+    Scatter owned word updates, re-min touched blocks, window-repair the
+    per-shard doubling plane — all on single word planes. Bit-identical to
+    ``build_sharded_packed`` on the mutated array.
+    """
+    axis_names = tuple(axis_names)
+    num = num_shards(mesh, axis_names)
+    bs = s.blocks.shape[1]
+    nb_local = s.blocks.shape[0] // num
+    pos, wrd = _pad_updates_packed(upd_pos, upd_val, spec)
+    return _blocked_patch_packed_fn(mesh, axis_names, nb_local, bs, pos.shape[0], spec)(
+        s, pos, wrd
+    )

@@ -70,6 +70,7 @@ def build(
     threshold: int | str | None = None,
     use_kernels: bool | None = None,
     kernel_config=None,
+    packed=None,
 ) -> HybridRMQ:
     """Build both constituent engines (via the staged ``core.build`` plan).
 
@@ -81,6 +82,9 @@ def build(
     ``kernel_config`` is the megakernel launch-geometry policy for the
     kernelized short path (None | "cached" | "tuned" | a
     ``kernels.tuning.KernelConfig``), same cache lifecycle as thresholds.
+    ``packed`` opts both tiers into fused (value, index) words
+    (``core.packing``): None/False -> unpacked, True/"auto" -> measured
+    best fit, or an explicit layout name.
     """
     from . import build as build_mod  # deferred: build.py hosts the planner
 
@@ -91,6 +95,7 @@ def build(
         threshold=threshold,
         use_kernels=use_kernels,
         kernel_config=kernel_config,
+        packed=packed,
     )
 
 
@@ -211,6 +216,7 @@ def calibrate(
     mesh=None,
     axis_names=None,
     mode: str = "shard_structure",
+    layout: str | None = None,
 ) -> int:
     """Time both constituent paths across range lengths; return the crossover.
 
@@ -228,18 +234,28 @@ def calibrate(
     threshold reflects collective costs on that mesh, not single-host
     proxies. The cache key already carries ``ndev``; this makes the
     measurement match it.
+
+    ``layout`` (cache key v3) measures the *packed* constituents instead —
+    the crossover moves when both tiers read fused (value, index) word
+    planes. packed32's key-range precondition is data-dependent, so that
+    measurement runs over a narrow-range int32 proxy array (the layout it
+    times is the layout served); the other layouts keep the float proxy.
     """
     rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.random(n, dtype=np.float32))
+    if layout == "packed32":
+        # A proxy whose key span always fits 31 - idx_bits value bits.
+        x = jnp.asarray(rng.integers(-1000, 1000, size=n).astype(np.int32))
+    else:
+        x = jnp.asarray(rng.random(n, dtype=np.float32))
     if mesh is None:
-        s = build(x, block_size, use_kernels=use_kernels)
+        s = build(x, block_size, use_kernels=use_kernels, packed=layout)
         short_fn, long_fn = s.short_fn, s.long_fn  # both already jit-wrapped
     else:
         # Deferred import: sharded_hybrid builds on this module's dispatcher.
         from . import sharded_hybrid
 
         sh = sharded_hybrid.build(
-            x, mesh, axis_names, block_size, threshold=0, mode=mode
+            x, mesh, axis_names, block_size, threshold=0, mode=mode, packed=layout
         )
         short_fn = lambda l, r: sh.short_fn(sh.blocked, l, r)
         long_fn = lambda l, r: sh.long_fn(sh.st, l, r)

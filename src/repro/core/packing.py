@@ -1,0 +1,337 @@
+"""Order-isomorphic packed (value, index) words: one plane instead of two.
+
+RMQ on accelerators is memory-bound — every pmin merge, DMA window, halo
+exchange, and COW publish in this repo moves a value plane *and* an index
+plane. Packing both into a single word makes leftmost-tie argmin a plain
+``min``: no select chains, half the planes, one collective where the
+unpacked merge needs two.
+
+The encoding is ``word = (key(v) << IDX_BITS) | i`` where ``key`` maps the
+value dtype to a monotone signed-int32 keyspace:
+
+- int32 (and narrower signed ints): ``key = v`` — identity.
+- float32: bitcast to int32, then flip the low 31 bits of negatives
+  (``key = b ^ ((b >> 31) & 0x7fffffff)``) so the int order of keys matches
+  the float order of values; ``-0.0`` is normalized to ``+0.0`` first so the
+  two zeros compare equal. The transform is an involution, so the same
+  formula decodes.
+
+Because ``i`` occupies the low bits, comparing words compares ``(key, i)``
+lexicographically: the minimum word *is* the leftmost minimum element.
+Equal words decode to equal answers, so ``min`` over packed words is exact
+— including ties, negatives, and int32 extremes.
+
+Layouts (``LAYOUTS``):
+
+- ``packed64``: ``word = key.astype(int64) << 32 | i`` — always exact for
+  any int32/float32 data, needs jax x64 (``ensure_x64`` flips the flag).
+- ``packed32``: ``word = (key - kmin) << idx_bits | i`` in int32 — fits when
+  the *observed* key range and the index width share 31 bits
+  (``fits_packed32``). Half the bytes of the unpacked planes; the build
+  measures the data and ``spec_for(layout="auto")`` degrades to packed64
+  when it does not fit.
+- ``quantized``: ``qword = bucket(v) << idx_bits | i`` in int32 with a
+  *non-strictly* monotone bucket code (int16-grade: at most 16 bucket
+  bits). Quantized words order correctly **except** when two candidates
+  land in the same bucket — engines must break bucket ties with an exact
+  value compare (the "fallback mask" contract; see DESIGN.md §13). The
+  structures built here always store *exact* argmin indices in the index
+  field, so the fallback only ever needs a value gather, never a rescan.
+
+Pad convention: structure padding uses ``pad_word(spec)`` — the word
+dtype's max, strictly greater than every encodable word (packed32 reserves
+it via the fit check; packed64 can never reach it while ``i < 2**31``) —
+so padded lanes lose every ``min`` without masking.
+
+All helpers exist in jnp (device) and numpy (``*_np``, for the update
+mirrors in ``repro.update.patch``) flavors and are bit-identical.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "LAYOUTS",
+    "PACKED_LAYOUTS",
+    "PackSpec",
+    "ensure_x64",
+    "fits_packed32",
+    "idx_bits_for",
+    "pack",
+    "pack_np",
+    "pad_word",
+    "spec_for",
+    "unpack_idx",
+    "unpack_idx_np",
+    "unpack_val",
+    "unpack_val_np",
+    "word_dtype",
+]
+
+# The autotuner's layout axis and the ``packed=`` build-kwarg vocabulary.
+LAYOUTS = ("unpacked", "packed64", "packed32", "quantized")
+# Layouts that replace the (idx, val) planes with word planes.
+PACKED_LAYOUTS = ("packed64", "packed32", "quantized")
+
+_I32_MIN = -(1 << 31)
+_I32_MAX = (1 << 31) - 1
+
+
+class PackSpec(NamedTuple):
+    """Static description of a packed encoding (hashable; jit-static).
+
+    ``kmin`` biases packed32 keys to non-negative; ``qmin``/``qscale``
+    place the quantized bucket grid; ``val_bits`` is the key/bucket field
+    width (32 for packed64). The spec is plain ints/floats/strs so it can
+    ride jit static args, cache keys, and checkpoint manifests.
+    """
+
+    layout: str
+    dtype: str  # value dtype name, e.g. "float32" / "int32"
+    idx_bits: int
+    val_bits: int
+    kmin: int = 0
+    qmin: float = 0.0
+    qscale: float = 1.0
+
+    def to_meta(self) -> dict:
+        return dict(self._asdict())
+
+    @classmethod
+    def from_meta(cls, meta) -> "PackSpec":
+        return cls(**{k: meta[k] for k in cls._fields})
+
+
+def ensure_x64() -> None:
+    """Enable jax 64-bit mode (required for packed64 device words).
+
+    Idempotent; flips the global flag the first time a packed64 spec is
+    built. Existing compiled functions stay valid — only new traces see
+    64-bit types, and this repo's structures pin their dtypes explicitly.
+    """
+    if not jax.config.read("jax_enable_x64"):
+        jax.config.update("jax_enable_x64", True)
+
+
+def idx_bits_for(n_index: int) -> int:
+    """Bits needed to address ``n_index`` slots (the *padded* length)."""
+    if n_index <= 0:
+        raise ValueError(f"n_index must be positive, got {n_index}")
+    return max(1, int(n_index - 1).bit_length())
+
+
+def fits_packed32(kmin: int, kmax: int, idx_bits: int) -> bool:
+    """True when keys in [kmin, kmax] plus ``idx_bits`` fit one int32 word.
+
+    Strict by one: the max encodable word must stay *below* INT32_MAX so
+    ``pad_word`` is reserved and can never collide with a real element.
+    """
+    if idx_bits >= 31:
+        return False
+    span = int(kmax) - int(kmin)
+    return (span + 1) << idx_bits <= _I32_MAX  # max word = span<<bits | (2^bits-1)
+
+
+# --- monotone value <-> key maps -------------------------------------------
+
+
+def _key_np(v: np.ndarray) -> np.ndarray:
+    v = np.asarray(v)
+    if v.dtype == np.float32:
+        b = (v + np.float32(0.0)).view(np.int32)  # -0.0 -> +0.0
+        return b ^ ((b >> 31) & np.int32(_I32_MAX))
+    if np.issubdtype(v.dtype, np.integer):
+        return v.astype(np.int32)
+    raise TypeError(f"unsupported value dtype for packing: {v.dtype}")
+
+
+def _unkey_np(key: np.ndarray, dtype: str) -> np.ndarray:
+    key = np.asarray(key, dtype=np.int32)
+    if dtype == "float32":
+        b = key ^ ((key >> 31) & np.int32(_I32_MAX))  # involution
+        return b.view(np.float32)
+    return key.astype(np.dtype(dtype))
+
+
+def _key(v: jax.Array) -> jax.Array:
+    if v.dtype == jnp.float32:
+        b = jax.lax.bitcast_convert_type(v + jnp.float32(0.0), jnp.int32)
+        return b ^ ((b >> 31) & jnp.int32(_I32_MAX))
+    if jnp.issubdtype(v.dtype, jnp.integer):
+        return v.astype(jnp.int32)
+    raise TypeError(f"unsupported value dtype for packing: {v.dtype}")
+
+
+def _unkey(key: jax.Array, dtype: str) -> jax.Array:
+    key = key.astype(jnp.int32)
+    if dtype == "float32":
+        b = key ^ ((key >> 31) & jnp.int32(_I32_MAX))
+        return jax.lax.bitcast_convert_type(b, jnp.float32)
+    return key.astype(jnp.dtype(dtype))
+
+
+# --- spec construction ------------------------------------------------------
+
+
+def spec_for(x, n_index: int, layout: str = "auto") -> PackSpec:
+    """Measure ``x`` and build the PackSpec for ``layout``.
+
+    ``n_index`` is the padded index domain the structure will address
+    (block padding, shard padding — indices up to ``n_index - 1`` must
+    encode). ``layout="auto"`` picks packed32 when the observed key range
+    fits, else packed64. An explicit ``layout="packed32"`` that does not
+    fit raises (the caller asked for something the data cannot encode).
+    """
+    xh = np.asarray(x)
+    if xh.ndim != 1 or xh.size == 0:
+        raise ValueError(f"spec_for wants a non-empty 1-D array, got {xh.shape}")
+    dtype = str(xh.dtype)
+    bits = idx_bits_for(n_index)
+    keys = _key_np(xh)
+    kmin, kmax = int(keys.min()), int(keys.max())
+
+    if layout == "auto":
+        layout = "packed32" if fits_packed32(kmin, kmax, bits) else "packed64"
+    if layout == "packed64":
+        ensure_x64()
+        return PackSpec("packed64", dtype, 32, 32, kmin=0)
+    if layout == "packed32":
+        if not fits_packed32(kmin, kmax, bits):
+            raise ValueError(
+                f"packed32 cannot encode key span [{kmin}, {kmax}] with "
+                f"{bits} index bits; use layout='packed64' or 'auto'"
+            )
+        return PackSpec("packed32", dtype, bits, 31 - bits, kmin=kmin)
+    if layout == "quantized":
+        vbits = min(16, 31 - bits)  # int16-grade bucket codes
+        if vbits < 1:
+            raise ValueError(f"no bucket bits left for n_index={n_index}")
+        lo = float(xh.min())
+        hi = float(xh.max())
+        span = hi - lo
+        qscale = (span / float((1 << vbits) - 1)) if span > 0 else 1.0
+        return PackSpec("quantized", dtype, bits, vbits, qmin=lo, qscale=qscale)
+    raise ValueError(f"unknown layout {layout!r}; have {LAYOUTS}")
+
+
+def word_dtype(spec: PackSpec):
+    return jnp.int64 if spec.layout == "packed64" else jnp.int32
+
+
+def word_dtype_np(spec: PackSpec):
+    return np.int64 if spec.layout == "packed64" else np.int32
+
+
+def pad_word(spec: PackSpec) -> int:
+    """The +inf word: strictly greater than every encodable (key, i)."""
+    return (1 << 63) - 1 if spec.layout == "packed64" else _I32_MAX
+
+
+def word_nbytes(spec) -> int:
+    """Bytes per packed word (8 for packed64, 4 otherwise)."""
+    return 8 if getattr(spec, "layout", spec) == "packed64" else 4
+
+
+# --- pack / unpack (device) -------------------------------------------------
+
+
+def _bucket(spec: PackSpec, v: jax.Array) -> jax.Array:
+    # Non-strictly monotone in v: sub/div/floor/clip all preserve order
+    # under IEEE rounding, so b(v1) <= b(v2) whenever v1 <= v2.
+    f = (v.astype(jnp.float32) - jnp.float32(spec.qmin)) / jnp.float32(spec.qscale)
+    nb = (1 << spec.val_bits) - 1
+    return jnp.clip(jnp.floor(f), 0, nb).astype(jnp.int32)
+
+
+def _bucket_np(spec: PackSpec, v: np.ndarray) -> np.ndarray:
+    f = (np.asarray(v, np.float32) - np.float32(spec.qmin)) / np.float32(spec.qscale)
+    nb = (1 << spec.val_bits) - 1
+    return np.clip(np.floor(f), 0, nb).astype(np.int32)
+
+
+def pack(spec: PackSpec, v: jax.Array, i: jax.Array) -> jax.Array:
+    """Encode values + indices into packed words (jnp).
+
+    For ``quantized`` the word orders by (bucket, i) — callers own the
+    bucket-tie fallback; the index field is still exact.
+    """
+    i = i.astype(jnp.int32)
+    if spec.layout == "packed64":
+        key = _key(v)
+        return (key.astype(jnp.int64) << 32) | i.astype(jnp.int64)
+    if spec.layout == "packed32":
+        key = _key(v) - jnp.int32(spec.kmin)  # in [0, span]: no overflow by fit check
+        return (key << spec.idx_bits) | i
+    if spec.layout == "quantized":
+        return (_bucket(spec, v) << spec.idx_bits) | i
+    raise ValueError(f"cannot pack layout {spec.layout!r}")
+
+
+def unpack_idx(spec: PackSpec, w: jax.Array) -> jax.Array:
+    if spec.layout == "packed64":
+        return (w & jnp.int64(0xFFFFFFFF)).astype(jnp.int32)
+    return w & jnp.int32((1 << spec.idx_bits) - 1)
+
+
+def unpack_val(spec: PackSpec, w: jax.Array) -> jax.Array:
+    """Decode the value field. Exact for packed64/packed32.
+
+    Quantized words only carry the bucket code — engines gather the exact
+    value by ``unpack_idx`` instead; calling this on a quantized spec is a
+    contract violation, not a lossy decode.
+    """
+    if spec.layout == "packed64":
+        return _unkey((w >> 32).astype(jnp.int32), spec.dtype)
+    if spec.layout == "packed32":
+        # Words are non-negative, so >> is exact; pads decode to garbage
+        # values but pads never win a min over a non-empty range.
+        return _unkey((w >> spec.idx_bits) + jnp.int32(spec.kmin), spec.dtype)
+    raise ValueError(f"unpack_val is undefined for layout {spec.layout!r}")
+
+
+# --- pack / unpack (numpy twins, for the host update mirrors) ---------------
+
+
+def pack_np(spec: PackSpec, v, i) -> np.ndarray:
+    v = np.asarray(v, dtype=np.dtype(spec.dtype))
+    i = np.asarray(i, np.int32)
+    if spec.layout == "packed64":
+        return (_key_np(v).astype(np.int64) << 32) | i.astype(np.int64)
+    if spec.layout == "packed32":
+        key = _key_np(v)
+        if key.size and not (
+            int(key.min()) >= spec.kmin
+            and fits_packed32(spec.kmin, int(key.max()), spec.idx_bits)
+        ):
+            # A patch pushed a value outside the build-time key range: the
+            # packed32 word cannot encode it. Callers catch this and fall
+            # back to a structural rebuild with a fresh spec.
+            raise OverflowError(
+                f"value keys [{int(key.min())}, {int(key.max())}] exceed the "
+                f"packed32 spec range (kmin={spec.kmin}, idx_bits={spec.idx_bits})"
+            )
+        return ((key - np.int32(spec.kmin)) << spec.idx_bits) | i
+    if spec.layout == "quantized":
+        return (_bucket_np(spec, v) << spec.idx_bits) | i
+    raise ValueError(f"cannot pack layout {spec.layout!r}")
+
+
+def unpack_idx_np(spec: PackSpec, w) -> np.ndarray:
+    w = np.asarray(w)
+    if spec.layout == "packed64":
+        return (w & np.int64(0xFFFFFFFF)).astype(np.int32)
+    return (w & np.int32((1 << spec.idx_bits) - 1)).astype(np.int32)
+
+
+def unpack_val_np(spec: PackSpec, w) -> np.ndarray:
+    w = np.asarray(w)
+    if spec.layout == "packed64":
+        return _unkey_np((w >> 32).astype(np.int32), spec.dtype)
+    if spec.layout == "packed32":
+        return _unkey_np((w >> spec.idx_bits) + np.int32(spec.kmin), spec.dtype)
+    raise ValueError(f"unpack_val is undefined for layout {spec.layout!r}")

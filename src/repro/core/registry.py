@@ -37,6 +37,7 @@ from . import (
     hybrid,
     lane_rmq,
     lca,
+    packing,
     sharded_hybrid,
     sparse_table,
 )
@@ -87,11 +88,24 @@ class EngineSpec(NamedTuple):
 Engine = EngineSpec
 
 
-def _with_values(planner: str, query_fn, **spec_kw) -> EngineSpec:
+def _is_packed_state(s) -> bool:
+    """Packed planner results are ``(structure, PackSpec)`` pairs."""
+    return (
+        isinstance(s, tuple)
+        and len(s) == 2
+        and isinstance(s[1], packing.PackSpec)
+    )
+
+
+def _with_values(planner: str, query_fn, packed_query_fn=None, **spec_kw) -> EngineSpec:
     """Adapt an index-only engine to the uniform (idx, val) contract.
 
     The planner's finalize stage already pairs the built state with ``x``
-    (``with_x``); the query wrapper gathers values from it.
+    (``with_x``); the query wrapper gathers values from it. When the planner
+    has a packed variant (``packed=`` kwarg), its state is
+    ``((structure, PackSpec), x)`` and ``packed_query_fn`` serves it —
+    packed queries return (idx, val) natively (the word carries both), so
+    no gather is needed.
     """
 
     def build(x):
@@ -99,6 +113,9 @@ def _with_values(planner: str, query_fn, **spec_kw) -> EngineSpec:
 
     def query(state, l, r):
         s, x = state
+        if packed_query_fn is not None and _is_packed_state(s):
+            struct, spec = s
+            return packed_query_fn(struct, spec, l, r)
         idx = query_fn(s, l, r)
         return idx, x[idx]
 
@@ -127,6 +144,9 @@ def _kernels_engine(block_size: int, kernel_config=None, doc: str = "") -> Engin
         from repro import kernels
 
         s, cfg = state
+        if _is_packed_state(s):
+            struct, spec = s
+            return kernels.ops.query_packed(struct, spec, l, r, config=cfg)
         return kernels.ops.query(s, l, r, config=cfg)
 
     def serve_plan(n, mesh, axis_names, **kw):
@@ -144,7 +164,7 @@ def _kernels_engine(block_size: int, kernel_config=None, doc: str = "") -> Engin
             "fused", x, block_size=block_size, kernel_config=kernel_config
         ),
         query,
-        build_kwargs=frozenset({"block_size", "kernel_config"}),
+        build_kwargs=frozenset({"block_size", "kernel_config", "packed"}),
         serve_plan=serve_plan,
         doc=doc or "fused tiled Pallas megakernel (interpret mode off-TPU)",
     )
@@ -168,24 +188,36 @@ def _distributed_query(state, l, r):
     return qfn(s, jnp.asarray(l), jnp.asarray(r))
 
 
+def _block_query(state, l, r):
+    """Blocked-engine query, dispatching on the packed tuple shape."""
+    if _is_packed_state(state):
+        s, spec = state
+        return block_rmq.query_packed(s, spec, l, r)
+    return block_rmq.query(state, l, r)
+
+
 ENGINES: dict = {
     "sparse_table": _with_values(
         "sparse_table",
         sparse_table.query,
+        packed_query_fn=sparse_table.query_packed,
+        build_kwargs=frozenset({"packed"}),
         serve_plan=_simple_serve_plan("sparse_table"),
         updatable=True,
         doc="O(1) doubling-table lookups",
     ),
     "block128": EngineSpec(
         lambda x: build_mod.build("block", x, block_size=128),
-        block_rmq.query,
+        _block_query,
+        build_kwargs=frozenset({"packed"}),
         serve_plan=_simple_serve_plan("block", block_size=128),
         updatable=True,
         doc="pure-jnp blocked, bs=128",
     ),
     "block256": EngineSpec(
         lambda x: build_mod.build("block", x, block_size=256),
-        block_rmq.query,
+        _block_query,
+        build_kwargs=frozenset({"packed"}),
         serve_plan=_simple_serve_plan("block", block_size=256),
         updatable=True,
         doc="pure-jnp blocked, bs=256",
@@ -222,19 +254,36 @@ ENGINES: dict = {
     "hybrid": EngineSpec(
         lambda x: build_mod.build("hybrid", x, block_size=128),
         hybrid.query,
-        build_kwargs=frozenset({"block_size", "threshold", "kernel_config"}),
+        build_kwargs=frozenset({"block_size", "threshold", "kernel_config", "packed"}),
         serve_plan=_simple_serve_plan(
             "hybrid", block_size=128, threshold="cached", kernel_config="cached"
         ),
         updatable=True,
         doc="range-adaptive blocked/sparse-table crossover dispatcher",
     ),
+    # The packed-word hybrid: both tiers carry fused (value, index) words
+    # (``core.packing``), halving merge traffic; layout resolved per-array
+    # ("auto" -> packed32 when the key range fits, else packed64).
+    "packed_hybrid": EngineSpec(
+        lambda x: build_mod.build("hybrid", x, block_size=128, packed="auto"),
+        hybrid.query,
+        build_kwargs=frozenset({"block_size", "threshold", "kernel_config", "packed"}),
+        serve_plan=_simple_serve_plan(
+            "hybrid",
+            block_size=128,
+            threshold="cached",
+            kernel_config="cached",
+            packed="auto",
+        ),
+        updatable=True,
+        doc="hybrid over fused (value,index) word planes (bandwidth-optimal)",
+    ),
     # Mesh-sharded blocked engine (structure sharded, queries replicated).
     "distributed": EngineSpec(
         lambda x: build_mod.build("distributed", x, block_size=128),
         _distributed_query,
         needs_mesh=True,
-        build_kwargs=frozenset({"block_size"}),
+        build_kwargs=frozenset({"block_size", "packed"}),
         serve_plan=_simple_serve_plan("distributed", block_size=1024),
         updatable=True,
         doc="mesh-sharded blocked engine, two-pmin merge",
@@ -245,7 +294,7 @@ ENGINES: dict = {
         lambda x: build_mod.build("sharded_hybrid", x, block_size=128),
         sharded_hybrid.query,
         needs_mesh=True,
-        build_kwargs=frozenset({"block_size", "threshold", "mode"}),
+        build_kwargs=frozenset({"block_size", "threshold", "mode", "packed"}),
         modes=sharded_hybrid.MODES,
         serve_plan=_simple_serve_plan(
             "sharded_hybrid", block_size=128, threshold="cached"
@@ -253,6 +302,21 @@ ENGINES: dict = {
         updatable=True,
         doc="sharded range-adaptive hybrid "
         "(shard_structure | shard_batch | shard_2d)",
+    ),
+    # Packed sharded hybrid: words carry global indices, so the sharded
+    # merge is ONE pmin and the halo recurrence ships ONE plane per level.
+    "packed_sharded_hybrid": EngineSpec(
+        lambda x: build_mod.build("sharded_hybrid", x, block_size=128, packed="auto"),
+        sharded_hybrid.query,
+        needs_mesh=True,
+        build_kwargs=frozenset({"block_size", "threshold", "mode", "packed"}),
+        modes=sharded_hybrid.MODES,
+        serve_plan=_simple_serve_plan(
+            "sharded_hybrid", block_size=128, threshold="cached", packed="auto"
+        ),
+        updatable=True,
+        doc="sharded hybrid over packed word planes (one-pmin merge, "
+        "single-plane halos)",
     ),
 }
 

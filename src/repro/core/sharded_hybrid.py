@@ -84,6 +84,7 @@ def build(
     threshold: int | str | None = None,
     mode: str = "shard_structure",
     cache_path=None,
+    packed=None,
 ) -> ShardedHybridRMQ:
     """Build both distributed constituents over ``mesh`` (default: all devices).
 
@@ -107,6 +108,7 @@ def build(
         threshold=threshold,
         mode=mode,
         cache_path=cache_path,
+        packed=packed,
     )
 
 

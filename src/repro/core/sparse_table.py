@@ -11,12 +11,22 @@ leftmost-tie convention is preserved exactly (see ``_pick_left``).
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from functools import partial
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SparseTable", "build", "query"]
+from . import packing
+
+__all__ = [
+    "PackedSparseTable",
+    "SparseTable",
+    "build",
+    "build_packed",
+    "query",
+    "query_packed",
+]
 
 
 class SparseTable(NamedTuple):
@@ -75,3 +85,81 @@ def query(table: SparseTable, l: jax.Array, r: jax.Array) -> jax.Array:
     a = table.idx[k, l]
     b = table.idx[k, r - jnp.left_shift(jnp.int32(1), k) + 1]
     return _pick_left(table.x, a, b)
+
+
+# --- packed variant ---------------------------------------------------------
+#
+# One word plane instead of idx + x: a query touches two table cells and is
+# done — no value gathers, no select chain (DESIGN.md §13). For the
+# quantized layout the word carries (bucket, exact-argmin-index); bucket
+# ties fall back to an exact value compare against the retained ``x``.
+
+
+class PackedSparseTable(NamedTuple):
+    """Doubling table of packed words.
+
+    ``words[k, i]`` encodes the leftmost argmin of ``x[i : i+2^k]`` as one
+    ``(key << idx_bits) | index`` word (``core.packing``). ``x`` is kept
+    only for the quantized layout's exact bucket-tie fallback (None for
+    packed64/packed32 — exact decode needs no raw plane).
+    """
+
+    words: jax.Array  # (K, n) packed words
+    x: Optional[jax.Array] = None  # (n,) raw values, quantized layouts only
+
+
+def build_packed(x: jax.Array, spec=None, layout: str = "auto"):
+    """Build the packed doubling table; returns ``(PackedSparseTable, spec)``.
+
+    Exact layouts fold the doubling merge into ``jnp.minimum`` over words.
+    The quantized layout first builds the exact index table (bucket codes
+    cannot resolve in-bucket ties during construction) and then encodes
+    each cell's exact argmin with its bucket.
+    """
+    n = x.shape[0]
+    if spec is None:
+        spec = packing.spec_for(x, n, layout)
+    if spec.layout == "quantized":
+        t = build(x)
+        words = packing.pack(spec, x[t.idx], t.idx)
+        return PackedSparseTable(words=words, x=x), spec
+    k_levels = max(1, (n - 1).bit_length() + 1) if n > 1 else 1
+    cur = packing.pack(spec, x, jnp.arange(n, dtype=jnp.int32))
+    rows = [cur]
+    for k in range(1, k_levels):
+        h = 1 << (k - 1)
+        if h >= n:
+            rows.append(cur)
+            continue
+        shifted = jnp.concatenate([cur[h:], jnp.broadcast_to(cur[-1], (h,))])
+        cur = jnp.minimum(cur, shifted)
+        rows.append(cur)
+    return PackedSparseTable(words=jnp.stack(rows)), spec
+
+
+@partial(jax.jit, static_argnums=0)
+def _query_packed_jit(spec, words, x, l, r):
+    length = r - l + 1
+    k = exact_log2(length)
+    wa = words[k, l]
+    wb = words[k, r - jnp.left_shift(jnp.int32(1), k) + 1]
+    if spec.layout != "quantized":
+        w = jnp.minimum(wa, wb)
+        return packing.unpack_idx(spec, w), packing.unpack_val(spec, w)
+    # Bucket-tie fallback: equal buckets gather both exact values; the
+    # leftmost-tie argument of _pick_left carries over (window containment
+    # gives ia <= ib on exact value ties).
+    ia = packing.unpack_idx(spec, wa)
+    ib = packing.unpack_idx(spec, wb)
+    va = x[ia]
+    vb = x[ib]
+    collide = (wa >> spec.idx_bits) == (wb >> spec.idx_bits)
+    take_a = jnp.where(collide, va <= vb, wa <= wb)
+    return jnp.where(take_a, ia, ib), jnp.where(take_a, va, vb)
+
+
+def query_packed(table: PackedSparseTable, spec, l: jax.Array, r: jax.Array):
+    """Batched O(1) packed query -> ``(idx int32, val)``, exact leftmost ties."""
+    return _query_packed_jit(
+        spec, table.words, table.x, l.astype(jnp.int32), r.astype(jnp.int32)
+    )

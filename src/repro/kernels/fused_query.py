@@ -47,12 +47,14 @@ or when the partial index lies left of the interior's block range
 from __future__ import annotations
 
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import packing
 from repro.core.block_rmq import maxval
 from repro.core.sparse_table import exact_log2
 
@@ -65,7 +67,14 @@ from .tiling import (
 )
 from .tuning import DEFAULT_TILE, RESIDENT_NB_CEILING, resolve_fetch
 
-__all__ = ["fused_query", "interior_tables", "DEFAULT_TILE"]
+__all__ = ["fused_query", "fused_query_packed", "interior_tables", "DEFAULT_TILE"]
+
+_logger = logging.getLogger(__name__)
+
+# One warning per process for the derive-on-the-fly DMA path (below); a
+# per-call warning would flood serving logs, and a per-jit-cache warning
+# would be silent exactly when the recompute recurs (same shapes re-trace).
+_warned_materialize = False
 
 # DMA window width: one lane-aligned VREG row per fetched table cell.
 _W = 128
@@ -172,7 +181,9 @@ def interior_tables(bmin_val: jax.Array, bmin_gidx: jax.Array, st_idx: jax.Array
     return bmin_val[st_idx], bmin_gidx[st_idx]
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "fetch", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("tile", "fetch", "interpret", "materialize_interior")
+)
 def fused_query(
     x_blocks: jax.Array,  # (nb, bs)
     bmin_val: jax.Array,  # (nb,)
@@ -186,14 +197,20 @@ def fused_query(
     tile: int = DEFAULT_TILE,
     fetch: str = "auto",
     interpret: bool | None = None,
+    materialize_interior: bool | None = None,
 ):
     """End-to-end fused blocked RMQ. Returns (idx (B,) int32, value (B,)).
 
     Single kernel dispatch per batch; ``tile`` queries per grid step.
     ``fetch`` selects the table strategy ("resident" | "dma" | "auto", see
-    module docstring); the augmented tables are derived on the fly when a
-    DMA-strategy call does not pass them (build-time callers precompute via
-    :func:`interior_tables` to keep the query jaxpr gather-free).
+    module docstring). A DMA-strategy call that does not pass the augmented
+    tables has them derived on the fly — O(K * nb) gathers *per jit trace*
+    that build-time callers precompute exactly once via
+    :func:`interior_tables`. ``materialize_interior`` makes that choice
+    explicit: ``True`` opts into the on-the-fly derivation silently,
+    ``False`` forbids it (raises instead of recomputing — for callers whose
+    build stage owns the augmented tables and must notice losing them), and
+    the default ``None`` derives but warns once per process.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -247,6 +264,24 @@ def fused_query(
         operands = (x_blocks, x_blocks, st2, bv2, bg2)
     else:
         if st_val is None or st_gidx is None:
+            if materialize_interior is False:
+                raise ValueError(
+                    "fetch='dma' without st_val/st_gidx while "
+                    "materialize_interior=False: the caller expected "
+                    "precomputed augmented tables (interior_tables) but "
+                    "the structure does not carry them"
+                )
+            if materialize_interior is None:
+                global _warned_materialize
+                if not _warned_materialize:
+                    _warned_materialize = True
+                    _logger.warning(
+                        "fused_query fetch='dma' is deriving its augmented "
+                        "interior tables on the fly (O(K*nb) gathers per jit "
+                        "trace). Precompute them at build time "
+                        "(kernels.ops.build / interior_tables), or pass "
+                        "materialize_interior=True to opt in silently."
+                    )
             st_val, st_gidx = interior_tables(bmin_val, bmin_gidx, st_idx)
         sv2 = jnp.pad(st_val, ((0, 0), (0, nbp - nb)), constant_values=big)
         sg2 = jnp.pad(st_gidx, ((0, 0), (0, nbp - nb)))
@@ -282,3 +317,290 @@ def fused_query(
         interpret=interpret,
     )(*scalars, *operands)
     return idx[:b, 0], val[:b, 0]
+
+
+# --- packed megakernel ------------------------------------------------------
+#
+# The bandwidth-optimal variant (DESIGN.md §13). For the exact packed32
+# layout every table the kernel touches is ONE plane of order-isomorphic
+# int32 words, so:
+#
+#   * the partial-block scan is a plain masked word min — no equality
+#     rescan to recover the lane, the word IS (value, global index);
+#   * the interior candidate is two cells of the packed doubling table
+#     ``stw`` — the dma strategy fetches TWO (1, 128) windows per query
+#     where the unpacked kernel fetches FOUR (value + gidx at each
+#     position), and the resident strategy DMAs one (1, nb) ``stw`` row
+#     with NO resident planes at all (the unpacked kernel additionally
+#     parks ``bmin_val`` + ``bmin_gidx`` in VMEM);
+#   * the final merge is ``min`` of three words — the leftmost-tie
+#     select chain is subsumed by word order, and the kernel emits one
+#     packed word per query that the host unpacks.
+#
+# The quantized layout keeps raw value blocks (partials need exact values)
+# and fetches interior candidates from the int32 ``stw`` of
+# (bucket, exact-argmin) words; bucket ties fall back to exact values via
+# the resident ``bmin_val`` plane — the argmin of an interior window is the
+# minimum of its own (fully covered) block, so ``bmin_val[idx // bs]`` IS
+# its exact value. That fallback hop is why quantized has no dma strategy.
+#
+# packed64 words are int64 — outside the TPU kernel vocabulary — so that
+# layout serves through the XLA packed engines, never this kernel.
+
+
+def _kernel_packed(tile, fetch, idx_bits, pad, *refs):
+    """Exact-layout (packed32) kernel body: everything is int32 words."""
+    (bl_ref, br_ref, ls_ref, le_ref, re_ref,
+     k_ref, ilo_ref, bpos_ref, hasint_ref, wlo_ref, whi_ref) = refs[:_N_PREFETCH]
+    body = refs[_N_PREFETCH:]
+    xl_ref, xr_ref = body[0], body[1]
+    if fetch == "resident":
+        stw_ref = body[2]
+        word_ref = body[3]
+        xl_acc, xr_acc, iw_acc = body[4:7]
+    else:
+        lo_ref, hi_ref = body[2], body[3]
+        word_ref = body[4]
+        xl_acc, xr_acc, iw_acc = body[5:8]
+
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    q = i * tile + t
+    bs = xl_ref.shape[1]
+
+    xl_acc[pl.ds(t, 1)] = xl_ref[...]
+    xr_acc[pl.ds(t, 1)] = xr_ref[...]
+
+    if fetch == "resident":
+        wa = stw_ref[0, ilo_ref[q]]
+        wb = stw_ref[0, bpos_ref[q]]
+    else:
+        wa = lo_ref[0, ilo_ref[q] - wlo_ref[q] * _W]
+        wb = hi_ref[0, bpos_ref[q] - whi_ref[q] * _W]
+    iw_acc[t] = jnp.where(hasint_ref[q] == 1, jnp.minimum(wa, wb), pad)
+
+    @pl.when(t == tile - 1)
+    def _merge():
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (tile, bs), 1)
+        q0 = i * tile
+
+        def col(ref):
+            return scalar_col(ref, q0, tile)
+
+        bl, br, ls, le, re = col(bl_ref), col(br_ref), col(ls_ref), col(le_ref), col(re_ref)
+
+        # Partials: one masked word min per side; the min word IS the
+        # leftmost argmin (pad words strictly dominate real ones).
+        lw = jnp.min(
+            jnp.where((lanes >= ls[:, None]) & (lanes <= le[:, None]), xl_acc[...], pad),
+            axis=1,
+        )
+        rw = jnp.min(jnp.where(lanes <= re[:, None], xr_acc[...], pad), axis=1)
+        rw = jnp.where(br > bl, rw, pad)
+
+        # Scratch is (tile,)-indexed from 0, unlike the (B,) prefetch refs
+        # ``col`` reads at q0 + t.
+        iw = scalar_col(iw_acc, 0, tile)
+        word_ref[...] = jnp.minimum(jnp.minimum(lw, rw), iw)[:, None]
+
+
+def _kernel_quantized(tile, idx_bits, *refs):
+    """Quantized kernel body: raw-value partials + bucket-word interior with
+    the exact fallback hop through the resident ``bmin_val`` plane."""
+    (bl_ref, br_ref, ls_ref, le_ref, re_ref,
+     k_ref, ilo_ref, bpos_ref, hasint_ref, wlo_ref, whi_ref) = refs[:_N_PREFETCH]
+    body = refs[_N_PREFETCH:]
+    xl_ref, xr_ref, stw_ref, bv_ref = body[0:4]
+    val_ref, idx_ref = body[4:6]
+    xl_acc, xr_acc, iv_acc, ii_acc = body[6:10]
+
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    q = i * tile + t
+    bs = xl_ref.shape[1]
+    big = maxval(xl_ref.dtype)
+    mask = (1 << idx_bits) - 1
+
+    xl_acc[pl.ds(t, 1)] = xl_ref[...]
+    xr_acc[pl.ds(t, 1)] = xr_ref[...]
+
+    wa = stw_ref[0, ilo_ref[q]]
+    wb = stw_ref[0, bpos_ref[q]]
+    ai = wa & mask
+    bi = wb & mask
+    # Exact values via the block hop: an interior cell's argmin is the min
+    # of its own fully-covered block, so its exact value is that block's.
+    ava = bv_ref[0, ai // bs]
+    avb = bv_ref[0, bi // bs]
+    collide = (wa >> idx_bits) == (wb >> idx_bits)
+    take_a = jnp.where(collide, ava <= avb, wa <= wb)
+    iv_acc[t] = jnp.where(hasint_ref[q] == 1, jnp.where(take_a, ava, avb), big)
+    ii_acc[t] = jnp.where(take_a, ai, bi)
+
+    @pl.when(t == tile - 1)
+    def _merge():
+        big_i = jnp.int32(bs)
+        lanes = jax.lax.broadcasted_iota(jnp.int32, (tile, bs), 1)
+        q0 = i * tile
+
+        def col(ref):
+            return scalar_col(ref, q0, tile)
+
+        bl, br, ls, le, re = col(bl_ref), col(br_ref), col(ls_ref), col(le_ref), col(re_ref)
+
+        xl = xl_acc[...]
+        ml = jnp.where((lanes >= ls[:, None]) & (lanes <= le[:, None]), xl, big)
+        lv = jnp.min(ml, axis=1)
+        li = jnp.min(jnp.where(ml == lv[:, None], lanes, big_i), axis=1)
+        lg = bl * bs + li
+
+        xr = xr_acc[...]
+        mr = jnp.where(lanes <= re[:, None], xr, big)
+        rv = jnp.min(mr, axis=1)
+        rv = jnp.where(br > bl, rv, big)
+        ri = jnp.min(jnp.where(mr == rv[:, None], lanes, big_i), axis=1)
+        rg = br * bs + ri
+
+        take_l = lv <= rv
+        pv = jnp.where(take_l, lv, rv)
+        pi = jnp.where(take_l, lg, rg)
+
+        iv = scalar_col(iv_acc, 0, tile)
+        ii = scalar_col(ii_acc, 0, tile)
+
+        int_start = (bl + 1) * bs
+        prefer_partial = (pv < iv) | ((pv == iv) & (pi < int_start))
+        val_ref[...] = jnp.where(prefer_partial, pv, iv)[:, None]
+        idx_ref[...] = jnp.where(prefer_partial, pi, ii)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "tile", "fetch", "interpret")
+)
+def fused_query_packed(
+    blocks: jax.Array,  # (nb, bs): packed words (packed32) | raw values (quantized)
+    stw: jax.Array,  # (K, nb) int32 packed doubling table over block minima
+    l: jax.Array,  # (B,)
+    r: jax.Array,  # (B,)
+    *,
+    spec,  # packing.PackSpec (static: hashable NamedTuple of primitives)
+    bmin_val: jax.Array | None = None,  # (nb,) exact minima (quantized only)
+    tile: int = DEFAULT_TILE,
+    fetch: str = "auto",
+    interpret: bool | None = None,
+):
+    """Packed fused blocked RMQ. Returns (idx (B,) int32, value (B,)).
+
+    One kernel dispatch per batch over single-plane packed structures (see
+    the section comment above for the per-layout fetch volumes). Layouts:
+    packed32 (exact; both fetch strategies) and quantized (resident only).
+    packed64 raises — int64 words have no TPU kernel path.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if spec.layout == "packed64":
+        raise ValueError(
+            "packed64 words are int64 and have no TPU kernel path; "
+            "serve packed64 through the XLA packed engines"
+        )
+    if spec.layout not in ("packed32", "quantized"):
+        raise ValueError(f"fused_query_packed wants packed32|quantized, got {spec.layout!r}")
+    nb, bs = blocks.shape
+    b = l.shape[0]
+    fetch = resolve_fetch(fetch, nb)
+    if spec.layout == "quantized":
+        if bmin_val is None:
+            raise ValueError("quantized fused_query_packed needs the bmin_val plane")
+        fetch = "resident"  # the exact-fallback hop lives in the resident plane
+    pad = packing.pad_word(spec)
+    l = l.astype(jnp.int32)
+    r = r.astype(jnp.int32)
+
+    bl = l // bs
+    br = r // bs
+    ls = l - bl * bs
+    re = r - br * bs
+    le = jnp.where(bl == br, re, bs - 1)
+
+    hasint = ((br - bl) >= 2).astype(jnp.int32)
+    ilo = jnp.clip(bl + 1, 0, nb - 1)
+    ihi = jnp.maximum(jnp.clip(br - 1, 0, nb - 1), ilo)
+    k = exact_log2(ihi - ilo + 1)
+    bpos = ihi - jnp.left_shift(jnp.int32(1), k) + 1
+    wlo = ilo // _W
+    whi = bpos // _W
+
+    scalars = [bl, br, ls, le, re, k, ilo, bpos, hasint, wlo, whi]
+    scalars, bp = pad_to_tiles(scalars, b, tile)
+
+    nbp = -(-nb // _W) * _W
+    grid = (bp // tile, tile)
+    xl_spec = tiled2_row_spec((1, bs), 0, tile)
+    xr_spec = tiled2_row_spec((1, bs), 1, tile)
+    stw2 = jnp.pad(stw, ((0, 0), (0, nbp - nb)), constant_values=pad)
+
+    if spec.layout == "quantized":
+        bv2 = jnp.pad(bmin_val, (0, nbp - nb), constant_values=maxval(blocks.dtype))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=_N_PREFETCH,
+            grid=grid,
+            in_specs=[
+                xl_spec,
+                xr_spec,
+                tiled2_row_spec((1, nbp), 5, tile),  # stw[k[q], :]
+                pl.BlockSpec((1, nbp), lambda i, t, *s: (0, 0)),  # bmin_val
+            ],
+            out_specs=tiled2_out_specs(tile),
+            scratch_shapes=[
+                pltpu.VMEM((tile, bs), blocks.dtype),
+                pltpu.VMEM((tile, bs), blocks.dtype),
+                pltpu.SMEM((tile,), blocks.dtype),
+                pltpu.SMEM((tile,), jnp.int32),
+            ],
+        )
+        val, idx = pl.pallas_call(
+            functools.partial(_kernel_quantized, tile, spec.idx_bits),
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((bp, 1), blocks.dtype),
+                jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+            ],
+            interpret=interpret,
+        )(*scalars, blocks, blocks, stw2, bv2[None, :])
+        return idx[:b, 0], val[:b, 0]
+
+    if fetch == "resident":
+        in_specs = [
+            xl_spec,
+            xr_spec,
+            tiled2_row_spec((1, nbp), 5, tile),  # stw[k[q], :] — sole table fetch
+        ]
+        operands = (blocks, blocks, stw2)
+    else:
+        in_specs = [
+            xl_spec,
+            xr_spec,
+            tiled2_window_spec(_W, 5, 9, tile),  # stw[k[q], ilo window]
+            tiled2_window_spec(_W, 5, 10, tile),  # stw[k[q], bpos window]
+        ]
+        operands = (blocks, blocks, stw2, stw2)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=_N_PREFETCH,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((tile, 1), lambda i, t, *s: (i, 0))],
+        scratch_shapes=[
+            pltpu.VMEM((tile, bs), jnp.int32),  # xl word accumulator
+            pltpu.VMEM((tile, bs), jnp.int32),  # xr word accumulator
+            pltpu.SMEM((tile,), jnp.int32),  # interior words
+        ],
+    )
+    (word,) = pl.pallas_call(
+        functools.partial(_kernel_packed, tile, fetch, spec.idx_bits, pad),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((bp, 1), jnp.int32)],
+        interpret=interpret,
+    )(*scalars, *operands)
+    w = word[:b, 0]
+    return packing.unpack_idx(spec, w), packing.unpack_val(spec, w)

@@ -20,21 +20,25 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import block_rmq, sparse_table
+from repro.core import block_rmq, packing, sparse_table
 from repro.core.block_rmq import BlockRMQ, maxval, _pick
 
 from .block_min import block_min
-from .fused_query import DEFAULT_TILE, fused_query, interior_tables
+from .fused_query import DEFAULT_TILE, fused_query, fused_query_packed, interior_tables
 from .lane_query import lane_partials
 from .rmq_query import rmq_partials
 from .tuning import KernelConfig
 
 __all__ = [
     "FusedRMQ",
+    "PackedFusedRMQ",
     "build",
+    "build_packed",
     "query",
+    "query_packed",
     "block_min",
     "fused_query",
+    "fused_query_packed",
     "rmq_partials",
     "lane_query",
     "lane_partials",
@@ -77,6 +81,85 @@ def build(x: jax.Array, block_size: int, *, interpret: bool | None = None) -> Fu
         st=st,
         st_val=st_val,
         st_gidx=st_gidx,
+    )
+
+
+class PackedFusedRMQ(NamedTuple):
+    """Packed megakernel state (DESIGN.md §13): single-plane tables.
+
+    ``blocks`` holds packed words for exact layouts (the kernel's partial
+    scan is a word min) or raw values for the quantized layout (partials
+    need exact values); ``stw`` is the packed doubling table over block
+    minima — the only table the kernel fetches. ``bmin_val`` is the
+    quantized layout's exact-fallback resident plane (None otherwise).
+    The shared ``PackSpec`` rides beside the state, not in it, so this
+    pytree stays all-array (checkpoint leaves, device_put, shard specs).
+    """
+
+    blocks: jax.Array  # (nb, bs) packed words | raw values (quantized)
+    stw: jax.Array  # (K, nb) packed doubling table
+    bmin_val: jax.Array | None = None  # (nb,) exact minima, quantized only
+
+
+def build_packed(
+    x: jax.Array,
+    block_size: int,
+    *,
+    spec=None,
+    layout: str = "auto",
+    interpret: bool | None = None,
+):
+    """Packed kernel build. Returns ``(PackedFusedRMQ, spec)``.
+
+    Structure math is shared with ``core.block_rmq.build_packed`` (the
+    kernel consumes the same word planes the XLA engines do); the quantized
+    layout additionally keeps its exact per-block minima for the in-kernel
+    fallback hop. ``interpret`` is accepted for signature parity with
+    ``build`` — the packed build is pure XLA.
+    """
+    del interpret  # no Pallas stage in the packed build
+    if block_size % 128 != 0:
+        raise ValueError(f"block_size must be a multiple of 128, got {block_size}")
+    s, spec = block_rmq.build_packed(x, block_size, spec=spec, layout=layout)
+    bmin_val = None
+    if spec.layout == "quantized":
+        bmin_val = jnp.min(s.blocks, axis=1)  # blocks are raw (maxval-padded)
+    return PackedFusedRMQ(blocks=s.blocks, stw=s.stw, bmin_val=bmin_val), spec
+
+
+def query_packed(
+    s: PackedFusedRMQ,
+    spec,
+    l: jax.Array,
+    r: jax.Array,
+    *,
+    config: KernelConfig | None = None,
+    tile: int | None = None,
+    fetch: str | None = None,
+    interpret: bool | None = None,
+):
+    """Packed megakernel batched query -> (leftmost argmin idx int32, value).
+
+    Mirrors :func:`query` over ``PackedFusedRMQ`` state; the launch
+    geometry comes from ``config`` (its ``layout`` field is the tuner's
+    bookkeeping — the structure's ``spec`` is authoritative here).
+    """
+    if config is None:
+        config = KernelConfig()
+    if tile is None:
+        tile = config.tile
+    if fetch is None:
+        fetch = config.fetch
+    return fused_query_packed(
+        s.blocks,
+        s.stw,
+        l,
+        r,
+        spec=spec,
+        bmin_val=s.bmin_val,
+        tile=tile,
+        fetch=fetch,
+        interpret=interpret,
     )
 
 

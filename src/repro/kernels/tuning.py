@@ -67,13 +67,28 @@ TUNE_TILES = (4, 8, 16)
 TUNE_BLOCK_SIZES = (128, 256)
 DEFAULT_TUNE_BATCH = 4096
 
+# The packed-structure layout axis (DESIGN.md §13). ``candidate_configs``
+# sweeps only "unpacked" unless the caller opts the axis in (pass
+# ``layouts=TUNE_LAYOUTS`` or an explicit subset) — the packed kernels carry
+# their own feasibility rules (packed64 words are int64, outside the TPU
+# kernel vocabulary; packed32 needs the data's key range to fit; the
+# quantized fallback hop needs its resident plane, so no dma strategy) and
+# ``sweep`` skips candidates the sweep data cannot express.
+TUNE_LAYOUTS = ("unpacked", "packed32", "quantized", "packed64")
+
 
 class KernelConfig(NamedTuple):
-    """Static launch geometry for the fused megakernel."""
+    """Static launch geometry for the fused megakernel.
+
+    ``layout`` (config v3) names the packed-structure layout the geometry
+    was tuned for — "unpacked" is the historical default, so pre-layout
+    configs (and positional 3-tuples) keep constructing unchanged.
+    """
 
     tile: int = DEFAULT_TILE
     fetch: str = "auto"  # "resident" | "dma" | "auto" (resolve by nb)
     block_size: int = 128
+    layout: str = "unpacked"  # "unpacked" | "packed32" | "quantized" | "packed64"
 
 
 def resolve_fetch(fetch: str, nb: int) -> str:
@@ -90,7 +105,7 @@ def default_config(block_size: int = 128) -> KernelConfig:
     return KernelConfig(tile=DEFAULT_TILE, fetch="auto", block_size=block_size)
 
 
-def candidate_configs(n: int, block_size: int | None = None):
+def candidate_configs(n: int, block_size: int | None = None, *, layouts=None):
     """The swept config product for an ``n``-element array.
 
     ``block_size`` pins that knob (hybrid builds tune within their block
@@ -98,13 +113,29 @@ def candidate_configs(n: int, block_size: int | None = None):
     are excluded — they are exactly the configs the ceiling exists to avoid.
     The default config's resolution is always a member, so the tuned winner
     can never be slower than the default on the sweep's own measurements.
+
+    ``layouts`` opts the packed-structure axis in (e.g. ``TUNE_LAYOUTS``);
+    the default sweeps only "unpacked". Statically-infeasible members are
+    excluded here: packed64 words are int64 (outside the TPU kernel
+    vocabulary — packed64 serves through the XLA packed engines instead)
+    and the quantized fallback hop keeps a resident plane, so it has no
+    bounded-VMEM dma strategy. packed32's *data*-dependent feasibility
+    (does the key range fit?) is settled by ``sweep`` per array.
     """
     sizes = (block_size,) if block_size is not None else TUNE_BLOCK_SIZES
+    if layouts is None:
+        layouts = ("unpacked",)
     out = []
-    for bs, fetch, tile in itertools.product(sizes, FETCH_STRATEGIES, TUNE_TILES):
+    for bs, fetch, tile, lay in itertools.product(
+        sizes, FETCH_STRATEGIES, TUNE_TILES, layouts
+    ):
         if fetch == "resident" and -(-n // bs) > RESIDENT_NB_CEILING:
             continue
-        out.append(KernelConfig(tile=tile, fetch=fetch, block_size=bs))
+        if lay == "packed64":
+            continue  # int64 words: no kernel path
+        if lay == "quantized" and fetch == "dma":
+            continue  # fallback hop needs the resident exact-minima plane
+        out.append(KernelConfig(tile=tile, fetch=fetch, block_size=bs, layout=lay))
     for bs in sizes:  # the resolved default, if the product missed it
         d = KernelConfig(DEFAULT_TILE, resolve_fetch("auto", -(-n // bs)), bs)
         if d not in out:
@@ -118,16 +149,26 @@ def tuning_key(
     *,
     backend: str | None = None,
     n_devices: int | None = None,
+    layout: str | None = None,
 ) -> str:
     """Cache key for a tuned config: ``kernel/`` namespace + (n, batch,
-    backend, ndev) — disjoint from the threshold keys in the same file."""
+    backend, ndev) — disjoint from the threshold keys in the same file.
+
+    ``layout`` (key v3) scopes a tuning slot to one packed layout; the
+    default appends nothing, so migrated v2 entries keep matching. A sweep
+    run *across* layouts stores under the default slot — the winning
+    config's own ``layout`` field records what won.
+    """
     import jax
 
     if backend is None:
         backend = jax.default_backend()
     if n_devices is None:
         n_devices = len(jax.devices())
-    return f"kernel/n={n}/batch={batch}/backend={backend}/ndev={n_devices}"
+    key = f"kernel/n={n}/batch={batch}/backend={backend}/ndev={n_devices}"
+    if layout is not None and layout != "unpacked":
+        key += f"/layout={layout}"
+    return key
 
 
 def config_from_entry(entry) -> KernelConfig | None:
@@ -140,12 +181,16 @@ def config_from_entry(entry) -> KernelConfig | None:
             tile=int(entry["tile"]),
             fetch=str(entry["fetch"]),
             block_size=int(entry["block_size"]),
+            # Pre-layout entries (and migrated v2 files) mean unpacked.
+            layout=str(entry.get("layout", "unpacked")),
         )
     except (KeyError, TypeError, ValueError):
         return None
     if cfg.fetch not in FETCH_STRATEGIES + ("auto",):
         return None
     if cfg.tile < 1 or cfg.block_size % 128 != 0:
+        return None
+    if cfg.layout not in TUNE_LAYOUTS:
         return None
     return cfg
 
@@ -167,7 +212,9 @@ def sweep(
     measurement seam ``hybrid.calibrate`` uses (``hybrid._measure`` — tests
     monkeypatch it to make sweeps deterministic and to assert a warm cache
     performs zero of them). Builds are shared across the candidates of a
-    block size.
+    (block size, layout). Packed candidates the sweep data cannot encode
+    (a packed32 key range that does not fit) are skipped, not errored —
+    the winner must come from configs this machine can actually run.
     """
     import jax.numpy as jnp
     import numpy as np
@@ -188,14 +235,37 @@ def sweep(
     results = []
     built = {}
     for cfg in candidates:
-        if cfg.block_size not in built:
-            built[cfg.block_size] = ops.build(x, cfg.block_size, interpret=interpret)
-        s = built[cfg.block_size]
+        bkey = (cfg.block_size, cfg.layout)
+        if bkey not in built:
+            if cfg.layout == "unpacked":
+                built[bkey] = (
+                    ops.build(x, cfg.block_size, interpret=interpret),
+                    None,
+                )
+            else:
+                try:
+                    built[bkey] = ops.build_packed(
+                        x, cfg.block_size, layout=cfg.layout, interpret=interpret
+                    )
+                except ValueError:
+                    built[bkey] = None  # data can't express this layout
+        if built[bkey] is None:
+            continue
+        s, spec = built[bkey]
 
-        def fn(l, r, s=s, cfg=cfg):
-            return ops.query(s, l, r, config=cfg, interpret=interpret)
+        if cfg.layout == "unpacked":
+
+            def fn(l, r, s=s, cfg=cfg):
+                return ops.query(s, l, r, config=cfg, interpret=interpret)
+
+        else:
+
+            def fn(l, r, s=s, spec=spec, cfg=cfg):
+                return ops.query_packed(s, spec, l, r, config=cfg, interpret=interpret)
 
         kind = f"kernel/tile={cfg.tile}/fetch={cfg.fetch}/bs={cfg.block_size}"
+        if cfg.layout != "unpacked":  # unpacked kinds stay v2-identical
+            kind += f"/layout={cfg.layout}"
         results.append((cfg, hybrid._measure(kind, fn, lj, rj, repeats)))
     return results
 

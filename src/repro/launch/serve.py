@@ -79,6 +79,16 @@ def _parser() -> argparse.ArgumentParser:
         "default: the engine's own)",
     )
     ap.add_argument(
+        "--packed",
+        nargs="?",
+        const="auto",
+        choices=["auto", "packed32", "packed64", "quantized"],
+        default=None,
+        help="serve fused (value, index) word structures (core.packing): bare "
+        "--packed (= 'auto') picks the tightest layout the data fits, or name "
+        "one explicitly (engines declaring a 'packed' build kwarg)",
+    )
+    ap.add_argument(
         "--qshard",
         nargs="?",
         const="batch",
@@ -198,6 +208,16 @@ def _validate(ap: argparse.ArgumentParser, args, spec: registry.EngineSpec) -> N
             f"--tune requires an engine with a 'kernel_config' build kwarg; "
             f"{args.engine} declares {sorted(spec.build_kwargs) or '()'}"
         )
+    if args.packed is not None and "packed" not in spec.build_kwargs:
+        ap.error(
+            f"--packed requires an engine with a 'packed' build kwarg; "
+            f"{args.engine} declares {sorted(spec.build_kwargs) or '()'}"
+        )
+    if args.packed == "quantized" and spec.needs_mesh:
+        ap.error(
+            "--packed quantized is single-host only (its exact fallback needs "
+            f"the raw blocks resident); {args.engine} is a mesh engine"
+        )
     if args.mutate:
         if args.mode != "async":
             ap.error("--mutate requires --mode async")
@@ -233,6 +253,8 @@ def _build_kwargs(args, spec: registry.EngineSpec) -> dict:
         kw["threshold"] = "calibrated" if args.calibrate else "cached"
     if "kernel_config" in spec.build_kwargs:
         kw["kernel_config"] = "tuned" if args.tune else "cached"
+    if args.packed is not None:
+        kw["packed"] = args.packed
     if args.qshard is not None:
         kw["mode"] = _QSHARD_MODES[args.qshard]
     return kw

@@ -104,9 +104,12 @@ def _attn_sublayer(p, x, cfg, *, positions, mode, is_global=None, ck=None, cv=No
     k = rope(k, positions, cfg.rope_theta)
 
     if mode == "decode":
-        # insert at position `length`, then attend over length+1 tokens
-        ck = jax.lax.dynamic_update_slice(ck, k, (0, length, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v, (0, length, 0, 0))
+        # insert at position `length`, then attend over length+1 tokens.
+        # All four indices share `length`'s dtype: under enable_x64 the
+        # literal zeros would otherwise weaken to int64 and mismatch it.
+        zero = jnp.zeros((), length.dtype)
+        ck = jax.lax.dynamic_update_slice(ck, k, (zero, length, zero, zero))
+        cv = jax.lax.dynamic_update_slice(cv, v, (zero, length, zero, zero))
         o = attn_lib.decode_attention(
             q, ck, cv, length + 1, window=cfg.sliding_window, is_global=is_global
         )

@@ -942,6 +942,7 @@ def run_fleet_soak(
     max_lag: int = 2,
     workers: int = 1,
     root: Optional[str] = None,
+    packed: Optional[str] = None,
     log=None,
 ) -> FleetSoakReport:
     """Mutate-while-serving fleet soak with a mid-rollout crash (injected at
@@ -971,7 +972,10 @@ def run_fleet_soak(
             breaker_cooldown_s=0.02,
         ),
     )
-    fleet = RMQFleet.build(engine, x, config=cfg, durable_root=root, fault_plan=plan)
+    build_kw = {"packed": packed} if packed is not None else {}
+    fleet = RMQFleet.build(
+        engine, x, config=cfg, durable_root=root, fault_plan=plan, **build_kw
+    )
     sessions = [fleet.session() for _ in range(3)]
     thr = fleet.threshold
 
@@ -1095,11 +1099,25 @@ def main(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--max-lag", type=int, default=2)
     p.add_argument("--workers", type=int, default=1)
+    p.add_argument(
+        "--packed",
+        nargs="?",
+        const="auto",
+        choices=["auto", "packed32", "packed64", "quantized"],
+        default=None,
+        help="serve fused (value, index) word structures (engines declaring a "
+        "'packed' build kwarg; bare --packed = 'auto')",
+    )
     p.add_argument("--root", default=None, help="durability root (default: temp dir)")
     p.add_argument("--json", default=None, help="write the report as JSON here")
     p.add_argument("--quiet", action="store_true")
     args = p.parse_args(argv)
 
+    if args.packed is not None and "packed" not in registry.get(args.engine).build_kwargs:
+        p.error(
+            f"--packed requires an engine with a 'packed' build kwarg; "
+            f"{args.engine} declares {sorted(registry.get(args.engine).build_kwargs) or '()'}"
+        )
     if registry.get(args.engine).needs_mesh:
         import jax
 
@@ -1118,6 +1136,7 @@ def main(argv=None) -> int:
         max_lag=args.max_lag,
         workers=args.workers,
         root=args.root,
+        packed=args.packed,
         log=None if args.quiet else print,
     )
     print(report.summary())

@@ -33,6 +33,7 @@ leaf-for-leaf.
 from __future__ import annotations
 
 import functools
+import json
 import threading
 import time
 from typing import Callable, Dict, NamedTuple, Optional, Tuple
@@ -42,14 +43,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import block_rmq, distributed, registry, sparse_table
+from repro.core import block_rmq, distributed, packing, registry, sparse_table
 from repro.core import build as build_mod
 from repro.core.block_rmq import BlockRMQ
 from repro.core.hybrid import HybridRMQ
 from repro.core.sparse_table import SparseTable
 
 from .deltas import DeltaBatch, DeltaLog, shard_batches
-from .patch import BlockMirror, STMirror
+from .patch import BlockMirror, PackedBlockMirror, PackedSTMirror, STMirror
+from .patch import packed_fit_check
 from .versions import Version, VersionStore
 
 __all__ = [
@@ -363,6 +365,8 @@ def _block_impl(block_size: int):
 
 
 def _hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
+    if build_mod._norm_packed(kw.get("packed")) is not None:
+        return _packed_hybrid_impl(x, mesh, axis_names, kw, snap=snap)
     # The online hybrid pins the pure-jnp short path: the Pallas megakernel's
     # packed buffers are not patched in place yet (kernel-side COW is a
     # ROADMAP follow-up), and the CPU baseline never uses them anyway.
@@ -447,6 +451,181 @@ def _hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
     )
 
 
+# --- packed single-host hybrid -----------------------------------------------
+
+
+def _spec_blob(spec) -> np.ndarray:
+    """The ``PackSpec`` as a uint8 JSON blob (checkpoints persist arrays only).
+
+    The concrete spec must survive a checkpoint: an overflow-triggered
+    rebuild re-biases the key range, after which ``spec_for`` over the
+    restored array would derive a *different* (equally valid) spec — and a
+    restore must be bit-identical to the live engine, not merely conformant.
+    """
+    return np.frombuffer(json.dumps(spec.to_meta()).encode(), np.uint8)
+
+
+def _spec_from_blob(blob: np.ndarray):
+    spec = packing.PackSpec.from_meta(json.loads(np.asarray(blob, np.uint8).tobytes()))
+    if spec.layout == "packed64":
+        packing.ensure_x64()  # spec_for normally flips this; restores skip it
+    return spec
+
+
+def _packed_hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
+    """Online packed hybrid: packed mirrors + windowed word-plane publish.
+
+    The packed mirrors (``update.patch``) delegate the exact windowed repair
+    to the raw mirrors and repack words over only the recomputed windows, so
+    a publish uploads the same O(windows) volume as the unpacked engine —
+    but each window is one fused word plane instead of parallel idx/val
+    leaves. A batch the build-time spec cannot encode (a packed32 value
+    outside the key range, appends past the index field) raises
+    ``OverflowError`` BEFORE any mirror mutates and falls back to a
+    structural rebuild under a fresh spec; packed64 always fits, so its
+    appends stay incremental.
+    """
+    layout_req = build_mod._norm_packed(kw.get("packed", "auto")) or "auto"
+    plan = build_mod.plan_for(
+        "hybrid",
+        x.shape[0],
+        block_size=kw.get("block_size", 128),
+        threshold=kw.get("threshold"),
+        use_kernels=False,
+        packed=layout_req,
+    )
+    bs = plan.meta["block_size"]
+    pub = {"bytes": 0}
+
+    def _assemble(blocked, table, xj, threshold, spec) -> HybridRMQ:
+        # query_packed jits internally with the spec static, so binding a
+        # fresh same-shape structure on publish is a jit-cache hit.
+        return HybridRMQ(
+            blocked=blocked,
+            st=table,
+            x=xj,
+            threshold=threshold,
+            use_kernels=False,
+            short_fn=lambda l, r: block_rmq.query_packed(blocked, spec, l, r),
+            long_fn=lambda l, r: sparse_table.query_packed(table, spec, l, r),
+        )
+
+    def _seed(state, spec, x_host):
+        """Mirrors + COW leaves over a freshly built packed state."""
+        blocked_m = PackedBlockMirror.from_state(state.blocked, spec, x_host.shape[0])
+        st_m = PackedSTMirror.from_state(state.st, x_host, spec)
+        leaves = {
+            "blocks": _CowLeaf(state.blocked.blocks, pub),
+            "stw": _CowLeaf(state.blocked.stw, pub),
+            "words": _CowLeaf(state.st.words, pub),
+            "x": _CowLeaf(state.x, pub),
+        }
+        return blocked_m, st_m, leaves
+
+    if snap is None:
+        state0 = build_mod.execute(plan, x)
+        # Deterministic from the data — identical to the spec the plan's
+        # local stage derived (and discarded with the build state dict).
+        spec = packing.spec_for(x, x.shape[0], plan.meta["packed"])
+        blocked_m, st_m, leaves = _seed(state0, spec, np.asarray(x))
+    else:
+        spec = _spec_from_blob(snap["spec"])
+        blocked_m = PackedBlockMirror(
+            snap["b_blocks"], snap["b_stw"], spec, snap["x"].shape[0]
+        )
+        st_m = PackedSTMirror(snap["st_words"], snap["x"], spec)
+        leaves = {
+            "blocks": _CowLeaf(jnp.asarray(snap["b_blocks"]), pub),
+            "stw": _CowLeaf(jnp.asarray(snap["b_stw"]), pub),
+            "words": _CowLeaf(jnp.asarray(snap["st_words"]), pub),
+            "x": _CowLeaf(jnp.asarray(snap["x"]), pub),
+        }
+        state0 = _assemble(
+            block_rmq.PackedBlockRMQ(
+                blocks=leaves["blocks"].dev, stw=leaves["stw"].dev
+            ),
+            sparse_table.PackedSparseTable(
+                words=leaves["words"].dev,
+                x=leaves["x"].dev if spec.layout == "quantized" else None,
+            ),
+            leaves["x"].dev,
+            plan.meta["threshold"],
+            spec,
+        )
+
+    def patch(batch: DeltaBatch, prev: HybridRMQ):
+        nonlocal spec, blocked_m, st_m, leaves
+        pub["bytes"] = 0
+        vals = np.concatenate([batch.val, batch.tail.astype(batch.val.dtype)])
+        try:
+            packed_fit_check(spec, vals, batch.n_new)
+        except OverflowError:
+            # The build-time spec cannot encode this batch: structural
+            # rebuild under a fresh spec (threshold pinned, deterministic).
+            xj = jnp.asarray(batch.apply_numpy(st_m.x))
+            p2 = build_mod.plan_for(
+                "hybrid",
+                batch.n_new,
+                block_size=bs,
+                threshold=int(prev.threshold),
+                use_kernels=False,
+                packed=layout_req,
+            )
+            state = build_mod.execute(p2, xj)
+            spec = packing.spec_for(xj, batch.n_new, p2.meta["packed"])
+            blocked_m, st_m, leaves = _seed(state, spec, np.asarray(xj))
+            return state, False
+        blocked_m.patch(batch)
+        st_m.patch(batch)
+        b_host = (
+            blocked_m.block_words
+            if blocked_m.block_words is not None  # quantized keeps raw blocks
+            else blocked_m.inner.x_blocks
+        )
+        if blocked_m.last_block_runs is None:  # block count grew
+            bw = leaves["blocks"].full(b_host)
+            sw = leaves["stw"].full(blocked_m.stw_words)
+        else:
+            bw = leaves["blocks"].splice_rows(b_host, blocked_m.last_block_runs)
+            sw = leaves["stw"].splice(blocked_m.stw_words, blocked_m.last_st_windows)
+        if st_m.last_word_windows is None:  # grew: full-plane shapes changed
+            wj = leaves["words"].full(st_m.words)
+            xj = leaves["x"].full(st_m.x)
+        else:
+            wj = leaves["words"].splice(st_m.words, st_m.last_word_windows)
+            xj = leaves["x"].splice(
+                st_m.x, [(None, a, b) for a, b in st_m.last_x_windows]
+            )
+        blocked = block_rmq.PackedBlockRMQ(blocks=bw, stw=sw)
+        table = sparse_table.PackedSparseTable(
+            words=wj, x=xj if spec.layout == "quantized" else None
+        )
+        return _assemble(blocked, table, xj, prev.threshold, spec), True
+
+    def snapshot():
+        b_host = (
+            blocked_m.block_words
+            if blocked_m.block_words is not None
+            else blocked_m.inner.x_blocks
+        )
+        return {
+            "x": st_m.x.copy(),
+            "st_words": st_m.words.copy(),
+            "b_blocks": b_host.copy(),
+            "b_stw": blocked_m.stw_words.copy(),
+            "spec": _spec_blob(spec),
+        }
+
+    return _Impl(
+        plan,
+        state0,
+        patch,
+        snapshot=snapshot,
+        array=lambda: st_m.x.copy(),
+        publish_bytes=lambda: pub["bytes"],
+    )
+
+
 # --- mesh implementations ----------------------------------------------------
 
 
@@ -492,6 +671,8 @@ def _distributed_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
 
 
 def _sharded_hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
+    if build_mod._norm_packed(kw.get("packed")) is not None:
+        return _packed_sharded_hybrid_impl(x, mesh, axis_names, kw, snap=snap)
     # Like ``_distributed_impl``: snapshot = the logical array, restore =
     # re-run the BuildPlan (with the threshold pinned via the restore
     # kwargs), bit-identical by the patched==rebuilt invariant.
@@ -568,6 +749,125 @@ def _sharded_hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
     return _Impl(plan, state0, patch, snapshot=snapshot, array=array)
 
 
+def _packed_sharded_hybrid_impl(x, mesh, axis_names, kw, snap=None) -> _Impl:
+    """Online packed sharded hybrid: single-plane SPMD patches.
+
+    Structure-sharded modes patch through ``distributed.patch_sharded_packed``
+    / ``patch_sharded_st_packed`` — one word plane rides the halo transport
+    per doubling level, half the unpacked patch's traffic. ``shard_batch``
+    patches host packed mirrors and re-replicates. A batch the spec cannot
+    encode (packed32 key range, appends past the index field) raises
+    host-side BEFORE any device state mutates and falls back to a structural
+    rebuild under a fresh spec. Snapshot = the logical array (the mesh
+    convention): restore re-runs the BuildPlan, which re-derives the spec
+    deterministically from the restored array.
+    """
+    layout_req = build_mod._norm_packed(kw.get("packed", "auto")) or "auto"
+    plan = build_mod.plan_for(
+        "sharded_hybrid",
+        x.shape[0],
+        mesh=mesh,
+        axis_names=axis_names,
+        block_size=kw.get("block_size", 128),
+        threshold=kw.get("threshold"),
+        mode=kw.get("mode", "shard_structure"),
+        packed=layout_req,
+    )
+    state0 = build_mod.execute(plan, x)
+    mesh = plan.meta["mesh"]
+    struct_axes = plan.meta["struct_axes"]
+    mode, bs = plan.meta["mode"], plan.meta["block_size"]
+    x_host = np.asarray(x)
+    spec = packing.spec_for(x, x.shape[0], plan.meta["packed"])
+    snapshot = lambda: {"x": x_host.copy()}
+    array = lambda: x_host.copy()
+
+    def _rebuild(n_new, threshold):
+        nonlocal spec
+        xj = jnp.asarray(x_host)
+        p2 = build_mod.plan_for(
+            "sharded_hybrid",
+            n_new,
+            mesh=mesh,
+            axis_names=plan.meta["axis_names"],
+            block_size=bs,
+            threshold=threshold,
+            mode=mode,
+            packed=layout_req,
+        )
+        state = build_mod.execute(p2, xj)
+        spec = packing.spec_for(xj, n_new, p2.meta["packed"])
+        return state
+
+    if not struct_axes:  # shard_batch: replicated structures, packed mirrors
+        blocked_m = PackedBlockMirror.from_state(state0.blocked, spec, x.shape[0])
+        st_m = PackedSTMirror.from_state(state0.st, x_host, spec)
+        repl = NamedSharding(mesh, P())
+
+        def patch(batch: DeltaBatch, prev):
+            nonlocal x_host, blocked_m, st_m
+            vals = np.concatenate([batch.val, batch.tail.astype(batch.val.dtype)])
+            try:
+                packed_fit_check(spec, vals, batch.n_new)
+            except OverflowError:
+                x_host = batch.apply_numpy(x_host)
+                state = _rebuild(batch.n_new, int(prev.threshold))
+                blocked_m = PackedBlockMirror.from_state(
+                    state.blocked, spec, batch.n_new
+                )
+                st_m = PackedSTMirror.from_state(state.st, x_host, spec)
+                return state, False
+            x_host = batch.apply_numpy(x_host)
+            blocked_m.patch(batch)
+            st_m.patch(batch)
+            # Mesh packing is never quantized, so both word planes exist.
+            blocked = block_rmq.PackedBlockRMQ(
+                blocks=jnp.asarray(blocked_m.block_words),
+                stw=jnp.asarray(blocked_m.stw_words),
+            )
+            table = sparse_table.PackedSparseTable(words=jnp.asarray(st_m.words))
+            return (
+                prev._replace(
+                    blocked=jax.device_put(blocked, repl),
+                    st=jax.device_put(table, repl),
+                    n=batch.n_new,
+                ),
+                True,
+            )
+
+        return _Impl(plan, state0, patch, snapshot=snapshot, array=array)
+
+    def patch(batch: DeltaBatch, prev):
+        nonlocal x_host
+        vals = np.concatenate([batch.val, batch.tail.astype(batch.val.dtype)])
+        x_host = batch.apply_numpy(x_host)
+        cap_blocked = prev.blocked.blocks.shape[0] * prev.blocked.blocks.shape[1]
+        cap_st = prev.st.words.shape[1]
+        if batch.n_new > min(cap_blocked, cap_st):
+            return _rebuild(batch.n_new, int(prev.threshold)), False
+        try:
+            # Appends inside the padded capacity can still outgrow the
+            # spec's index field — checked host-side before any scatter.
+            packed_fit_check(spec, vals, batch.n_new)
+        except OverflowError:
+            return _rebuild(batch.n_new, int(prev.threshold)), False
+        pos = batch.touched()
+        return (
+            prev._replace(
+                blocked=distributed.patch_sharded_packed(
+                    prev.blocked, pos, vals, mesh, struct_axes, spec
+                ),
+                st=distributed.patch_sharded_st_packed(
+                    prev.st, pos, vals, mesh, struct_axes, spec
+                ),
+                n=batch.n_new,
+            ),
+            True,
+        )
+
+    return _Impl(plan, state0, patch, snapshot=snapshot, array=array)
+
+
 _FACTORIES: Dict[str, Callable] = {
     "sparse_table": _sparse_table_impl,
     "block128": _block_impl(128),
@@ -575,6 +875,8 @@ _FACTORIES: Dict[str, Callable] = {
     "hybrid": _hybrid_impl,
     "distributed": _distributed_impl,
     "sharded_hybrid": _sharded_hybrid_impl,
+    "packed_hybrid": _packed_hybrid_impl,
+    "packed_sharded_hybrid": _packed_sharded_hybrid_impl,
 }
 
 
@@ -620,7 +922,7 @@ class OnlineEngine:
         # Pin the plan-resolved knobs: a snapshot restored with these kwargs
         # re-plans to the exact same layout/threshold/mode deterministically.
         self._build_kw = dict(build_kw)
-        for key in ("block_size", "threshold", "mode"):
+        for key in ("block_size", "threshold", "mode", "packed"):
             val = self.plan.meta.get(key)
             if val is not None:
                 self._build_kw[key] = int(val) if isinstance(val, (int, np.integer)) else val

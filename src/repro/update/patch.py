@@ -31,14 +31,19 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import packing
+
 from .deltas import DeltaBatch
 
 __all__ = [
     "BlockMirror",
+    "PackedBlockMirror",
+    "PackedSTMirror",
     "STMirror",
     "k_levels",
     "level_windows",
     "np_maxval",
+    "packed_fit_check",
     "patch_doubling",
 ]
 
@@ -245,3 +250,185 @@ class BlockMirror:
         self.last_block_runs = None if grew else level_windows(tb, 0, nb_new)
         self.last_st_windows = None if grew else wins
         self.n = batch.n_new
+
+
+# --- packed mirrors ----------------------------------------------------------
+#
+# The packed structures' index fields are exact in every layout, so the
+# packed mirrors delegate the windowed repair to the raw mirrors above and
+# then REPACK words over exactly the recomputed windows. Bit-identity with a
+# from-scratch ``build_packed`` follows from the order isomorphism: the
+# word-min doubling picks the same leftmost argmin the exact index doubling
+# does, so ``pack(x[idx[k, c]], idx[k, c])`` IS the word the build computes.
+
+
+def packed_fit_check(spec, values: np.ndarray, n_new: int) -> None:
+    """Raise ``OverflowError`` when a delta batch cannot encode under ``spec``.
+
+    Called BEFORE any mirror mutation, so an infeasible batch (a packed32
+    value outside the build-time key range, or an append pushing the index
+    domain past ``idx_bits``) leaves the mirrors untouched and the caller
+    falls back to a structural rebuild with a fresh spec. packed64 always
+    fits (32-bit key + 32-bit index); quantized values clamp to the edge
+    buckets (weakly monotone, resolved by the exact fallback) so only its
+    index domain can overflow.
+    """
+    if spec.layout != "packed64" and packing.idx_bits_for(max(n_new, 1)) > spec.idx_bits:
+        raise OverflowError(
+            f"appends grew the index domain to {n_new}, past the "
+            f"{spec.idx_bits}-bit index field"
+        )
+    if spec.layout == "packed32" and values.size:
+        packing.pack_np(
+            spec,
+            np.asarray(values, np.dtype(spec.dtype)),
+            np.zeros(values.size, np.int32),
+        )
+
+
+class PackedSTMirror:
+    """Host mirror of a ``PackedSparseTable``: exact raw mirror + word plane.
+
+    Wraps an ``STMirror`` (the exact index/value repair, with its window
+    collection) and repacks ``words`` over only the recomputed cells.
+    ``last_word_windows`` lists the repacked ``(k, a, b)`` windows for the
+    windowed-COW publish (``None`` -> shapes changed, full re-upload);
+    ``last_x_windows`` mirrors the raw value windows for the quantized
+    layout's retained ``x`` leaf.
+    """
+
+    def __init__(self, words: np.ndarray, x: np.ndarray, spec):
+        self.spec = spec
+        self.words = np.array(words)
+        self.inner = STMirror(packing.unpack_idx_np(spec, np.asarray(words)), x)
+        self.last_word_windows: Optional[List[Tuple[int, int, int]]] = None
+        self.last_x_windows: Optional[List[Tuple[int, int]]] = None
+
+    @property
+    def x(self) -> np.ndarray:
+        return self.inner.x
+
+    @classmethod
+    def from_state(cls, table, x, spec) -> "PackedSTMirror":
+        """``table`` is the built ``PackedSparseTable``; ``x`` the raw host
+        values (the quantized table retains them; exact layouts pass the
+        engine's value mirror)."""
+        return cls(np.asarray(table.words), np.array(x), spec)
+
+    def _repack(self, k: int, a: int, b: int) -> None:
+        ii = self.inner.idx[k, a : b + 1]
+        self.words[k, a : b + 1] = packing.pack_np(self.spec, self.inner.x[ii], ii)
+
+    def patch(self, batch: DeltaBatch) -> None:
+        self.inner.patch(batch)
+        if self.inner.last_idx_windows is None:  # grew: shapes changed
+            idx = self.inner.idx
+            self.words = packing.pack_np(self.spec, self.inner.x[idx], idx)
+            self.last_word_windows = None
+            self.last_x_windows = None
+            return
+        # Level 0 is the packed value row itself: every changed value
+        # re-encodes, even where the (identity) index row did not move.
+        wins = [(0, a, b) for a, b in self.inner.last_x_windows]
+        wins.extend(self.inner.last_idx_windows)
+        for k, a, b in wins:
+            self._repack(k, a, b)
+        self.last_word_windows = wins
+        self.last_x_windows = self.inner.last_x_windows
+
+
+class PackedBlockMirror:
+    """Host mirror of a ``PackedBlockRMQ``: raw ``BlockMirror`` + word planes.
+
+    The raw mirrors are derived from the built packed state (exact decode:
+    the word planes' index fields are exact, and level 0 of ``stw`` carries
+    every per-block leftmost minimum). ``block_words`` is ``None`` for the
+    quantized layout — its first tier stays raw and ``inner.x_blocks`` is
+    the publishable leaf itself.
+    """
+
+    def __init__(self, blocks: np.ndarray, stw: np.ndarray, spec, n: int):
+        self.spec = spec
+        self.stw_words = np.array(stw)
+        dtype = np.dtype(spec.dtype)
+        if spec.layout == "quantized":
+            self.block_words: Optional[np.ndarray] = None
+            x_blocks = np.array(blocks)
+        else:
+            wb = np.asarray(blocks)
+            self.block_words = np.array(wb)
+            x_blocks = np.where(
+                wb == packing.pad_word(spec),
+                np_maxval(dtype),
+                packing.unpack_val_np(spec, wb),
+            ).astype(dtype)
+        bs = x_blocks.shape[1]
+        bmin_gidx = packing.unpack_idx_np(spec, self.stw_words[0])
+        bmin_val = x_blocks.reshape(-1)[bmin_gidx]
+        # stw index fields are *global element* indices in every layout; the
+        # block id they live in is the exact block-level argmin (word-min
+        # ties resolve to the smaller global index = the leftmost block).
+        st_idx = packing.unpack_idx_np(spec, self.stw_words) // bs
+        self.inner = BlockMirror(x_blocks, bmin_val, bmin_gidx, st_idx, n)
+        self.last_block_runs: Optional[List[Tuple[int, int]]] = None
+        self.last_st_windows: Optional[List[Tuple[int, int, int]]] = None
+
+    @classmethod
+    def from_state(cls, s, spec, n: int) -> "PackedBlockMirror":
+        return cls(np.asarray(s.blocks), np.asarray(s.stw), spec, n)
+
+    def _repack_block_rows(self, a: int, b: int) -> None:
+        inner = self.inner
+        bs = inner.block_size
+        rows = inner.x_blocks[a : b + 1]
+        gidx = (
+            np.arange(a, b + 1, dtype=np.int64)[:, None] * bs
+            + np.arange(bs, dtype=np.int64)[None, :]
+        )
+        flat_v = rows.reshape(-1)
+        flat_i = gidx.reshape(-1)
+        valid = flat_i < inner.n
+        words = np.full(
+            flat_v.shape, packing.pad_word(self.spec), packing.word_dtype_np(self.spec)
+        )
+        words[valid] = packing.pack_np(
+            self.spec, flat_v[valid], flat_i[valid].astype(np.int32)
+        )
+        self.block_words[a : b + 1] = words.reshape(rows.shape)
+
+    def _repack_stw(self, k: int, a: int, b: int) -> None:
+        inner = self.inner
+        blk = inner.st_idx[k, a : b + 1]
+        self.stw_words[k, a : b + 1] = packing.pack_np(
+            self.spec, inner.bmin_val[blk], inner.bmin_gidx[blk]
+        )
+
+    def patch(self, batch: DeltaBatch) -> None:
+        inner = self.inner
+        inner.patch(batch)
+        if inner.last_block_runs is None:  # block count grew: shapes changed
+            nb = inner.x_blocks.shape[0]
+            if self.block_words is not None:
+                self.block_words = np.empty(
+                    inner.x_blocks.shape, packing.word_dtype_np(self.spec)
+                )
+                self._repack_block_rows(0, nb - 1)
+            self.stw_words = packing.pack_np(
+                self.spec,
+                inner.bmin_val[inner.st_idx],
+                inner.bmin_gidx[inner.st_idx],
+            )
+            self.last_block_runs = None
+            self.last_st_windows = None
+            return
+        if self.block_words is not None:
+            for a, b in inner.last_block_runs:
+                self._repack_block_rows(a, b)
+        # Level 0 of stw is the per-block-minimum word row: touched blocks
+        # re-encode even when the block-level argmin table did not move.
+        wins = [(0, a, b) for a, b in inner.last_block_runs]
+        wins.extend(inner.last_st_windows)
+        for k, a, b in wins:
+            self._repack_stw(k, a, b)
+        self.last_block_runs = inner.last_block_runs
+        self.last_st_windows = wins

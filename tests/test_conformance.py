@@ -143,9 +143,12 @@ def test_fused_dma_past_resident_ceiling():
     xh = np.asarray(x)
     gold = ref.rmq_ref(xh, l, r)
 
+    # This test builds the bare structure, so the augmented interior tables
+    # are intentionally absent: opt into the on-the-fly derivation.
     qi, qv = fused_query(
         s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx,
         jnp.asarray(l), jnp.asarray(r), fetch="dma", interpret=True,
+        materialize_interior=True,
     )
     np.testing.assert_array_equal(np.asarray(qi), gold)
     np.testing.assert_array_equal(np.asarray(qv), xh[gold])
@@ -153,6 +156,7 @@ def test_fused_dma_past_resident_ceiling():
     ai, av = fused_query(
         s.x_blocks, s.bmin_val, s.bmin_gidx, s.st.idx,
         jnp.asarray(l), jnp.asarray(r), fetch="auto", interpret=True,
+        materialize_interior=True,
     )
     np.testing.assert_array_equal(np.asarray(ai), gold)
     np.testing.assert_array_equal(np.asarray(av), xh[gold])
@@ -179,7 +183,9 @@ def test_sharded_hybrid_modes_match_single_device():
 def test_sharded_hybrid_empty_batch():
     from repro.core import sharded_hybrid
 
-    s = sharded_hybrid.build(jnp.arange(256.0))
+    # Explicit dtype: packed64 builds elsewhere in the suite enable x64,
+    # under which a bare arange(256.0) would widen to float64.
+    s = sharded_hybrid.build(jnp.arange(256.0, dtype=jnp.float32))
     # A launch on an empty batch would be a phantom kernel: forbid it outright.
     boom = lambda *a: (_ for _ in ()).throw(AssertionError("launched on empty batch"))
     s = s._replace(short_fn=boom, long_fn=boom)

@@ -45,14 +45,20 @@
 #    persistent cache, a second tuned run must perform ZERO timing sweeps
 #    (counted at the hybrid._measure seam, the only place a sweep can
 #    time), and the policy=None default path must never touch the cache.
-# 10. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+# 10. packed gate: the fused (value, index) word layouts (§13) — the
+#    packed encoding/engine test file (which includes the 8-fake-device
+#    packed mesh conformance subprocess), then the bandwidth bar at
+#    n = 2^16: packed32 must move <= 60% of unpacked bytes on both the
+#    long-path query and the doubling merge (benchmarks/bandwidth.py
+#    derives the counts from the built structures' real leaf dtypes).
+# 11. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
 #    CPU — Pallas kernels validate through the test suite; the smoke catches
 #    perf-path regressions like import errors, shape breaks, or a suite that
 #    stopped emitting rows).
 #
-# Perf baseline: BENCH_PR8.json (benchmarks/run.py --json; adds the
-# kernel_tuning suite and records backend/device-count/jax-version and
-# autotune-cache hit state in _meta); refresh per PR.
+# Perf baseline: BENCH_PR9.json (benchmarks/run.py --json; adds the
+# bandwidth suite and stamps the shipped layouts + measured byte ratios
+# into _meta); refresh per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -201,6 +207,26 @@ print(f"autotune gate: {len(sweeps)} cold sweeps, winner "
       f"warm run re-timed 0 candidates")
 PY
 
+echo "== packed gate (fused-word conformance + n=2^16 bandwidth bar) =="
+python -m pytest -q tests/test_packing.py
+python - <<'PY'
+# Acceptance bar: at n = 2^16 with packed32-fitting data, the packed long
+# path touches <= 60% of the unpacked bytes per query (>= 1.5x reduction)
+# and the packed doubling merge ships <= 60% of the unpacked halo traffic.
+from benchmarks.bandwidth import N_GATE, report
+
+r = report(N_GATE)
+red = r["unpacked_query_bytes"] / r["packed32_query_bytes"]
+print(f"packed gate @ n=2^16: query {r['packed32_query_bytes']}B vs "
+      f"{r['unpacked_query_bytes']}B (x{red:.2f}, ratio "
+      f"{r['gate_query_ratio']:.2f}), merge ratio {r['gate_merge_ratio']:.2f} "
+      f"(bar: <= 0.60 both)")
+assert r["packed32_resolved"] == "packed32", r["packed32_resolved"]
+assert r["gate_query_ratio"] <= 0.60, r["gate_query_ratio"]
+assert r["gate_merge_ratio"] <= 0.60, r["gate_merge_ratio"]
+assert red >= 1.5, red
+PY
+
 echo "== perf smoke (fig12, smoke sizes) =="
 out=$(timeout 300 python -m benchmarks.run --only fig12 --smoke)
 echo "$out"
@@ -209,4 +235,4 @@ if [ "$rows" -lt 4 ]; then
     echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
     exit 1
 fi
-echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, chaos gate green, fleet gate green, autotune gate green, fig12 smoke emitted $rows rows"
+echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, chaos gate green, fleet gate green, autotune gate green, packed gate green, fig12 smoke emitted $rows rows"
