@@ -1,0 +1,173 @@
+"""Observability overhead benchmarks: span tracing on vs off (DESIGN.md §14).
+
+The tracer's design bar is *zero* cost when disabled (the shared no-op
+singleton — asserted allocation-free by tests/test_obs.py) and negligible
+cost when enabled: one Span object + a ring-buffer append per recorded unit
+of work, attr dicts gated on ``tracer.enabled`` at every hot call site.
+
+The measured workload is **closed-loop** on purpose: four client threads
+each submit one request and wait for its result before the next, over an
+online hybrid engine with a concurrent update stream. A closed loop bounds
+the queue depth at the client count, so request p99 reflects the batcher
+deadline + engine service time — the path span recording actually touches —
+instead of open-loop queueing collapse, whose p99 swings several-fold run
+to run on a shared CPU and would drown a 10% comparison in scheduler noise
+(the open-loop ``fault_overhead`` workload prices durability, where the
+journaled fsync is large enough to survive that noise; span recording is
+not).
+
+``p99_gate`` is the tools/check.sh acceptance bar — <= 10% added request
+p99 with tracing enabled — built like ``fault_overhead.p99_gate``:
+best-of-runs per config, the two configs alternated so neither
+systematically runs on a colder process (jit caches, page cache) than the
+other. Metrics-registry instrumentation is active in BOTH configs (the
+server always carries its registry); the gate isolates span recording.
+
+CSV rows: ``obs_overhead/serve_p{50,99}_{untraced,traced}`` plus the span
+volume the traced run recorded.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import update
+from repro.core import build as build_mod
+from repro.obs import Tracer, set_tracer
+from repro.serve import RMQServer, ServeConfig
+from repro.serve.workload import make_queries
+
+from . import common
+
+# Ample for every benchmark workload: no ring overflow perturbing the run.
+_TRACE_CAPACITY = 1 << 16
+_CLIENTS = 4
+
+
+def _sizes():
+    if common.SMOKE:
+        return 1 << 12, 30, 4  # n, requests/client, updates
+    return 1 << 15, 150, 12
+
+
+def _factory():
+    """Fresh online hybrid engine per run (new jit closures each time, so
+    neither config ever serves from the other's warm engine)."""
+    n0, _, _ = _sizes()
+    rng = np.random.default_rng(2)
+    x = rng.random(n0, dtype=np.float32)
+
+    def make():
+        return update.make_online("hybrid", jnp.asarray(x), threshold=64)
+
+    return make
+
+
+def _serve_once(online, *, requests=None):
+    """One closed-loop serve run (see module docstring) -> ServeStats."""
+    _, default_requests, updates = _sizes()
+    requests = default_requests if requests is None else requests
+    cfg = ServeConfig(deadline_s=1e-3, max_batch=1024, workers=2)
+    srv = RMQServer(
+        online=online, config=cfg, warmup_bounds=build_mod.warmup_bounds(online.plan)
+    )
+    srv.warmup()
+    online.apply(update.DeltaLog().point(0, 0.5))  # compile the patch path
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        n = online.n
+        for _ in range(requests):
+            l, r = make_queries(rng, n, 16, "small")
+            srv.submit(l, r).result(timeout=120)
+
+    def mutator():
+        mrng = np.random.default_rng(9)
+        for _ in range(updates):
+            cur_n = online.n
+            log = update.DeltaLog().point(int(mrng.integers(0, cur_n)), float(mrng.random()))
+            try:
+                srv.submit_update(log).result(timeout=120)
+            except Exception:
+                pass
+
+    with srv:
+        threads = [
+            threading.Thread(target=client, args=(100 + i,), name=f"bench-client-{i}")
+            for i in range(_CLIENTS)
+        ]
+        threads.append(threading.Thread(target=mutator, name="bench-mutator"))
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        st = srv.stats()
+    return st
+
+
+def _serve_traced(make, tracing: bool, *, requests=None):
+    """One serve run with the global tracer installed (or not); returns
+    (stats, spans_recorded)."""
+    tracer = Tracer(enabled=True, capacity=_TRACE_CAPACITY) if tracing else None
+    prev = set_tracer(tracer)
+    try:
+        st = _serve_once(make(), requests=requests)
+    finally:
+        set_tracer(prev)
+    return st, (len(tracer.spans()) if tracer is not None else 0)
+
+
+def p99_gate(runs=5, requests=150):
+    """tools/check.sh acceptance bar: best-of-``runs`` request p99 with span
+    tracing off vs on. Returns (untraced_s, traced_s)."""
+    make = _factory()
+    best = [float("inf"), float("inf")]
+    for _ in range(runs):
+        for i, tracing in enumerate((False, True)):
+            st, _ = _serve_traced(make, tracing, requests=requests)
+            best[i] = min(best[i], st.p99_total_s)
+    return best[0], best[1]
+
+
+def serve_overhead():
+    make = _factory()
+    runs = 2 if common.SMOKE else 4
+    best_off = best_on = None
+    spans = 0
+    for _ in range(runs):
+        st, _ = _serve_traced(make, False)
+        if best_off is None or st.p99_total_s < best_off.p99_total_s:
+            best_off = st
+        st, ns = _serve_traced(make, True)
+        if best_on is None or st.p99_total_s < best_on.p99_total_s:
+            best_on = st
+            spans = ns
+    over = (
+        (best_on.p99_total_s / best_off.p99_total_s - 1.0) * 100
+        if best_off.p99_total_s > 0
+        else 0.0
+    )
+    common.emit("obs_overhead/serve_p50_untraced", best_off.p50_total_s)
+    common.emit(
+        "obs_overhead/serve_p99_untraced",
+        best_off.p99_total_s,
+        f"{best_off.throughput_qps:,.0f} RMQ/s",
+    )
+    common.emit("obs_overhead/serve_p50_traced", best_on.p50_total_s)
+    common.emit(
+        "obs_overhead/serve_p99_traced",
+        best_on.p99_total_s,
+        f"{best_on.throughput_qps:,.0f} RMQ/s; {spans} spans; "
+        f"p99 overhead {over:+.1f}%",
+    )
+
+
+def run():
+    serve_overhead()
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,22 @@ import json
 import subprocess
 
 
+def _metrics_meta():
+    """Snapshot of the process-global metrics registry (counters only —
+    histograms here would be noise: every suite shares the process)."""
+    from repro.obs import default_registry
+
+    snap = default_registry().snapshot()
+    out = {}
+    for name, rows in snap["counters"].items():
+        for row in rows:
+            key = name
+            if row["labels"]:
+                key += "{" + ",".join(f"{k}={v}" for k, v in sorted(row["labels"].items())) + "}"
+            out[key] = row["value"]
+    return out or None
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -20,7 +36,7 @@ def main() -> None:
         default="",
         help="comma list: fig12,fig13,fig10,fig14,table2,build_mem,roofline,"
         "crossover,sharded_hybrid,serve_latency,update_throughput,"
-        "fault_overhead,fleet_scaling,kernel_tuning,bandwidth",
+        "fault_overhead,fleet_scaling,kernel_tuning,bandwidth,obs_overhead",
     )
     ap.add_argument("--json", default="", metavar="OUT", help="also write results JSON")
     ap.add_argument("--smoke", action="store_true", help="tiny sizes, seconds-long run")
@@ -44,6 +60,7 @@ def main() -> None:
         kernel_tuning,
         memory_usage,
         mesh_scaling,
+        obs_overhead,
         roofline_report,
         serve_latency,
         sharded_hybrid,
@@ -69,6 +86,7 @@ def main() -> None:
         "fleet_scaling": fleet_scaling.run,
         "kernel_tuning": kernel_tuning.run,
         "bandwidth": bandwidth.run,
+        "obs_overhead": obs_overhead.run,
     }
     if only:
         unknown = only - set(suites)
@@ -110,6 +128,11 @@ def main() -> None:
             # and the measured byte ratios (populated when `bandwidth` ran).
             "layouts": ["unpacked"] + list(packing.PACKED_LAYOUTS),
             "bandwidth_report": dict(bandwidth.LAST_REPORT) or None,
+            # Process-global metrics registry at run end: counters the
+            # benchmarked subsystems incremented (WAL appends, checkpoints,
+            # restores, ...) so a perf regression can be cross-checked
+            # against the work actually done.
+            "metrics": _metrics_meta(),
         }
         with open(args.json, "w") as f:
             json.dump(by_suite, f, indent=2, sort_keys=True)

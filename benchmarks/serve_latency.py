@@ -11,6 +11,13 @@ as the metric and p99 + achieved throughput in the derived column. Larger
 deadlines trade per-request latency for bigger coalesced batches (fewer,
 fuller engine launches); the sweep makes that trade measurable.
 
+Each configuration also emits a ``serve_latency/decomp/...`` row decomposing
+total latency into queue wait (submit -> flush pulled the request) vs
+service time (flush -> result scattered back), read from the server's
+metrics registry (``serve_queue_wait_s`` / ``serve_service_s`` histograms,
+DESIGN.md §14). The queue fraction is the tuning signal: deadline-dominated
+configs show it near 100% at low load, engine-bound configs near 0%.
+
 Standalone (the harness also runs it via ``benchmarks.run``):
 
     PYTHONPATH=src python benchmarks/serve_latency.py --smoke
@@ -93,6 +100,17 @@ def run() -> None:
                 f"p50={st.p50_total_s*1e3:.2f}ms,p99={st.p99_total_s*1e3:.2f}ms,"
                 f"thr={st.throughput_qps:.0f}rmq_s,batches={st.n_batches},"
                 f"mean_batch={st.mean_batch_queries:.1f}q,dropped={dropped}",
+            )
+            # Queue-wait vs service-time decomposition (registry histograms).
+            qp50, qp95 = srv.metrics.histogram("serve_queue_wait_s").percentiles((50, 95))
+            sp50, sp95 = srv.metrics.histogram("serve_service_s").percentiles((50, 95))
+            qfrac = qp50 / (qp50 + sp50) * 100 if (qp50 + sp50) > 0 else 0.0
+            emit(
+                f"serve_latency/decomp/deadline={deadline_ms:g}ms/load={load:g}rps",
+                qp50,
+                f"queue_p50={qp50*1e3:.2f}ms,queue_p95={qp95*1e3:.2f}ms,"
+                f"service_p50={sp50*1e3:.2f}ms,service_p95={sp95*1e3:.2f}ms,"
+                f"queue_frac_p50={qfrac:.0f}%",
             )
 
 

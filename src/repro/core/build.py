@@ -37,6 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from . import block_rmq, calib_cache, distributed, lane_rmq, lca, packing, sparse_table
 
 __all__ = [
@@ -219,10 +221,22 @@ def run_stages(plan: BuildPlan, state: dict, *, observer: Optional[Callable] = N
     The one stage sequencer behind both pipelines (build and online update).
     ``observer(stage_name, state)`` fires after each stage — the seam the
     build-memory benchmark, the no-full-table allocation probes, and the
-    update-throughput breakdown hook.
+    update-throughput breakdown hook. When the process-global tracer is
+    enabled, each stage additionally lands as a span (named after the stage,
+    ``engine`` attr from the plan) under whatever span is ambient — build
+    stages under the CLI's build span, update stages under the server's
+    ``update`` span (DESIGN.md §14).
     """
+    tr = obs_trace.get_tracer()
+    if not tr.enabled:
+        for stage in plan.stages:
+            state = stage.fn(state)
+            if observer is not None:
+                observer(stage.name, state)
+        return state["result"]
     for stage in plan.stages:
-        state = stage.fn(state)
+        with tr.span(stage.name, attrs={"engine": plan.engine}):
+            state = stage.fn(state)
         if observer is not None:
             observer(stage.name, state)
     return state["result"]

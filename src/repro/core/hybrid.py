@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 from . import sparse_table
 from .block_rmq import BlockRMQ
 
@@ -146,6 +148,11 @@ def dispatch_by_length(l, r, threshold: int, short_fn, long_fn, out_dtype):
     cb = getattr(_split_sink, "cb", None)
     if cb is not None:
         cb(int(short.sum()), int(l.size - short.sum()))
+    # Regime split onto the ambient trace span (the server's launch span
+    # when tracing is on) — obs.set_attr is a no-op outside any span.
+    if obs_trace.get_tracer().enabled:
+        obs_trace.set_attr("split_short", int(short.sum()))
+        obs_trace.set_attr("split_long", int(l.size - short.sum()))
 
     # Every launch pads its batch to a power of two so the jit cache stays
     # bounded (log2(B) shapes per path) however batch sizes and splits vary.

@@ -35,6 +35,8 @@ import threading
 from typing import Callable, Optional
 
 from repro import checkpoint as checkpoint_mod
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import default_registry
 from repro.update.deltas import DeltaLog
 from repro.update.engines import OnlineEngine
 
@@ -113,9 +115,14 @@ class DurableEngine:
         arrays, meta, _ = checkpoint_mod.load_snapshot(ckpt)
         online = OnlineEngine.from_snapshot(arrays, meta, mesh=mesh, axis_names=axis_names)
         d = cls(online, root, fault=fault, _seq=int(meta["seq"]))
-        for seq, batch in d.journal.replay(after_seq=int(meta["seq"])):
-            online.apply(batch, seq=seq)
-            d.replayed += 1
+        tr = obs_trace.get_tracer()
+        with tr.span("restore", attrs={"root": root} if tr.enabled else None):
+            for seq, batch in d.journal.replay(after_seq=int(meta["seq"])):
+                online.apply(batch, seq=seq)
+                d.replayed += 1
+        reg = default_registry()
+        reg.counter("restores_total").inc()
+        reg.counter("restore_replays_total").inc(d.replayed)
         return d
 
     def recover(self, *, mesh=None, axis_names=None) -> int:
@@ -157,13 +164,16 @@ class DurableEngine:
         write die too (a real crash), replay re-applies the batch and
         reaches the same outcome — apply is deterministic.
         """
+        tr = obs_trace.get_tracer()
         with self._lock:
             if isinstance(deltas, DeltaLog):
                 batch = deltas.coalesce(self.online.n, dtype=self.online.dtype)
             else:
                 batch = deltas
             seq = self._seq + 1
-            self.journal.append(seq, batch)  # WAL: durable BEFORE any mutation
+            with tr.span("journal_append", attrs={"seq": seq} if tr.enabled else None):
+                self.journal.append(seq, batch)  # WAL: durable BEFORE any mutation
+            default_registry().counter("wal_appends_total").inc()
             self._seq = seq
             obs = self._observer(observer)
             try:
@@ -171,25 +181,39 @@ class DurableEngine:
             except BaseException:
                 try:
                     self.journal.abort(seq)
+                    default_registry().counter("wal_aborts_total").inc()
                 except BaseException:
                     pass  # crash-during-abort: at-least-once replay, see above
                 raise
 
     def _observer(self, user_obs: Optional[Callable]) -> Optional[Callable]:
-        """Compose the user's stage observer with the patch_apply fault site.
+        """Compose the stage observers: user first, then tracing, then the
+        patch_apply fault site.
 
-        Fires after the ``apply_deltas`` stage (mirrors patched) and before
-        ``publish`` — the mirrors-diverged-from-published-chain window the
-        fail-stop + restore machinery exists for.
+        The fault site fires after the ``apply_deltas`` stage (mirrors
+        patched) and before ``publish`` — the mirrors-diverged-from-
+        published-chain window the fail-stop + restore machinery exists for.
+        The trace marker lands at the same boundary so an exported trace
+        shows exactly where injection can strike; injection firing LAST means
+        the user observer and the trace marker still see a stage that
+        completed, even on the apply that gets killed.
         """
-        if self._fault is None:
+        user_fires = user_obs is not None
+        trace_fires = obs_trace.get_tracer().enabled
+        fault_fires = self._fault is not None
+        if not (trace_fires or fault_fires):
             return user_obs
 
         def obs(stage: str, state: dict):
-            if user_obs is not None:
+            if user_fires:
                 user_obs(stage, state)
             if stage == "apply_deltas":
-                self._fault("patch_apply")
+                if trace_fires:
+                    obs_trace.get_tracer().instant(
+                        "patch_applied", attrs={"seq": self._seq}
+                    )
+                if fault_fires:
+                    self._fault("patch_apply")
 
         return obs
 
@@ -202,13 +226,16 @@ class DurableEngine:
         left uncompacted: restore falls back to the previous checkpoint plus
         a longer replay suffix, still exact.
         """
+        tr = obs_trace.get_tracer()
         with self._lock:
-            arrays, meta = self.online.snapshot()
-            meta["seq"] = self._seq
-            checkpoint_mod.save_snapshot(
-                self.ckpt_dir, self._seq, arrays, meta, fault=self._fault
-            )
-            self.journal.truncate_upto(self._seq)
+            with tr.span("checkpoint", attrs={"seq": self._seq} if tr.enabled else None):
+                arrays, meta = self.online.snapshot()
+                meta["seq"] = self._seq
+                checkpoint_mod.save_snapshot(
+                    self.ckpt_dir, self._seq, arrays, meta, fault=self._fault
+                )
+                self.journal.truncate_upto(self._seq)
+            default_registry().counter("checkpoints_total").inc()
             return meta
 
     def close(self) -> None:

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import json
 import threading
 import time
 
@@ -51,6 +52,7 @@ from repro import update as update_mod
 from repro.core import build as build_mod
 from repro.core import ref, registry
 from repro.launch.mesh import factor_2d, make_mesh, set_mesh
+from repro.obs import Tracer, default_registry, set_tracer, verify_request_chains
 from repro.serve import RMQServer, ServeConfig, ServerOverloaded
 from repro.serve.workload import make_queries, run_poisson_clients
 
@@ -181,6 +183,24 @@ def _parser() -> argparse.ArgumentParser:
         help="run the seeded chaos soak instead of serving: crash workers, "
         "fail patches and checkpoints mid-stream, then crash-restore and "
         "verify nothing was lost (engines declaring 'updatable')",
+    )
+    obs = ap.add_argument_group("observability")
+    obs.add_argument(
+        "--trace",
+        default=None,
+        metavar="OUT.json",
+        help="record request/update/build lifecycle spans and export a "
+        "Chrome-trace JSON here (open at https://ui.perfetto.dev); async "
+        "modes additionally self-verify that every served request has a "
+        "complete admission->flush->launch->scatter->resolve span chain",
+    )
+    obs.add_argument(
+        "--metrics-interval",
+        type=float,
+        default=None,
+        metavar="S",
+        help="dump the metrics registry as one JSON line every S seconds "
+        "(plus a final dump at shutdown)",
     )
     return ap
 
@@ -316,11 +336,14 @@ def _run_async(args, spec, state, x, plan, online=None) -> bool:
         adaptive_deadline=args.adaptive_deadline,
     )
     wb = build_mod.warmup_bounds(plan)
+    # The process-wide registry so WAL/restore counters from a durable engine
+    # land in the same snapshot; launch spans carry the resolved plan attrs.
+    okw = dict(metrics=default_registry(), trace_attrs=_span_attrs(args.engine, plan))
     if online is not None:
-        srv = RMQServer(online=online, config=cfg, warmup_bounds=wb)
+        srv = RMQServer(online=online, config=cfg, warmup_bounds=wb, **okw)
     else:
         qfn = lambda l, r: spec.query(state, l, r)
-        srv = RMQServer(qfn, cfg, warmup_bounds=wb)
+        srv = RMQServer(qfn, cfg, warmup_bounds=wb, **okw)
     srv.warmup()  # compile every padded launch shape (per plan regime)
     # The oracle of the version serving starts from — a restored engine
     # continues its original timeline, so this need not be 0.
@@ -349,7 +372,7 @@ def _run_async(args, spec, state, x, plan, online=None) -> bool:
             except ServerOverloaded:
                 pass
 
-    with srv:
+    with _metrics_dump(args.metrics_interval, srv.metrics.snapshot), srv:
         t0 = time.perf_counter()
         mut = None
         if online is not None and args.mutate:
@@ -477,7 +500,7 @@ def _run_fleet(args, spec, x) -> bool:
             except ServerOverloaded:
                 pass
 
-    with fleet:
+    with _metrics_dump(args.metrics_interval, fleet.metrics), fleet:
         t0 = time.perf_counter()
         mut = None
         if args.mutate:
@@ -549,12 +572,97 @@ def _run_fleet(args, spec, x) -> bool:
     return ok
 
 
+def _span_attrs(engine: str, plan) -> dict:
+    """Static launch-span attrs derived from the resolved BuildPlan: the
+    engine, packed layout, routing threshold, and kernel config every
+    exported launch span should carry (DESIGN.md §14)."""
+    attrs = {"engine": engine}
+    meta = getattr(plan, "meta", None) or {}
+    if meta.get("threshold") is not None:
+        attrs["threshold"] = int(meta["threshold"])
+    if meta.get("block_size") is not None:
+        attrs["block_size"] = int(meta["block_size"])
+    layout = meta.get("packed")
+    attrs["layout"] = str(layout) if layout is not None else "unpacked"
+    kcfg = meta.get("kernel_config")
+    if kcfg is not None and hasattr(kcfg, "tile"):
+        attrs["kernel_tile"] = int(kcfg.tile)
+        attrs["fetch"] = str(kcfg.fetch)
+        attrs["kernel_block_size"] = int(kcfg.block_size)
+    return attrs
+
+
+@contextlib.contextmanager
+def _metrics_dump(interval, snapshot_fn):
+    """Periodic one-line JSON dumps of ``snapshot_fn()`` every ``interval``
+    seconds (daemon thread), plus a final dump on exit. No-op when
+    ``interval`` is None."""
+    if interval is None:
+        yield
+        return
+    stop = threading.Event()
+
+    def loop():
+        while not stop.wait(interval):
+            try:
+                print("[metrics] " + json.dumps(snapshot_fn()))
+            except Exception as e:  # a dump must never kill serving
+                print(f"[metrics] dump failed: {e!r}")
+
+    t = threading.Thread(target=loop, daemon=True, name="metrics-dump")
+    t.start()
+    try:
+        yield
+    finally:
+        stop.set()
+        t.join(interval + 1.0)
+        print("[metrics] final " + json.dumps(snapshot_fn()))
+
+
+def _export_trace(path: str, tracer, *, expect_requests: bool) -> bool:
+    """Export the trace + self-verify request chains; False on a gap."""
+    n = tracer.export(path)
+    complete, problems = verify_request_chains(tracer.spans())
+    extra = f", {tracer.dropped} spans dropped by ring buffer" if tracer.dropped else ""
+    print(f"[trace] {n} spans -> {path} ({complete} complete request chains{extra})")
+    ok = True
+    if problems:
+        for p in problems[:10]:
+            print(f"[trace] INCOMPLETE: {p}")
+        if len(problems) > 10:
+            print(f"[trace] ... and {len(problems) - 10} more")
+        ok = False
+    if expect_requests and complete == 0:
+        print("[trace] FAIL: no complete request chains recorded")
+        ok = False
+    return ok
+
+
 def main(argv=None) -> None:
     ap = _parser()
     args = ap.parse_args(argv)
     spec = registry.get(args.engine)
     _validate(ap, args, spec)
 
+    tracer = None
+    if args.trace is not None:
+        # Install globally BEFORE the build so build/update stage spans and
+        # the serving layer all land in the same ring buffer.
+        tracer = Tracer(enabled=True, capacity=1 << 17)
+        set_tracer(tracer)
+    try:
+        ok = _run_modes(ap, args, spec)
+    finally:
+        if tracer is not None:
+            set_tracer(None)
+    if tracer is not None:
+        served_requests = args.chaos is None and args.mode == "async"
+        ok = _export_trace(args.trace, tracer, expect_requests=served_requests) and ok
+    if not ok:
+        raise SystemExit(1)
+
+
+def _run_modes(ap, args, spec) -> bool:
     rng = np.random.default_rng(0)
     x = rng.random(args.n, dtype=np.float32)
 
@@ -578,15 +686,11 @@ def main(argv=None) -> None:
             log=print,
         )
         print(report.summary())
-        if not report.ok:
-            raise SystemExit(1)
-        return
+        return bool(report.ok)
     if args.replicas > 1:
         # Outside any global mesh context: the fleet carves its own disjoint
         # per-replica device groups (serve.fleet.RMQFleet.build).
-        if not _run_fleet(args, spec, x):
-            raise SystemExit(1)
-        return
+        return _run_fleet(args, spec, x)
     ctx = set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
     with ctx:
         if args.mutate:
@@ -633,10 +737,7 @@ def main(argv=None) -> None:
                 f"(n={args.n}, {plan.layout.num_shards} structure shard(s) x "
                 f"{plan.layout.shard_len} cols, version {online.current_vid})"
             )
-            ok = _run_async(args, spec, None, x, plan, online=online)
-            if not ok:
-                raise SystemExit(1)
-            return
+            return _run_async(args, spec, None, x, plan, online=online)
 
         # The staged BuildPlan resolves everything static (shard layout,
         # threshold, mode) before touching the array; async warmup reads the
@@ -663,8 +764,7 @@ def main(argv=None) -> None:
             ok = _run_oneshot(args, spec, state, x, rng)
         else:
             ok = _run_async(args, spec, state, x, plan)
-    if not ok:
-        raise SystemExit(1)
+    return bool(ok)
 
 
 if __name__ == "__main__":

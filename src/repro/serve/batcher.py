@@ -42,6 +42,17 @@ class MicroBatch(NamedTuple):
     n_queries: int  # valid prefix length (pre-padding)
     spans: Tuple[Tuple[int, int], ...]  # per-request (offset, length), arrival order
 
+    @property
+    def padded_size(self) -> int:
+        """The launch shape actually compiled/executed (== bucket(n_queries))."""
+        return self.l.shape[0]
+
+    @property
+    def fill_fraction(self) -> float:
+        """Real queries / padded slots — the coalescing-efficiency signal the
+        flush span exports (1.0 = the pad cost nothing)."""
+        return self.n_queries / self.padded_size if self.padded_size else 0.0
+
 
 def coalesce(ls: Sequence[np.ndarray], rs: Sequence[np.ndarray]) -> MicroBatch:
     """Concatenate per-request (l, r) in arrival order and pad to the bucket.

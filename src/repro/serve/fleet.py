@@ -71,6 +71,8 @@ from repro.core import registry
 from repro.fault.durable import DurableEngine
 from repro.fault.inject import FaultPlan, FaultSpec
 from repro.launch.mesh import make_group_mesh
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry, merge_snapshots
 from repro.serve.server import (
     EngineFailure,
     RMQServer,
@@ -469,6 +471,43 @@ class RMQFleet:
                 max_lag_seen=self._tracker.max_lag_seen,
             )
 
+    def metrics(self) -> dict:
+        """Fleet-level metrics document: every replica's registry snapshot
+        merged under a ``replica=<i>`` label, plus front-door families
+        (routing counters, rollout totals, and the RolloutTracker's
+        version-lag gauges) labelled ``replica=front``. One document, so a
+        scrape or a ``--metrics-interval`` dump sees the whole fleet.
+        """
+        snaps = {}
+        for rep in self._reps:
+            with rep.lock:
+                srv = rep.server
+            snaps[str(rep.i)] = srv.metrics.snapshot()
+        front = MetricsRegistry()
+        st = self.stats()
+        front.counter("fleet_requests_total").inc(st.requests)
+        front.counter("fleet_queries_total").inc(st.queries)
+        front.counter("fleet_rollouts_total").inc(st.updates)
+        front.counter("fleet_crashes_total").inc(st.crashes)
+        front.counter("fleet_restores_total").inc(st.restores)
+        front.counter("fleet_reroutes_total", cause="stale").inc(st.stale_reroutes)
+        front.counter("fleet_reroutes_total", cause="failure").inc(
+            st.reroutes - st.stale_reroutes
+        )
+        front.counter("fleet_routing_total", affinity="hit").inc(st.affinity_hits)
+        front.counter("fleet_routing_total", affinity="miss").inc(st.affinity_misses)
+        front.gauge("fleet_active_replicas").set(st.active)
+        front.gauge("fleet_head_vid").set(st.head_vid)
+        front.gauge("fleet_min_vid").set(st.min_vid)
+        front.gauge("fleet_version_lag").set(max(0, st.head_vid - st.min_vid))
+        front.gauge("fleet_max_lag_seen").set(st.max_lag_seen)
+        for rep in self._reps:
+            front.gauge("fleet_replica_vid", replica_id=str(rep.i)).set(
+                rep.engine.current_vid if rep.active else -1
+            )
+        snaps["front"] = front.snapshot()
+        return merge_snapshots(snaps, label="replica")
+
     # -- lifecycle ------------------------------------------------------------
 
     def __enter__(self) -> "RMQFleet":
@@ -586,6 +625,7 @@ class RMQFleet:
             if item is _STOP or rep.gen != gen:
                 return
             ro: _Rollout = item
+            tr = obs_trace.get_tracer()
             try:
                 if rep.engine.current_vid >= ro.vid:
                     # A revive catch-up already applied (and acked) this
@@ -593,17 +633,29 @@ class RMQFleet:
                     self._tracker.note(rep.key, rep.engine.current_vid)
                     ro.settle(self._durable, ok=True)
                     continue
-                if not self._tracker.wait_to_publish(
-                    ro.vid, timeout=self._cfg.rollout_timeout_s
-                ):
-                    raise RuntimeError(
-                        f"rollout v{ro.vid} barrier timed out on replica {rep.i}"
+                rospan = None
+                if tr.enabled:
+                    rospan = tr.start(
+                        "rollout", parent=0, attrs={"replica": rep.i, "vid": ro.vid}
                     )
-                if self._fault is not None:
-                    self._fault("rollout_apply")
-                res = rep.server.submit_update(ro.batch).result(
-                    timeout=self._cfg.rollout_timeout_s
-                )
+                try:
+                    with tr.span("rollout_barrier", parent=rospan):
+                        barrier_ok = self._tracker.wait_to_publish(
+                            ro.vid, timeout=self._cfg.rollout_timeout_s
+                        )
+                    if not barrier_ok:
+                        raise RuntimeError(
+                            f"rollout v{ro.vid} barrier timed out on replica {rep.i}"
+                        )
+                    if self._fault is not None:
+                        self._fault("rollout_apply")
+                    with tr.span("rollout_apply", parent=rospan):
+                        res = rep.server.submit_update(ro.batch).result(
+                            timeout=self._cfg.rollout_timeout_s
+                        )
+                finally:
+                    if rospan is not None:
+                        tr.finish(rospan)
                 self._tracker.note(rep.key, res.version)
                 ro.ack(res)
                 ro.settle(self._durable, ok=True)

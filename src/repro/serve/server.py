@@ -61,6 +61,8 @@ import numpy as np
 
 from repro.core import hybrid as _hybrid
 from repro.fault.inject import InjectedFault
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 
 from .batcher import MicroBatch, bucket, coalesce, scatter_back
 
@@ -201,7 +203,7 @@ class RequestResult(NamedTuple):
 
 
 class _Request:
-    __slots__ = ("l", "r", "future", "t_submit", "t_flush", "retries")
+    __slots__ = ("l", "r", "future", "t_submit", "t_flush", "retries", "span", "qspan")
 
     def __init__(self, l, r, t_submit):
         self.l = l
@@ -210,6 +212,8 @@ class _Request:
         self.t_submit = t_submit
         self.t_flush = 0.0
         self.retries = 0  # failed launches this request has survived so far
+        self.span = None  # "request" root span (tracing enabled only)
+        self.qspan = None  # open "queue" span: submit/requeue -> flush
 
 
 class _UpdateReq:
@@ -300,10 +304,17 @@ class ServeStats(NamedTuple):
                 f"version lag max {self.version_lag_max} "
                 f"mean {self.version_lag_mean:.2f}"
             )
-        if self.deadline_trajectory:
+        if len(self.deadline_trajectory) >= 2:
             out += (
                 f"; adaptive deadline {self.deadline_trajectory[0]*1e3:.2f} -> "
                 f"{self.deadline_trajectory[-1]*1e3:.2f} ms"
+            )
+        elif self.deadline_trajectory:
+            # One adjusted flush: "X -> X ms" would misread as a flat
+            # trajectory, so report the single point and the flush count.
+            out += (
+                f"; adaptive deadline {self.deadline_trajectory[0]*1e3:.2f} ms "
+                f"(1 adjusted flush)"
             )
         if (
             self.worker_restarts
@@ -337,6 +348,9 @@ class RMQServer:
         axis_names=None,
         fault_plan=None,  # fault.FaultPlan (or check callable): worker_query site
         fallback: Optional[Callable] = None,  # degraded (l, r) -> (idx, val)
+        tracer=None,  # obs.Tracer (None = the process-global tracer)
+        metrics=None,  # obs.MetricsRegistry (None = a fresh private registry)
+        trace_attrs=None,  # static attrs stamped on every launch span
         **overrides,
     ):
         if sum(x is not None for x in (query_fn, online, restore)) != 1:
@@ -398,21 +412,57 @@ class RMQServer:
         self._brk_open = False
         self._brk_opened_t = 0.0
         self._brk_probing = False
-        self._brk_trips = 0
-        self._worker_restarts = 0
-        self._retried = 0
-        self._expired = 0
-        self._failed_reqs = 0
-        self._degraded_count = 0
-        # Stats accumulators (under _lock).
-        self._queue_lat: List[float] = []
-        self._total_lat: List[float] = []
-        self._batch_requests: List[int] = []
-        self._batch_queries: List[int] = []
+        # Observability. The tracer defaults to the process-global one
+        # (disabled unless `launch/serve.py --trace` or a test installed an
+        # enabled tracer); the registry is private per server unless shared
+        # (fleets pass one in to read replica metrics at the front door).
+        # ServeStats is rendered FROM these instruments in stats(), so the
+        # registry and the NamedTuple reconcile by construction.
+        self._tracer = tracer if tracer is not None else get_tracer()
+        self.metrics: MetricsRegistry = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        ta = dict(trace_attrs) if trace_attrs else {}
+        ta.setdefault(
+            "engine",
+            getattr(online, "name", None)
+            or getattr(query_fn, "__name__", None)
+            or "engine",
+        )
+        self._trace_attrs = ta
+        self._m_out = {  # request terminal outcomes
+            k: m.counter("serve_requests_total", outcome=k)
+            for k in ("served", "rejected", "retried", "expired", "failed")
+        }
+        self._m_queries = m.counter("serve_queries_total")
+        self._m_batches = m.counter("serve_batches_total")
+        self._m_launches = {
+            pool: m.counter("serve_launches_total", pool=pool)
+            for pool in ("primary", "degraded")
+        }
+        self._m_regime = {
+            reg: m.counter("serve_regime_queries_total", regime=reg)
+            for reg in ("short", "long")
+        }
+        self._m_restarts = m.counter("serve_worker_restarts_total")
+        self._m_trips = m.counter("serve_breaker_trips_total")
+        self._m_updates = {
+            k: m.counter("serve_updates_total", outcome=k) for k in ("applied", "failed")
+        }
+        self._h_queue = m.histogram("serve_queue_wait_s")
+        self._h_service = m.histogram("serve_service_s")
+        self._h_total = m.histogram("serve_total_s")
+        self._h_update = m.histogram("serve_update_s")
+        self._h_launch = {
+            pool: m.histogram("serve_launch_s", pool=pool)
+            for pool in ("primary", "degraded")
+        }
+        self._g_inflight = m.gauge("serve_inflight")
+        self._g_deadline = m.gauge("serve_deadline_eff_s")
+        self._g_vlag = m.gauge("serve_version_lag")
+        # Structural accumulators (under _lock) — sequences/sets the scalar
+        # instruments can't represent; ServeStats carries them verbatim.
         self._splits: List[Tuple[int, int]] = []  # per-launch (short, long)
         self._padded: Set[int] = set()
-        self._rejected = 0
-        self._update_lat: List[float] = []  # submit_update -> published
         self._lags: List[int] = []  # per-launch version lag
         self._deadlines: List[float] = []  # effective deadline per flush
         self._t_first_submit: Optional[float] = None
@@ -487,6 +537,8 @@ class RMQServer:
             self._live.clear()
             self._inflight = 0
         for q in leftovers:
+            if isinstance(q, _Request):
+                self._trace_resolve(q, "closed")
             self._fail_future(
                 q, ServerClosed("server closed before the request completed")
             )
@@ -589,18 +641,27 @@ class RMQServer:
 
         now = time.perf_counter()
         req = _Request(l.astype(np.int32), r.astype(np.int32), now)
+        tr = self._tracer
         with self._lock:
             if self._closed:
                 raise ServerClosed("submit() on a closed server")
             if self._inflight >= self._cfg.max_pending:
-                self._rejected += 1
+                self._m_out["rejected"].inc()
                 raise ServerOverloaded(
                     f"{self._inflight} requests in flight (max_pending={self._cfg.max_pending})"
                 )
             self._inflight += 1
+            self._g_inflight.set(self._inflight)
             self._live.add(req)
             if self._t_first_submit is None:
                 self._t_first_submit = now
+            if tr.enabled:
+                # Request lifecycle root + its first children. parent=0 forces
+                # a root: the client thread's ambient span (if any) is not
+                # part of this request's chain.
+                req.span = tr.start("request", parent=0, attrs={"queries": int(l.size)})
+                tr.instant("admission", parent=req.span, attrs={"inflight": self._inflight})
+                req.qspan = tr.start("queue", parent=req.span)
             self._inq.put(req)  # under _lock: never lands after close()'s _STOP
         return req.future
 
@@ -629,11 +690,12 @@ class RMQServer:
             if self._closed:
                 raise ServerClosed("submit_update() on a closed server")
             if self._inflight >= self._cfg.max_pending:
-                self._rejected += 1
+                self._m_out["rejected"].inc()
                 raise ServerOverloaded(
                     f"{self._inflight} requests in flight (max_pending={self._cfg.max_pending})"
                 )
             self._inflight += 1
+            self._g_inflight.set(self._inflight)
             self._live.add(req)
             self._inq.put(req)
         return req.future
@@ -649,6 +711,7 @@ class RMQServer:
 
         def flush(reason: str):
             nonlocal pending, pend_q, eff
+            tr = self._tracer
             if cfg.request_timeout_s is not None:
                 # Requests past their deadline fail here instead of occupying
                 # a launch: an expired client has stopped waiting already.
@@ -659,10 +722,12 @@ class RMQServer:
                     pend_q = sum(q.l.size for q in pending)
                     with self._lock:
                         self._inflight -= len(expired)
-                        self._expired += len(expired)
+                        self._g_inflight.set(self._inflight)
                         for q in expired:
                             self._live.discard(q)
+                    self._m_out["expired"].inc(len(expired))
                     for q in expired:
+                        self._trace_resolve(q, "expired")
                         self._fail_future(
                             q,
                             DeadlineExceeded(
@@ -672,15 +737,37 @@ class RMQServer:
                         )
                     if not pending:
                         return
-            mb = coalesce([q.l for q in pending], [q.r for q in pending])
+            # The flush span is this batch's root: coalesce/launch/scatter
+            # hang off it, and every member request links to it via its
+            # "batch" attr. It travels to the worker and finishes there.
+            fs = None
+            if tr.enabled:
+                fs = tr.start("flush", parent=0, attrs={"reason": reason})
+                with tr.span("coalesce", parent=fs):
+                    mb = coalesce([q.l for q in pending], [q.r for q in pending])
+            else:
+                mb = coalesce([q.l for q in pending], [q.r for q in pending])
             t = time.perf_counter()
             for q in pending:
                 q.t_flush = t
+            if fs is not None:
+                fs.attrs["n_requests"] = len(pending)
+                fs.attrs["n_queries"] = int(mb.n_queries)
+                fs.attrs["padded"] = mb.padded_size
+                fs.attrs["fill"] = round(mb.fill_fraction, 4)
+                for q in pending:
+                    if q.span is not None:
+                        q.span.set_attr("batch", fs.span_id)
+                    if q.qspan is not None:
+                        tr.finish(q.qspan)
+                        q.qspan = None
             # Snapshot isolation: the whole launch is answered against the
             # version current at flush time, however long it sits in the
             # microbatch queue and whatever publishes meanwhile.
             ver = self._online.pin() if self._online is not None else None
-            self._mbq.put((mb, pending, ver))
+            if fs is not None and ver is not None:
+                fs.attrs["version"] = ver.vid
+            self._mbq.put((mb, pending, ver, fs))
             if cfg.adaptive_deadline:
                 if reason == "full":  # sustained load: waiting only adds latency
                     eff = max(dmin, eff / 2)
@@ -688,6 +775,7 @@ class RMQServer:
                     eff = min(dmax, eff * 1.5)  # idle: wait longer, coalesce more
                 with self._lock:
                     self._deadlines.append(eff)
+                self._g_deadline.set(eff)
             pending, pend_q = [], 0
 
         while True:
@@ -748,21 +836,32 @@ class RMQServer:
             item = self._mbq.get()
             if item is _STOP:
                 return
-            mb, reqs, ver = item
+            mb, reqs, ver, fs = item
             try:
-                parts, splits, degraded = self._launch(mb, ver)
+                parts, splits, degraded = self._launch(mb, ver, fs)
             except BaseException as e:
                 # Failed launch: its requests retry or fail — never the whole
                 # server. An injected crash additionally kills this worker
                 # thread (after the batch is requeued) to exercise the
                 # supervisor's restart path.
-                self._requeue_or_fail(mb, reqs, ver, e)
+                self._requeue_or_fail(mb, reqs, ver, fs, e)
                 if isinstance(e, InjectedFault) and e.kind == "crash":
                     raise
                 continue
-            self._finish(mb, reqs, ver, parts, splits, degraded)
+            self._finish(mb, reqs, ver, fs, parts, splits, degraded)
 
-    def _launch(self, mb: MicroBatch, ver):
+    def _launch_span(self, fs, ver, mb: MicroBatch, pool: str):
+        """Context manager for one engine launch span under flush span ``fs``
+        (the worker thread — cross-thread, so the parent is explicit)."""
+        attrs = dict(self._trace_attrs)
+        attrs["pool"] = pool
+        attrs["padded"] = mb.padded_size
+        attrs["queries"] = int(mb.n_queries)
+        if ver is not None:
+            attrs["version"] = ver.vid
+        return self._tracer.span("launch", parent=fs, attrs=attrs)
+
+    def _launch(self, mb: MicroBatch, ver, fs=None):
         """One engine launch -> (per-request parts, regime splits, degraded?).
 
         Routes to the degraded fallback while the breaker is open; otherwise
@@ -770,53 +869,70 @@ class RMQServer:
         count on each outcome.
         """
         if self._use_degraded():
-            return self._launch_degraded(mb, ver)
+            return self._launch_degraded(mb, ver, fs)
+        tr = self._tracer
+        self._m_launches["primary"].inc()
         try:
             # Observe how the range-adaptive dispatcher (if any) splits
             # this launch: a thread-local sink, so concurrent workers
             # never see each other's splits.
             splits: List[Tuple[int, int]] = []
+            lsp = None
+            t0 = time.perf_counter()
             with _hybrid.record_splits(lambda s, g: splits.append((s, g))):
-                if self._fault is not None:
-                    self._fault("worker_query")
-                if ver is not None:
-                    if self._launch_gate is not None:
-                        with self._launch_gate:
+                cm = self._launch_span(fs, ver, mb, "primary") if tr.enabled else tr.span("launch")
+                with cm as lsp:
+                    if self._fault is not None:
+                        self._fault("worker_query")
+                    if ver is not None:
+                        if self._launch_gate is not None:
+                            with self._launch_gate:
+                                idx, val = self._online.query(ver.state, mb.l, mb.r)
+                                idx, val = np.asarray(idx), np.asarray(val)
+                        else:
                             idx, val = self._online.query(ver.state, mb.l, mb.r)
-                            idx, val = np.asarray(idx), np.asarray(val)
                     else:
-                        idx, val = self._online.query(ver.state, mb.l, mb.r)
-                else:
-                    idx, val = self._query_fn(mb.l, mb.r)
-            parts = scatter_back(mb, idx, val)
+                        idx, val = self._query_fn(mb.l, mb.r)
+            self._h_launch["primary"].observe(time.perf_counter() - t0)
+            # The coalesced launch is power-of-two padded with trivial
+            # (0, 0) queries; the dispatcher routes ALL pads to one side
+            # (short when threshold >= 1, else long — real queries never
+            # leave that side short of the pad count), so subtracting
+            # from whichever side holds them leaves real-traffic splits.
+            pad = mb.l.size - mb.n_queries
+            splits = [(s - pad, g) if s >= pad else (s, g - pad) for s, g in splits]
+            if splits and tr.enabled and lsp is not None:
+                lsp.set_attr("short", sum(s for s, _ in splits))
+                lsp.set_attr("long", sum(g for _, g in splits))
+            with tr.span("scatter", parent=fs):
+                parts = scatter_back(mb, idx, val)
         except BaseException:
             self._breaker_failure()
             raise
         self._breaker_success()
-        # The coalesced launch is power-of-two padded with trivial
-        # (0, 0) queries; the dispatcher routes ALL pads to one side
-        # (short when threshold >= 1, else long — real queries never
-        # leave that side short of the pad count), so subtracting
-        # from whichever side holds them leaves real-traffic splits.
-        pad = mb.l.size - mb.n_queries
-        splits = [(s - pad, g) if s >= pad else (s, g - pad) for s, g in splits]
         return parts, splits, False
 
-    def _launch_degraded(self, mb: MicroBatch, ver):
+    def _launch_degraded(self, mb: MicroBatch, ver, fs=None):
         """Answer via the correct-but-slower fallback path (breaker open)."""
-        with self._lock:
-            self._degraded_count += 1
-        if self._online is not None:
-            if self._degraded is None:
-                from repro.fault.fallback import DegradedFallback
+        tr = self._tracer
+        self._m_launches["degraded"].inc()
+        t0 = time.perf_counter()
+        cm = self._launch_span(fs, ver, mb, "degraded") if tr.enabled else tr.span("launch")
+        with cm:
+            if self._online is not None:
+                if self._degraded is None:
+                    from repro.fault.fallback import DegradedFallback
 
-                self._degraded = DegradedFallback()
-            idx, val = self._degraded.query(ver, mb.l, mb.r)
-        elif self._fallback_fn is not None:
-            idx, val = self._fallback_fn(mb.l, mb.r)
-        else:  # unreachable: __init__ validates breaker => degraded path
-            raise EngineFailure("breaker open and no fallback", retryable=False)
-        return scatter_back(mb, idx, val), [], True
+                    self._degraded = DegradedFallback()
+                idx, val = self._degraded.query(ver, mb.l, mb.r)
+            elif self._fallback_fn is not None:
+                idx, val = self._fallback_fn(mb.l, mb.r)
+            else:  # unreachable: __init__ validates breaker => degraded path
+                raise EngineFailure("breaker open and no fallback", retryable=False)
+        self._h_launch["degraded"].observe(time.perf_counter() - t0)
+        with tr.span("scatter", parent=fs):
+            parts = scatter_back(mb, idx, val)
+        return parts, [], True
 
     # -- circuit breaker ------------------------------------------------------
 
@@ -881,7 +997,7 @@ class RMQServer:
             if not self._brk_open and self._brk_fails >= self._cfg.breaker_threshold:
                 self._brk_open = True
                 self._brk_opened_t = time.perf_counter()
-                self._brk_trips += 1
+                self._m_trips.inc()
 
     def _breaker_success(self):
         if self._cfg.breaker_threshold <= 0:
@@ -891,7 +1007,7 @@ class RMQServer:
 
     # -- launch outcome plumbing ----------------------------------------------
 
-    def _requeue_or_fail(self, mb: MicroBatch, reqs, ver, err: BaseException):
+    def _requeue_or_fail(self, mb: MicroBatch, reqs, ver, fs, err: BaseException):
         """Split a failed batch's requests into automatic retries and failures.
 
         A request retries while it has retry budget left, hasn't blown its
@@ -899,8 +1015,12 @@ class RMQServer:
         requests re-enter the batcher (fresh coalescing, fresh version pin).
         The rest fail with a typed ``EngineFailure`` carrying the cause.
         """
+        tr = self._tracer
         if ver is not None:
             self._online.release(ver.vid)
+        if fs is not None:
+            fs.set_attr("error", type(err).__name__)
+            tr.finish(fs)
         now = time.perf_counter()
         retry, fail = [], []
         for q in reqs:
@@ -915,49 +1035,68 @@ class RMQServer:
                 fail.append(q)
         with self._lock:
             self._inflight -= len(fail)
-            self._retried += len(retry)
-            self._failed_reqs += len(fail)
+            self._m_out["retried"].inc(len(retry))
+            self._m_out["failed"].inc(len(fail))
             for q in fail:
                 self._live.discard(q)
             if retry and not self._closed:
                 for q in retry:
+                    # Back into the batcher: a fresh coalescing wait, so a
+                    # fresh queue span under the same request root.
+                    if q.span is not None:
+                        q.qspan = tr.start("queue", parent=q.span)
                     self._inq.put(q)
                 retry = []
             else:
                 # close() raced us: its _STOP is already in _inq, so requeued
                 # requests would never flush. Fail them instead.
                 self._inflight -= len(retry)
-                self._failed_reqs += len(retry)
+                self._m_out["failed"].inc(len(retry))
                 for q in retry:
                     self._live.discard(q)
+            self._g_inflight.set(self._inflight)
         fail += retry
         if isinstance(err, (EngineFailure, DeadlineExceeded)):
             exc = err
         else:
             exc = EngineFailure(f"engine launch failed: {err!r}", cause=err)
         for q in fail:
+            self._trace_resolve(q, "failed")
             self._fail_future(q, exc)
 
-    def _finish(self, mb: MicroBatch, reqs, ver, parts, splits, degraded: bool):
+    def _finish(self, mb: MicroBatch, reqs, ver, fs, parts, splits, degraded: bool):
+        tr = self._tracer
         lag = 0
         if ver is not None:
             lag = self._online.current_vid - ver.vid
             self._online.release(ver.vid)
         t_done = time.perf_counter()
+        if fs is not None:
+            if ver is not None:
+                fs.set_attr("lag", lag)
+            tr.finish(fs)
         with self._lock:
             self._inflight -= len(reqs)
-            self._batch_requests.append(len(reqs))
-            self._batch_queries.append(mb.n_queries)
+            self._g_inflight.set(self._inflight)
             self._splits.extend(splits)
-            self._padded.add(mb.l.size)
+            self._padded.add(mb.padded_size)
             if ver is not None:
                 self._lags.append(lag)
+                self._g_vlag.set(lag)
             for q in reqs:
                 self._live.discard(q)
-                self._queue_lat.append(q.t_flush - q.t_submit)
-                self._total_lat.append(t_done - q.t_submit)
             self._t_last_done = t_done
+        self._m_batches.inc()
+        self._m_queries.inc(int(mb.n_queries))
+        self._m_out["served"].inc(len(reqs))
+        for s, g in splits:
+            self._m_regime["short"].inc(s)
+            self._m_regime["long"].inc(g)
         for q, (qi, qv) in zip(reqs, parts):
+            self._h_queue.observe(q.t_flush - q.t_submit)
+            self._h_service.observe(t_done - q.t_flush)
+            self._h_total.observe(t_done - q.t_submit)
+            self._trace_resolve(q, "ok")
             try:
                 q.future.set_result(
                     RequestResult(
@@ -969,6 +1108,21 @@ class RMQServer:
                 )
             except Exception:
                 pass  # already failed (expired/closed): result has no taker
+
+    def _trace_resolve(self, q, outcome: str):
+        """Terminal span bookkeeping for one request: close any open queue
+        span, emit the ``resolve`` child, finish the root. Idempotent — the
+        first terminal outcome wins (a request can reach here twice when
+        close() races a worker)."""
+        if q.span is None:
+            return
+        tr = self._tracer
+        if q.qspan is not None:
+            tr.finish(q.qspan)
+            q.qspan = None
+        tr.instant("resolve", parent=q.span, attrs={"outcome": outcome})
+        tr.finish(q.span)
+        q.span = None
 
     @staticmethod
     def _fail_future(q, exc: BaseException):
@@ -990,7 +1144,7 @@ class RMQServer:
             with self._lock:
                 if self._closed:
                     continue  # shutting down: _STOP already drained the pool
-                self._worker_restarts += 1
+                self._m_restarts.inc()
                 t = threading.Thread(
                     target=self._worker_main,
                     args=(slot,),
@@ -1002,12 +1156,26 @@ class RMQServer:
 
     def _update_loop(self):
         """The single updater: applies update batches in submission order."""
+        tr = self._tracer
         while True:
             item = self._updq.get()
             if item is _STOP:
                 return
             try:
-                res = self._online.apply(item.deltas)
+                # The update root span: OnlineEngine.apply's coalesce span
+                # and the apply_deltas/publish stage spans (via run_stages)
+                # nest under it ambiently — same thread, same context.
+                if tr.enabled:
+                    cm = tr.span(
+                        "update",
+                        parent=0,
+                        attrs={"queue_s": time.perf_counter() - item.t_submit},
+                    )
+                else:
+                    cm = tr.span("update")
+                with cm as us:
+                    res = self._online.apply(item.deltas)
+                    us.set_attr("version", getattr(res, "version", None))
             except BaseException as e:
                 # Malformed batches are rejected with the engine untouched;
                 # a mid-patch failure fail-stops the OnlineEngine (later
@@ -1015,55 +1183,68 @@ class RMQServer:
                 # versions. Either way, fail this future and keep going.
                 with self._lock:
                     self._inflight -= 1
+                    self._g_inflight.set(self._inflight)
                     self._live.discard(item)
+                self._m_updates["failed"].inc()
                 self._fail_future(item, e)
                 continue
             with self._lock:
                 self._inflight -= 1
+                self._g_inflight.set(self._inflight)
                 self._live.discard(item)
-                self._update_lat.append(time.perf_counter() - item.t_submit)
+            self._m_updates["applied"].inc()
+            self._h_update.observe(time.perf_counter() - item.t_submit)
             try:
                 item.future.set_result(res)
             except Exception:
                 pass  # already failed (server closed under us)
 
     def stats(self) -> ServeStats:
+        """Render the ServeStats snapshot FROM the metrics registry.
+
+        The NamedTuple is a *view*: every scalar comes from a registry
+        instrument (so registry totals and ServeStats reconcile exactly, by
+        construction — check.sh gates this) and the percentiles come from the
+        histogram reservoirs via the same ``np.percentile`` math the old
+        ad-hoc lists used. Only structural sequences (splits, lags, padded
+        shapes, deadline trajectory) live outside the registry.
+        """
         with self._lock:
-            tlat = np.asarray(self._total_lat)
-            qlat = np.asarray(self._queue_lat)
-            nreq = int(tlat.size)
-            nq = int(sum(self._batch_queries))
-            nb = len(self._batch_queries)
-            span = (
-                self._t_last_done - self._t_first_submit
-                if nreq and self._t_first_submit is not None and self._t_last_done is not None
-                else 0.0
-            )
-            pct = lambda a, p: float(np.percentile(a, p)) if a.size else 0.0
-            ulat = np.asarray(self._update_lat)
-            return ServeStats(
-                served_requests=nreq,
-                served_queries=nq,
-                rejected_requests=self._rejected,
-                n_batches=nb,
-                mean_batch_requests=nreq / nb if nb else 0.0,
-                mean_batch_queries=nq / nb if nb else 0.0,
-                padded_sizes=tuple(sorted(self._padded)),
-                p50_queue_s=pct(qlat, 50),
-                p99_queue_s=pct(qlat, 99),
-                p50_total_s=pct(tlat, 50),
-                p99_total_s=pct(tlat, 99),
-                throughput_qps=nq / span if span > 0 else 0.0,
-                regime_splits=tuple(self._splits),
-                applied_updates=int(ulat.size),
-                p50_update_s=pct(ulat, 50),
-                p99_update_s=pct(ulat, 99),
-                version_lags=tuple(self._lags),
-                deadline_trajectory=tuple(self._deadlines),
-                degraded_launches=self._degraded_count,
-                worker_restarts=self._worker_restarts,
-                retried_requests=self._retried,
-                expired_requests=self._expired,
-                failed_requests=self._failed_reqs,
-                breaker_trips=self._brk_trips,
-            )
+            splits = tuple(self._splits)
+            padded = tuple(sorted(self._padded))
+            lags = tuple(self._lags)
+            deadlines = tuple(self._deadlines)
+            t0, t1 = self._t_first_submit, self._t_last_done
+        nreq = self._h_total.count
+        nq = int(self._m_queries.value)
+        nb = int(self._m_batches.value)
+        span = t1 - t0 if nreq and t0 is not None and t1 is not None else 0.0
+        q50, q99 = self._h_queue.percentiles((50, 99))
+        t50, t99 = self._h_total.percentiles((50, 99))
+        u50, u99 = self._h_update.percentiles((50, 99))
+        return ServeStats(
+            served_requests=nreq,
+            served_queries=nq,
+            rejected_requests=int(self._m_out["rejected"].value),
+            n_batches=nb,
+            mean_batch_requests=nreq / nb if nb else 0.0,
+            mean_batch_queries=nq / nb if nb else 0.0,
+            padded_sizes=padded,
+            p50_queue_s=q50,
+            p99_queue_s=q99,
+            p50_total_s=t50,
+            p99_total_s=t99,
+            throughput_qps=nq / span if span > 0 else 0.0,
+            regime_splits=splits,
+            applied_updates=self._h_update.count,
+            p50_update_s=u50,
+            p99_update_s=u99,
+            version_lags=lags,
+            deadline_trajectory=deadlines,
+            degraded_launches=int(self._m_launches["degraded"].value),
+            worker_restarts=int(self._m_restarts.value),
+            retried_requests=int(self._m_out["retried"].value),
+            expired_requests=int(self._m_out["expired"].value),
+            failed_requests=int(self._m_out["failed"].value),
+            breaker_trips=int(self._m_trips.value),
+        )

@@ -45,6 +45,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import block_rmq, distributed, packing, registry, sparse_table
 from repro.core import build as build_mod
+from repro.obs import trace as obs_trace
 from repro.core.block_rmq import BlockRMQ
 from repro.core.hybrid import HybridRMQ
 from repro.core.sparse_table import SparseTable
@@ -1105,8 +1106,13 @@ class OnlineEngine:
                 raise EnginePoisoned(
                     self.name, self._failed_seq, self._failed
                 ) from self._failed
+            tr = obs_trace.get_tracer()
             if isinstance(deltas, DeltaLog):
-                batch = deltas.coalesce(self.n, dtype=self._dtype)
+                with tr.span("coalesce", attrs={"engine": self.name} if tr.enabled else None):
+                    batch = deltas.coalesce(self.n, dtype=self._dtype)
+                    if tr.enabled:
+                        obs_trace.set_attr("n_writes", int(batch.idx.size))
+                        obs_trace.set_attr("n_appended", int(batch.tail.size))
             else:
                 batch = deltas
             self._check_batch(batch)

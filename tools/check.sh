@@ -51,14 +51,23 @@
 #    n = 2^16: packed32 must move <= 60% of unpacked bytes on both the
 #    long-path query and the doubling merge (benchmarks/bandwidth.py
 #    derives the counts from the built structures' real leaf dtypes).
-# 11. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
+# 11. observability gate (§14): the obs test file (tracer semantics, ring
+#    overflow, zero-alloc disabled path, Chrome-trace schema, metrics
+#    reconciliation), then an async serve smoke on 8 fake devices with
+#    --trace — the CLI itself exits 1 unless every served request exports a
+#    complete admission->flush->launch->scatter->resolve span chain — the
+#    exported JSON re-verified offline (chains + launch attrs survive the
+#    Chrome-trace round trip), and the tracing-overhead bar: <= 10% added
+#    request p99 with span tracing enabled vs disabled (same best-of-runs
+#    interleaved protocol as the journaling bar).
+# 12. perf smoke: benchmarks/run.py --only fig12 --smoke (interpret mode on
 #    CPU — Pallas kernels validate through the test suite; the smoke catches
 #    perf-path regressions like import errors, shape breaks, or a suite that
 #    stopped emitting rows).
 #
-# Perf baseline: BENCH_PR9.json (benchmarks/run.py --json; adds the
-# bandwidth suite and stamps the shipped layouts + measured byte ratios
-# into _meta); refresh per PR.
+# Perf baseline: BENCH_PR10.json (benchmarks/run.py --json; adds the
+# obs_overhead suite and stamps the process metrics registry into _meta);
+# refresh per PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -227,6 +236,44 @@ assert r["gate_merge_ratio"] <= 0.60, r["gate_merge_ratio"]
 assert red >= 1.5, red
 PY
 
+echo "== observability gate (trace chains, metrics reconcile, tracing-overhead bar) =="
+python -m pytest -q tests/test_obs.py
+tracef=$(mktemp /tmp/rmq-trace-XXXXXX.json)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 timeout 600 \
+    python -m repro.launch.serve --mode async --engine sharded_hybrid \
+    --n 65536 --block-size 128 --dist medium --clients 4 --requests 12 \
+    --rate 300 --req-batch 16 --max-batch 128 --trace "$tracef"
+python - "$tracef" <<'PY'
+# Offline re-verify of the exported document: the span chains and launch
+# attrs must survive the Chrome-trace JSON round trip (the in-process check
+# already passed or serve.py would have exited 1).
+import json, sys
+from repro.obs import verify_request_chains
+
+doc = json.load(open(sys.argv[1]))
+xs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+complete, problems = verify_request_chains(doc)
+assert complete >= 40 and not problems, (complete, problems[:5])
+launch = next(e for e in xs if e["name"] == "launch")
+for a in ("engine", "layout", "pool", "padded", "queries"):
+    assert a in launch["args"], f"launch span missing {a!r}: {launch['args']}"
+assert launch["args"]["engine"] == "sharded_hybrid"
+print(f"offline re-verify: {complete} complete chains / {len(xs)} spans, "
+      f"launch attrs {sorted(launch['args'])}")
+PY
+rm -f "$tracef"
+python - <<'PY'
+# Acceptance bar: span tracing adds <= 10% to request p99 on the threaded
+# serve workload (same best-of-runs interleaved protocol as the journaling
+# bar; the metrics registry is active in both configs).
+from benchmarks import obs_overhead
+off, on = obs_overhead.p99_gate()
+over = on / off - 1.0
+print(f"serve p99: untraced {off*1e3:.2f} ms, traced {on*1e3:.2f} ms "
+      f"-> {over*100:+.1f}% (bar: +10%)")
+assert over <= 0.10, f"tracing p99 overhead {over*100:+.1f}% above the 10% bar"
+PY
+
 echo "== perf smoke (fig12, smoke sizes) =="
 out=$(timeout 300 python -m benchmarks.run --only fig12 --smoke)
 echo "$out"
@@ -235,4 +282,4 @@ if [ "$rows" -lt 4 ]; then
     echo "FAIL: fig12 smoke emitted only $rows rows (expected >= 4)" >&2
     exit 1
 fi
-echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, chaos gate green, fleet gate green, autotune gate green, packed gate green, fig12 smoke emitted $rows rows"
+echo "OK: tier-1 green, conformance green, distributed-build gate green, serve smokes green, online-update gate green, chaos gate green, fleet gate green, autotune gate green, packed gate green, observability gate green, fig12 smoke emitted $rows rows"
